@@ -1,0 +1,84 @@
+"""Table 1 — communication pipeline L×T trade-off.
+
+Two parts:
+  1. the calibrated analytical model vs the paper's own numbers (the model is
+     fit on 3 of the 8 rows and predicts the rest);
+  2. a measured package-length sweep of the ring sampler on host devices:
+     wall-clock per epoch vs package_len (the within-round pipeline knob) —
+     qualitative check that the optimum is interior, like the paper's curve.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import pipeline
+
+
+def table1_model():
+    rows = []
+    model = pipeline.PipelineModel()
+    for lkb, (ours, paper) in pipeline.validate_against_paper(model).items():
+        rows.append((lkb, round(ours, 1), paper))
+    return rows
+
+
+def measured_package_sweep():
+    """Ring-epoch wall time vs package length (1 host device, tiny corpus)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import distributed as dist
+    from repro.data import corpus as corpus_mod, synthetic
+
+    corpus, _ = synthetic.lda_corpus(seed=0, n_docs=600, n_topics=12,
+                                     vocab_size=400, doc_len_mean=12)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    K = 16
+    sc = corpus_mod.shard_corpus(corpus, 1, 1, K, seed=1, cap_multiple=512)
+    cap = sc.word_local.shape[2]
+    out = []
+    for pkg in [8, 64, 512, cap]:
+        if cap % pkg:
+            continue
+        cfg = dist.RingConfig(n_topics=K, vocab_size=corpus.vocab_size,
+                              rows_per_shard=sc.rows_per_shard,
+                              docs_per_shard=sc.docs_per_shard, cap=cap,
+                              package_len=pkg, n_rounds=1)
+        epoch = dist.make_ring_epoch(mesh, cfg)
+        args = dist.device_arrays(sc, K)
+        alpha = jnp.full((K,), 3.0, jnp.float32)
+        state = epoch(*args, alpha, jnp.float32(0.01), jnp.uint32(1))  # compile
+        jax.block_until_ready(state)
+        args = dist.device_arrays(sc, K)
+        t0 = time.perf_counter()
+        for i in range(3):
+            args = epoch(*args[:6], alpha, jnp.float32(0.01), jnp.uint32(i))
+        jax.block_until_ready(args)
+        out.append((pkg, (time.perf_counter() - t0) / 3))
+    return out
+
+
+def run():
+    lines = []
+    t0 = time.perf_counter()
+    rows = table1_model()
+    err = max(abs(a - b) for _, a, b in rows)
+    lines.append(("pipeline.table1_model_maxerr_min",
+                  (time.perf_counter() - t0) * 1e6, err))
+    for lkb, ours, paper in rows:
+        lines.append((f"pipeline.table1.L{lkb}KB_model_vs_paper_min", 0.0,
+                      f"{ours}|{paper}"))
+    t0 = time.perf_counter()
+    sweep = measured_package_sweep()
+    dt = (time.perf_counter() - t0) * 1e6
+    for pkg, sec in sweep:
+        lines.append((f"pipeline.ring_epoch.pkg{pkg}", sec * 1e6, "wall"))
+    lines.append(("pipeline.optimal_L_kb", dt, pipeline.optimal_package()))
+    return lines
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,106 @@
+"""Fig. 5 — RT-LDA vs SparseLDA(fold-in Gibbs): speed (QPS) and accuracy.
+
+Paper claim: RT-LDA ≈ 10× faster at nearly-equal predictive perplexity. Here:
+  * speed — wall-clock QPS of (a) the Eq.-4 sparse candidate path, (b) the
+    dense argmax path, (c) Gibbs fold-in at equal iteration counts;
+  * accuracy — held-out perplexity of each.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gibbs, lda, rtlda
+from repro.data import corpus as corpus_mod, synthetic
+
+
+def _train(K=24, V=600, n_docs=1500, iters=30):
+    corpus, truth = synthetic.lda_corpus(seed=0, n_docs=n_docs, n_topics=16,
+                                         vocab_size=V, doc_len_mean=9)
+    wi, di = corpus_mod.pad_corpus(corpus.word_ids, corpus.doc_ids, 512)
+    valid = wi >= 0
+    state = lda.init_state(jax.random.key(0), jnp.array(wi[valid]), K, V)
+    z = np.zeros(len(wi), np.int32)
+    z[valid] = np.array(state.z)
+    state = lda.LDAState(state.phi, state.psi, jnp.array(z), state.alpha, state.beta)
+    for it in range(iters):
+        state = gibbs.gibbs_epoch(state, jnp.array(wi), jnp.array(di),
+                                  corpus.n_docs, V, seed=it * 7 + 1,
+                                  block_size=512)
+    return corpus, state
+
+
+def run():
+    lines = []
+    corpus, state = _train()
+    V, K = state.vocab_size, state.n_topics
+    model = rtlda.build_model(state.phi, state.beta, state.alpha)
+
+    n_q, Ld = 256, 8
+    test_c, _ = synthetic.lda_corpus(seed=9, n_docs=n_q, n_topics=16,
+                                     vocab_size=V, query_like=True)
+    qs = np.full((n_q, Ld), -1, np.int32)
+    for d in range(n_q):
+        toks = test_c.word_ids[test_c.doc_ids == d][:Ld]
+        qs[d, :len(toks)] = toks
+    qs = jnp.array(qs)
+
+    pvk = np.asarray(lda.phi_hat(state.phi, state.beta))
+
+    def ppx(pkd):
+        p = np.einsum("tk,tk->t", pvk[test_c.word_ids],
+                      np.asarray(pkd)[test_c.doc_ids])
+        return float(np.exp(-np.log(np.maximum(p, 1e-30)).mean()))
+
+    # --- RT-LDA sparse (Eq. 4) ---
+    f_sparse = jax.jit(lambda q: rtlda.rtlda_infer_batch(model, q, 3, 5, 1))
+    pkd = f_sparse(qs); jax.block_until_ready(pkd)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        pkd = f_sparse(qs)
+    jax.block_until_ready(pkd)
+    t_sparse = (time.perf_counter() - t0) / 5
+    lines.append(("rtlda.sparse_qps", t_sparse / n_q * 1e6, round(n_q / t_sparse)))
+    lines.append(("rtlda.sparse_perplexity", 0.0, round(ppx(pkd), 2)))
+
+    # --- RT-LDA dense (O(K) max) ---
+    f_dense = jax.jit(lambda q: rtlda.rtlda_infer_dense(model, q, 5))
+    pkd_d = f_dense(qs); jax.block_until_ready(pkd_d)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        pkd_d = f_dense(qs)
+    jax.block_until_ready(pkd_d)
+    t_dense = (time.perf_counter() - t0) / 5
+    lines.append(("rtlda.dense_qps", t_dense / n_q * 1e6, round(n_q / t_dense)))
+    lines.append(("rtlda.dense_perplexity", 0.0, round(ppx(pkd_d), 2)))
+
+    # --- SparseLDA-style Gibbs fold-in ---
+    z0 = jnp.zeros((test_c.n_tokens,), jnp.int32)
+    f_gibbs = jax.jit(lambda z: gibbs.fold_in(
+        state.phi, state.psi, state.alpha, state.beta,
+        jnp.array(test_c.word_ids), jnp.array(test_c.doc_ids), z,
+        test_c.n_docs, V, 5, 5))
+    z, theta = f_gibbs(z0); jax.block_until_ready(theta)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        z, theta = f_gibbs(z0)
+    jax.block_until_ready(theta)
+    t_gibbs = (time.perf_counter() - t0) / 5
+    pkd_g = lda.theta_hat(theta, state.alpha)
+    lines.append(("rtlda.gibbs_foldin_qps", t_gibbs / n_q * 1e6,
+                  round(n_q / t_gibbs)))
+    lines.append(("rtlda.gibbs_perplexity", 0.0, round(ppx(pkd_g), 2)))
+
+    lines.append(("rtlda.speedup_sparse_over_gibbs", 0.0,
+                  round(t_gibbs / t_sparse, 2)))
+    lines.append(("rtlda.speedup_sparse_over_dense", 0.0,
+                  round(t_dense / t_sparse, 2)))
+    return lines
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,101 @@
+"""Roofline table builder — reads dry-run JSONL records (launch/dryrun.py).
+
+Terms (per cell, global work over aggregate machine rate — TPU v5e constants):
+    compute_s    = FLOPs / (chips · 197e12)
+    memory_s     = bytes / (chips · 819e9)
+    collective_s = collective_bytes / (chips · 50e9)
+
+FLOPs/bytes come from the scan-aware jaxpr walker (dist/analysis.py) because
+XLA's cost_analysis counts scan bodies once; collective bytes are
+max(analytic model, HLO-parsed) — the HLO parse misses in-scan collectives.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results")
+
+
+def load_records(path: str) -> List[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    # keep the LAST record per (arch, shape, mesh)
+    dedup: Dict[tuple, dict] = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def fmt_seconds(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-6:
+        return f"{x*1e9:.1f}ns"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def table(records: List[dict], mesh: str = "16x16") -> str:
+    rows = []
+    hdr = (f"{'arch':<24} {'shape':<14} {'comp':>9} {'mem':>9} {'coll':>9} "
+           f"{'bottleneck':<12} {'MF/HLO':>7} {'live GB':>8} {'fit':>4}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    order = {"lm": 0, "gnn": 1, "recsys": 2, "lda": 3}
+    recs = [r for r in records if r["mesh"] == mesh]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in recs:
+        if r["status"] == "skip":
+            rows.append(f"{r['arch']:<24} {r['shape']:<14} "
+                        f"{'skip(full-attn)':<30} {r.get('reason','')[:40]}")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']:<24} {r['shape']:<14} FAIL {r['error'][:60]}")
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"{r['arch']:<24} {r['shape']:<14} "
+            f"{fmt_seconds(t['compute_s']):>9} {fmt_seconds(t['memory_s']):>9} "
+            f"{fmt_seconds(t['collective_s']):>9} {r['bottleneck'][:-2]:<12} "
+            f"{(f'{ratio:.2f}' if ratio else '-'):>7} "
+            f"{r['live_bytes_per_device']/1e9:>8.2f} "
+            f"{'y' if r['fits_16gb_hbm'] else 'N':>4}")
+    return "\n".join(rows)
+
+
+def roofline_fraction(r: dict) -> float:
+    """Achievable-peak fraction: useful FLOPs / (bound-time × peak)."""
+    t = r["roofline"]
+    bound = max(t.values())
+    if bound <= 0:
+        return 0.0
+    return r["model_flops"] / (bound * r["chips"] * PEAK_FLOPS)
+
+
+def main():
+    path = os.path.join(RESULTS, "dryrun_all.jsonl")
+    if not os.path.exists(path):
+        path = os.path.join(RESULTS, "dryrun_single.jsonl")
+    recs = load_records(path)
+    print(table(recs, "16x16"))
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "16x16"]
+    print(f"\nroofline fractions (useful flops / bound):")
+    for r in sorted(ok, key=roofline_fraction):
+        print(f"  {r['arch']:<24} {r['shape']:<14} {roofline_fraction(r):8.4f}")
+
+
+if __name__ == "__main__":
+    main()

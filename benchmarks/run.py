@@ -1,0 +1,38 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Roofline/dry-run tables are separate
+(launch/dryrun.py produces them; benchmarks/roofline.py formats them) because
+they need the 512-device host platform, which the benches must NOT inherit.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_pipeline, bench_quality, bench_rtlda, bench_scaling
+
+    modules = [
+        ("pipeline(Table1)", bench_pipeline),
+        ("rtlda(Fig5)", bench_rtlda),
+        ("scaling(Fig6)", bench_scaling),
+        ("quality(Fig1/7/8)", bench_quality),
+    ]
+    failures = 0
+    for label, mod in modules:
+        t0 = time.perf_counter()
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+            print(f"# {label} done in {time.perf_counter()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {label} FAILED:\n{traceback.format_exc()}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

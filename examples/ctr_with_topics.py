@@ -1,0 +1,70 @@
+"""pCTR example (paper §5.2, Fig. 8): L1 log-linear CTR model ± topic features.
+
+    PYTHONPATH=src python examples/ctr_with_topics.py
+
+Synthetic ad click log whose true CTR depends on (query topic × ad affinity).
+The baseline model sees only sparse ad features; the Peacock variant appends
+P(k|d) inferred by the trained LDA model. AUC lift mirrors Fig. 8.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import gibbs, lda
+from repro.data import corpus as corpus_mod, synthetic
+from repro.optim import l1_loglinear
+
+
+def main():
+    corpus, truth = synthetic.lda_corpus(seed=0, n_docs=1200, n_topics=16,
+                                         vocab_size=400, doc_len_mean=8)
+    log = synthetic.click_log(7, corpus, truth, n_impressions=8000)
+    sparse = log["ad_feat"][log["ad_idx"]]
+    labels = log["label"].astype(np.float32)
+    n = len(labels)
+    tr, te = slice(0, n * 4 // 5), slice(n * 4 // 5, n)
+    print(f"impressions: {n}, positive rate {labels.mean():.3f}")
+
+    def train_ctr(dense, tag):
+        st = l1_loglinear.init_state(log["n_ad_features"], dense.shape[1])
+        for i in range(200):
+            st, loss = l1_loglinear.train_step(
+                st, jnp.array(sparse[tr]), jnp.array(dense[tr]),
+                jnp.array(labels[tr]), 0.3, 1e-4)
+        scores = l1_loglinear.predict(st, jnp.array(sparse[te]),
+                                      jnp.array(dense[te]))
+        auc = l1_loglinear.auc(np.asarray(scores), labels[te])
+        nz = float((np.abs(np.asarray(st.w_sparse)) > 1e-8).mean())
+        print(f"  {tag:<28} AUC {auc:.4f}  (nonzero sparse weights {nz:.0%})")
+        return auc
+
+    print("baseline (ad features only):")
+    base = train_ctr(np.zeros((n, 1), np.float32), "baseline")
+
+    for K in (4, 16, 32):
+        wi, di = corpus_mod.pad_corpus(corpus.word_ids, corpus.doc_ids, 512)
+        valid = wi >= 0
+        state = lda.init_state(jax.random.key(0), jnp.array(wi[valid]), K,
+                               corpus.vocab_size)
+        z = np.zeros(len(wi), np.int32)
+        z[valid] = np.asarray(state.z)
+        state = lda.LDAState(state.phi, state.psi, jnp.array(z), state.alpha,
+                             state.beta)
+        for it in range(25):
+            state = gibbs.gibbs_epoch(state, jnp.array(wi), jnp.array(di),
+                                      corpus.n_docs, corpus.vocab_size,
+                                      seed=it * 17 + 3, block_size=512)
+        z0 = jnp.zeros((corpus.n_tokens,), jnp.int32)
+        _, theta = gibbs.fold_in(state.phi, state.psi, state.alpha, state.beta,
+                                 jnp.array(corpus.word_ids),
+                                 jnp.array(corpus.doc_ids), z0, corpus.n_docs,
+                                 corpus.vocab_size, seed=5, n_sweeps=8)
+        pkd = np.asarray(lda.theta_hat(theta, state.alpha))
+        dense = pkd[log["doc_idx"]].astype(np.float32)
+        auc = train_ctr(dense, f"+ topic features (K={K})")
+        print(f"    → relative AUC lift vs baseline: "
+              f"{100*(auc-base)/base:+.2f}% (paper Fig. 8 mechanism)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""LM example: train a small llama-family model with the framework substrate.
+
+    PYTHONPATH=src python examples/lm_train.py
+
+Uses the same transformer/optimizer/checkpoint stack the assigned LM
+architectures run on, at toy scale: WSD schedule (MiniCPM's), AdamW,
+checkpoint+resume, and greedy decoding from the trained model via the
+chunked-prefill + decode serving path.
+"""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.lm_archs import small_lm
+from repro.models import transformer as tf
+from repro.optim import schedules
+from repro.optim.adamw import AdamW
+
+
+def make_data(cfg, n=256, S=64, seed=0):
+    """Synthetic 'language': arithmetic-progression sequences (learnable)."""
+    rng = np.random.default_rng(seed)
+    start = rng.integers(0, cfg.vocab_size, n)
+    step = rng.integers(1, 7, n)
+    toks = (start[:, None] + step[:, None] * np.arange(S)) % cfg.vocab_size
+    return jnp.array(toks, jnp.int32)
+
+
+def main():
+    cfg = small_lm()
+    params = tf.init_params(cfg, jax.random.key(0))
+    n_params = cfg.n_params
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} → {n_params:,} params")
+
+    opt = AdamW(lr=functools.partial(schedules.wsd, peak_lr=3e-3,
+                                     warmup_steps=20, stable_steps=150,
+                                     decay_steps=50))
+    ost = opt.init(params)
+    data = make_data(cfg)
+    mgr = CheckpointManager("/tmp/lm_ckpt", keep=2)
+
+    @jax.jit
+    def step(params, ost, batch):
+        toks, labels = batch[:, :-1], batch[:, 1:]
+        loss, grads = jax.value_and_grad(
+            lambda p: tf.lm_loss(cfg, p, toks, labels))(params)
+        params, ost = opt.update(grads, ost, params)
+        return params, ost, loss
+
+    for it in range(200):
+        batch = data[(it * 16) % 240:(it * 16) % 240 + 16]
+        params, ost, loss = step(params, ost, batch)
+        if (it + 1) % 40 == 0:
+            print(f"step {it+1:4d}  loss {float(loss):.4f}  "
+                  f"lr {float(schedules.wsd(it+1, 3e-3, 20, 150, 50)):.2e}")
+            mgr.save(it + 1, {"params": params})
+
+    # greedy decode with the serving path: the model should continue the
+    # arithmetic progression (a training sequence — memorization at toy scale)
+    prompt = data[100:101, :16]
+    cache = tf.init_kv_cache(cfg, 1, 64, dtype=jnp.float32)
+    nxt, logits, cache = tf.serve_step(cfg, params, prompt, cache, jnp.int32(0))
+    decoded = [int(nxt[0, 0])]
+    pos = 16
+    for _ in range(8):
+        nxt, _, cache = tf.serve_step(cfg, params, nxt, cache, jnp.int32(pos))
+        decoded.append(int(nxt[0, 0]))
+        pos += 1
+    truth = [int(x) for x in data[100, 16:16 + 9]]
+    hits = sum(a == b for a, b in zip(decoded, truth))
+    print(f"prompt continuation: {decoded}")
+    print(f"ground truth:        {truth}   ({hits}/9 correct)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Checkpoint manager: rotation, per-pod (per-configuration) checkpoints,
+restore-latest, and the Peacock fault-recovery protocol (§3.1.4).
+
+Layout:
+    <root>/step_<n>/            — global (merged) checkpoints
+    <root>/pod_<p>/step_<n>/    — per-configuration checkpoints
+
+Fault recovery contract (mirrors the paper): configurations checkpoint
+independently every aggregation boundary; on failure, the failed configuration
+alone restores its latest complete checkpoint and replays its inner epochs
+(deterministic counter-based RNG ⇒ the replay reproduces the lost samples
+bit-for-bit), then rejoins at the next aggregation. ``restart_pod`` implements
+the restore; the replay is the normal epoch loop.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, List, Optional, Tuple
+
+from repro.checkpoint import io
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_save: bool = False):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # ------------------------------------------------------------- paths ----
+    def _step_dir(self, step: int, pod: Optional[int] = None) -> str:
+        base = self.root if pod is None else os.path.join(self.root, f"pod_{pod}")
+        return os.path.join(base, f"step_{step:08d}")
+
+    def steps(self, pod: Optional[int] = None) -> List[int]:
+        base = self.root if pod is None else os.path.join(self.root, f"pod_{pod}")
+        if not os.path.isdir(base):
+            return []
+        out = []
+        for name in os.listdir(base):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and io.is_complete(os.path.join(base, name)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    # -------------------------------------------------------------- save ----
+    def save(self, step: int, tree, meta: dict | None = None,
+             pod: Optional[int] = None) -> None:
+        meta = dict(meta or {})
+        meta["step"] = step
+        path = self._step_dir(step, pod)
+
+        def _do():
+            io.save(path, tree, meta)
+            self._rotate(pod)
+
+        if self.async_save:
+            self.wait()
+            # snapshot to host before handing to the writer thread
+            import jax
+            import numpy as np
+
+            host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+            def _async():
+                io.save(path, host_tree, meta)
+                self._rotate(pod)
+
+            self._thread = threading.Thread(target=_async, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _rotate(self, pod: Optional[int]) -> None:
+        steps = self.steps(pod)
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._step_dir(s, pod), ignore_errors=True)
+
+    # ------------------------------------------------------------ restore ---
+    def restore_latest(self, like, pod: Optional[int] = None) -> Tuple[Any, dict] | None:
+        steps = self.steps(pod)
+        if not steps:
+            return None
+        return io.load(self._step_dir(steps[-1], pod), like)
+
+    def restart_pod(self, pod: int, like) -> Tuple[Any, dict] | None:
+        """Peacock §3.1.4: restore ONE failed configuration from its own latest
+        checkpoint; other configurations are untouched."""
+        return self.restore_latest(like, pod=pod)

@@ -1,0 +1,24 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch scripts."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchSpec
+
+
+def all_specs() -> Dict[str, ArchSpec]:
+    from repro.configs import gnn_archs, lm_archs, peacock_lda, recsys_archs
+
+    out: Dict[str, ArchSpec] = {}
+    out.update(lm_archs.specs())
+    out["graphsage-reddit"] = gnn_archs.spec()
+    out.update(recsys_archs.specs())
+    out["peacock-lda"] = peacock_lda.spec()
+    return out
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    specs = all_specs()
+    if arch_id not in specs:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(specs)}")
+    return specs[arch_id]

@@ -1,0 +1,453 @@
+"""Cell builders: (architecture × input shape × mesh) → a lowerable step.
+
+A ``Cell`` is everything the dry-run and roofline need: the step function, its
+ShapeDtypeStruct argument stand-ins (NO device allocation), in/out shardings,
+and the analytic MODEL_FLOPS for the useful-compute ratio.
+
+Step functions lowered per shape kind:
+  train_*      → full train_step: fwd + bwd + optimizer update (microbatched
+                 gradient accumulation; f32 master params, bf16 compute)
+  prefill_*    → forward + KV-cache construction, last-position logits
+  decode_* /
+  long_*       → one-token ``serve_step`` against a seq_len KV cache
+  serve_*      → recsys batch forward; retrieval_cand → streamed top-k scoring
+  (LDA)        → ring Gibbs epoch / RT-LDA serving batch
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tf_mod
+from repro.optim.adamw import AdamW
+from repro.optim import schedules
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_kind: str                 # train | prefill | decode | serve | retrieval | lda_train | lda_serve
+    fn: Callable
+    args: Tuple[Any, ...]          # SDS pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    model_flops: float             # analytic useful FLOPs per step
+    model_coll_bytes: float = 0.0  # analytic GLOBAL collective traffic per step
+                                   # (HLO parse misses in-scan collectives; see
+                                   # dist/analysis.collective_bytes caveat)
+    donate: Tuple[int, ...] = ()
+    note: str = ""
+
+    def lower(self):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate,
+        )
+        return jitted.lower(*self.args)
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    arch_id: str
+    family: str                    # lm | gnn | recsys | lda
+    shapes: Dict[str, Dict[str, Any]]
+    build: Callable[[str, Any, bool], Optional[Cell]]   # (shape, mesh, multi_pod)
+    skip: Dict[str, str] = dataclasses.field(default_factory=dict)  # shape → reason
+
+    def cell(self, shape: str, mesh, multi_pod: bool = False) -> Optional[Cell]:
+        if shape in self.skip:
+            return None
+        return self.build(shape, mesh, multi_pod)
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+LM_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def _lm_param_sds(cfg, dtype):
+    shapes = tf_mod.param_shapes(cfg)
+    return jax.tree.map(lambda s: sds(s, dtype), shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _dp_size(mesh, multi_pod):
+    n = int(mesh.shape["data"])
+    if multi_pod:
+        n *= int(mesh.shape["pod"])
+    return n
+
+
+def _lm_attn_flops(cfg, seq: int, tokens: int, bwd: bool) -> float:
+    """QK^T + PV over an average causal window of S/2: 4·L·H·dh·(S/2) per token."""
+    per_tok = 4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * (seq / 2.0)
+    return per_tok * tokens * (3.0 if bwd else 1.0)
+
+
+def lm_train_flops(cfg, batch: int, seq: int) -> float:
+    """6·N_active·T + causal attention term (fwd+bwd = 3× fwd)."""
+    tokens = batch * seq
+    return 6.0 * cfg.n_active_params * tokens + _lm_attn_flops(cfg, seq, tokens, True)
+
+
+def build_lm_cell(cfg, shape_name: str, mesh, multi_pod: bool,
+                  micro_per_device: int = 2) -> Optional[Cell]:
+    info = LM_SHAPES[shape_name]
+    S, B = info["seq_len"], info["global_batch"]
+    kind = info["kind"]
+    mesh_obj = mesh
+    param_specs = shd.lm_param_specs(cfg)
+    nmd = lambda t: shd.tree_named(mesh_obj, t)
+    # activation anchors read the ambient mesh at trace (= lower) time
+    shd.set_ambient_mesh(mesh_obj, multi_pod)
+
+    if kind == "train":
+        dp = _dp_size(mesh, multi_pod)
+        n_micro = max(1, B // (dp * micro_per_device))
+        assert B % n_micro == 0
+        opt = AdamW(lr=functools.partial(
+            schedules.wsd, peak_lr=1e-3, warmup_steps=2000,
+            stable_steps=100_000, decay_steps=10_000))
+
+        def train_step(params, opt_state, tokens, labels):
+            mb_tok = tokens.reshape(n_micro, B // n_micro, S)
+            mb_lab = labels.reshape(n_micro, B // n_micro, S)
+
+            def micro(grads, xs):
+                t, l = xs
+                loss, g = jax.value_and_grad(
+                    lambda p: tf_mod.lm_loss(
+                        cfg, jax.tree.map(lambda x: x.astype(cfg.dtype), p), t, l)
+                )(params)
+                return jax.tree.map(jnp.add, grads, g), loss
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, zeros, (mb_tok, mb_lab))
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, losses.mean()
+
+        params_sds = _lm_param_sds(cfg, jnp.float32)
+        opt_sds = {
+            "step": sds((), jnp.int32),
+            "m": _lm_param_sds(cfg, jnp.float32),
+            "v": _lm_param_sds(cfg, jnp.float32),
+        }
+        batch_spec = shd.lm_batch_spec(multi_pod)
+        in_sh = (
+            nmd(param_specs),
+            {"step": NamedSharding(mesh_obj, P()),
+             "m": nmd(param_specs), "v": nmd(param_specs)},
+            NamedSharding(mesh_obj, batch_spec),
+            NamedSharding(mesh_obj, batch_spec),
+        )
+        out_sh = (in_sh[0], in_sh[1], NamedSharding(mesh_obj, P()))
+        args = (params_sds, opt_sds, sds((B, S), jnp.int32), sds((B, S), jnp.int32))
+        return Cell(
+            arch=cfg.name, shape=shape_name, step_kind="train",
+            fn=train_step, args=args, in_shardings=in_sh, out_shardings=out_sh,
+            model_flops=lm_train_flops(cfg, B, S), donate=(0, 1),
+            # FSDP weight all-gathers (bf16, fwd+bwd per microbatch) + f32 grad
+            # all-reduce + Megatron-TP activation all-reduces (2/layer, ~3x)
+            model_coll_bytes=(2.0 * cfg.n_params * 2 * n_micro
+                              + 4.0 * cfg.n_params
+                              + 2 * 3 * cfg.n_layers * B * S * cfg.d_model * 2.0),
+            note=f"n_micro={n_micro}",
+        )
+
+    if kind in ("prefill", "decode"):
+        # Unified serving step over a sequence-sharded KV cache: C=4096 chunks
+        # for prefill (Sarathi-style — S/C steps complete the prompt), C=1 for
+        # decode. Chunking is what keeps the cache resident+sharded instead of
+        # materializing an unsharded [L,B,S,KV,dh] stack (34 GB/device, see
+        # EXPERIMENTS.md §Dry-run notes).
+        C = min(4096, S) if kind == "prefill" else 1
+
+        def serve_step(params, tokens, cache, cache_len):
+            return tf_mod.serve_step(cfg, params, tokens, cache, cache_len)
+
+        params_sds = _lm_param_sds(cfg, cfg.dtype)
+        cache_shape = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.d_head)
+        cache_sds = {"k": sds(cache_shape, cfg.dtype), "v": sds(cache_shape, cfg.dtype)}
+        cache_sh = {"k": NamedSharding(mesh_obj, shd.lm_cache_spec(multi_pod)),
+                    "v": NamedSharding(mesh_obj, shd.lm_cache_spec(multi_pod))}
+        in_sh = (
+            nmd(param_specs),
+            NamedSharding(mesh_obj, shd.lm_batch_spec(multi_pod)),
+            cache_sh,
+            NamedSharding(mesh_obj, P()),
+        )
+        out_sh = (
+            NamedSharding(mesh_obj, shd.lm_batch_spec(multi_pod)),
+            NamedSharding(mesh_obj, P(shd.dp_axes(multi_pod), "model")),
+            cache_sh,
+        )
+        # per step: 2·N_active per token + QK/PV against the cached sequence
+        flops = B * C * (2.0 * cfg.n_active_params
+                         + 4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head
+                         * (S / 2.0 if kind == "prefill" else S))
+        return Cell(
+            arch=cfg.name, shape=shape_name, step_kind=kind,
+            fn=serve_step,
+            args=(params_sds, sds((B, C), jnp.int32), cache_sds, sds((), jnp.int32)),
+            in_shardings=in_sh, out_shardings=out_sh, model_flops=flops,
+            # param all-gather over "data" (FSDP at serve) + per-layer TP
+            # activation all-reduce + LSE combine over the seq-sharded cache
+            model_coll_bytes=(2.0 * cfg.n_params
+                              + 2 * cfg.n_layers * B * C * cfg.d_model * 2.0
+                              + cfg.n_layers * B * cfg.n_heads * C
+                              * (cfg.d_head + 2) * 4.0),
+            donate=(2,),
+            note=f"C={C}" + (f" ({S//C} chunk steps/prompt)" if kind == "prefill" else ""),
+        )
+
+    raise ValueError(shape_name)
+
+
+def make_lm_arch(cfg, skip_long: bool = True) -> ArchSpec:
+    skip = {}
+    if skip_long:
+        skip["long_500k"] = "pure full-attention arch — sub-quadratic required (DESIGN.md §4)"
+    # MoE dispatch buffers scale with the global microbatch → smaller micros
+    mpd = 1 if cfg.moe is not None else 2
+    return ArchSpec(
+        arch_id=cfg.name, family="lm", shapes=LM_SHAPES,
+        build=lambda shape, mesh, mp: build_lm_cell(cfg, shape, mesh, mp,
+                                                    micro_per_device=mpd),
+        skip=skip,
+    )
+
+
+# ===========================================================================
+# GNN family
+# ===========================================================================
+
+def build_gnn_cell(cfg, shape_name: str, shape: Dict[str, Any], mesh,
+                   multi_pod: bool) -> Cell:
+    nmd = lambda spec: NamedSharding(mesh, spec)
+    pspecs = shd.gnn_param_specs(gnn_mod.param_shapes(cfg))
+    params_sds = jax.tree.map(lambda s: sds(s, jnp.float32),
+                              gnn_mod.param_shapes(cfg),
+                              is_leaf=lambda x: isinstance(x, tuple))
+    params_sh = shd.tree_named(mesh, pspecs)
+    opt = AdamW(lr=1e-3, weight_decay=0.0)
+    opt_sds = {"step": sds((), jnp.int32), "m": params_sds, "v": params_sds}
+    opt_sh = {"step": nmd(P()), "m": params_sh, "v": params_sh}
+    rows = shd.gnn_rows_spec(multi_pod)
+
+    d_in, d_h = cfg.d_in, cfg.d_hidden
+    mlp_flops = 0.0
+
+    if shape_name in ("full_graph_sm", "ogb_products", "molecule"):
+        n_graphs = shape.get("batch", 1)
+        # pad nodes/edges to divide both meshes (padding nodes are isolated and
+        # masked; padding edges point src/dst at a padded node)
+        N = shd.round_up(shape["n_nodes"] * n_graphs, 512)
+        E = shd.round_up(shape["n_edges"] * n_graphs, 512)
+        graph_pool = shape_name == "molecule"
+
+        if graph_pool:
+            # disjoint-union batching: graph_ids map nodes → graph for readout
+            def train_step(params, opt_state, feats, src, dst, graph_ids, labels):
+                def loss_fn(p):
+                    return gnn_mod.loss_graph_pool(
+                        cfg, p, feats, src, dst, graph_ids, n_graphs, labels)
+
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                params, opt_state = opt.update(grads, opt_state, params)
+                return params, opt_state, loss
+
+            args = (
+                params_sds, opt_sds,
+                sds((N, cfg.d_in), jnp.float32),
+                sds((E,), jnp.int32), sds((E,), jnp.int32),
+                sds((N,), jnp.int32), sds((n_graphs,), jnp.int32),
+            )
+            graph_spec = shd.divisible_rows_spec(n_graphs, mesh, multi_pod)
+            in_sh = (params_sh, opt_sh, nmd(P(rows[0], None)), nmd(rows),
+                     nmd(rows), nmd(rows), nmd(graph_spec))
+        else:
+            def train_step(params, opt_state, feats, src, dst, labels, mask):
+                def loss_fn(p):
+                    return gnn_mod.loss_full(cfg, p, feats, src, dst, labels, mask)
+
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                params, opt_state = opt.update(grads, opt_state, params)
+                return params, opt_state, loss
+
+            args = (
+                params_sds, opt_sds,
+                sds((N, cfg.d_in), jnp.float32),
+                sds((E,), jnp.int32), sds((E,), jnp.int32),
+                sds((N,), jnp.int32), sds((N,), jnp.float32),
+            )
+            in_sh = (params_sh, opt_sh, nmd(P(rows[0], None)), nmd(rows),
+                     nmd(rows), nmd(rows), nmd(rows))
+        out_sh = (params_sh, opt_sh, nmd(P()))
+        flops = 3 * (2 * N * (d_in * d_h * 2) + 2 * N * d_h * d_h * 2 * (cfg.n_layers - 1)
+                     + 2 * N * d_h * cfg.n_classes)
+        return Cell(cfg.name, shape_name, "train", train_step, args, in_sh, out_sh,
+                    model_flops=float(flops), donate=(0, 1),
+                    # cross-shard message halo: ~every edge crosses shards at
+                    # random placement (fwd + bwd gather/scatter)
+                    model_coll_bytes=3.0 * E * (d_in + d_h) * 4.0)
+
+    if shape_name == "minibatch_lg":
+        Bn = shape["batch_nodes"]
+        fan = cfg.fanouts
+        sizes = [Bn]
+        for f in fan:
+            sizes.append(sizes[-1] * f)
+
+        def train_step(params, opt_state, feats, neigh, labels):
+            def loss_fn(p):
+                return gnn_mod.loss_sampled(cfg, p, feats, neigh, labels)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        feats_sds = [sds((n, cfg.d_in), jnp.float32) for n in sizes]
+        neigh_sds = [sds((sizes[i], fan[i]), jnp.int32) for i in range(len(fan))]
+        args = (params_sds, opt_sds, feats_sds, neigh_sds, sds((Bn,), jnp.int32))
+        in_sh = (params_sh, opt_sh,
+                 [nmd(P(rows[0], None))] * len(feats_sds),
+                 [nmd(P(rows[0], None))] * len(neigh_sds),
+                 nmd(rows))
+        out_sh = (params_sh, opt_sh, nmd(P()))
+        # layer 0 (d_in→d_h, self+neigh mats) over levels 0..L-1; deeper layers
+        # (d_h→d_h) over shrinking level sets; classifier over the seeds
+        tot = sum(sizes)
+        flops = 3.0 * (
+            2 * sum(sizes[:-1]) * cfg.d_in * d_h * 2
+            + sum(2 * sum(sizes[: cfg.n_layers - l]) * d_h * d_h * 2
+                  for l in range(1, cfg.n_layers))
+            + 2 * sizes[0] * d_h * cfg.n_classes)
+        return Cell(cfg.name, shape_name, "train", train_step, args, in_sh, out_sh,
+                    model_flops=float(flops), donate=(0, 1),
+                    model_coll_bytes=3.0 * tot * cfg.d_in * 4.0,
+                    note="padded bipartite blocks (real sampler feeds these)")
+
+    raise ValueError(shape_name)
+
+
+# ===========================================================================
+# RecSys family
+# ===========================================================================
+
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+def _split_table_params(params):
+    tables = {k: v for k, v in params.items() if k.endswith("table") or k == "linear_w"}
+    dense = {k: v for k, v in params.items() if k not in tables}
+    return tables, dense
+
+
+def build_recsys_cell(cfg, forward_fn, input_maker, flops_fn,
+                      shape_name: str, mesh, multi_pod: bool) -> Cell:
+    """Generic builder; ``input_maker(batch)`` → (args_sds, args_specs) for the
+    model inputs after params."""
+    info = RECSYS_SHAPES[shape_name]
+    B = info["batch"]
+    nmd = lambda spec: NamedSharding(mesh, spec)
+    shd.set_ambient_mesh(mesh, multi_pod)
+    shapes = cfg.param_shapes()
+    pspecs = shd.recsys_param_specs(shapes)
+    # §Perf: tables live in bf16 (halves lookup-plane collectives + table HBM;
+    # production embedding tables are routinely fp16/bf16 — MLPerf-legal);
+    # dense MLPs stay f32
+    params_sds = {k: sds(s, jnp.bfloat16 if k.endswith("table") else jnp.float32)
+                  for k, s in shapes.items()}
+    params_sh = shd.tree_named(mesh, pspecs)
+    bspec = shd.recsys_batch_spec(multi_pod)
+
+    if info["kind"] == "retrieval":
+        N = info["n_candidates"]
+        D = cfg.embedding.dim if hasattr(cfg, "embedding") else cfg.embed_dim
+
+        def retrieval(query, cand):
+            return rec_mod.retrieval_scores(query, cand, top_k=100)
+
+        args = (sds((B, D), jnp.float32), sds((N, D), jnp.float32))
+        in_sh = (nmd(P(None, None)), nmd(P("model", None)))
+        out_sh = (nmd(P()), nmd(P()))
+        return Cell(cfg.name, shape_name, "retrieval", retrieval, args, in_sh,
+                    out_sh, model_flops=2.0 * B * N * D)
+
+    inputs_sds, inputs_sh = input_maker(B, mesh, bspec)
+    table_bytes = 4.0 * sum(
+        float(np.prod(s)) for k, s in shapes.items()
+        if k.endswith("table") or k == "linear_w")
+    emb_dim = cfg.embedding.dim if hasattr(cfg, "embedding") else cfg.embed_dim
+    n_fields = cfg.embedding.n_fields if hasattr(cfg, "embedding") else 2
+    lookup_bytes = 4.0 * B * n_fields * emb_dim   # psum of gathered rows
+
+    if info["kind"] == "serve":
+        def serve(params, *inputs):
+            return forward_fn(cfg, params, *inputs)
+
+        serve_params_sds = params_sds
+        args = (serve_params_sds, *inputs_sds)
+        in_sh = (params_sh, *inputs_sh)
+        return Cell(cfg.name, shape_name, "serve", serve, args, in_sh,
+                    nmd(P(bspec[0])), model_flops=flops_fn(B, False),
+                    model_coll_bytes=lookup_bytes)
+
+    # train: SGD for tables (MLPerf reference practice — no optimizer state for
+    # the 10⁸-row tables), AdamW for dense params
+    opt = AdamW(lr=1e-3, weight_decay=0.0)
+    _, dense_shapes = _split_table_params(shapes)
+    dense_sds = {k: params_sds[k] for k in dense_shapes}
+    dense_sh = {k: params_sh[k] for k in dense_shapes}
+    opt_sds = {"step": sds((), jnp.int32), "m": dense_sds, "v": dense_sds}
+    opt_sh = {"step": nmd(P()), "m": dense_sh, "v": dense_sh}
+
+    def train_step(params, opt_state, labels, *inputs):
+        def loss_fn(p):
+            return rec_mod.bce_loss(forward_fn(cfg, p, *inputs), labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        tab_g, dense_g = _split_table_params(grads)
+        tab_p, dense_p = _split_table_params(params)
+        new_tab = {k: tab_p[k] - 0.01 * tab_g[k] for k in tab_p}
+        new_dense, opt_state = opt.update(dense_g, opt_state, dense_p)
+        return {**new_tab, **new_dense}, opt_state, loss
+
+    args = (params_sds, opt_sds, sds((B,), jnp.float32), *inputs_sds)
+    in_sh = (params_sh, opt_sh, nmd(P(bspec[0])), *inputs_sh)
+    out_sh = (params_sh, opt_sh, nmd(P()))
+    return Cell(cfg.name, shape_name, "train", train_step, args, in_sh, out_sh,
+                model_flops=flops_fn(B, True), donate=(0, 1),
+                # lookup psum fwd + DENSE table-grad reduce over "data" (the
+                # honest GSPMD baseline — the §Perf hillclimb replaces it with
+                # a sparse id/grad all-to-all) + dense-param grad all-reduce
+                model_coll_bytes=2 * lookup_bytes + table_bytes)

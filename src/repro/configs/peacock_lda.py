@@ -1,0 +1,155 @@
+"""peacock-lda: the paper's own architecture as a config.
+
+Production scale follows §4.1/§5.1: V = 2.1×10⁵ (SOSO vocabulary), K = 10⁵
+topics, corpus of 10⁹ queries × 4.5 tokens processed in document-aligned
+SEGMENTS (Fig. 3): one segment = 256 data shards × 4096 docs ≈ 1.05M queries;
+the full corpus is ~950 segment epochs per Gibbs iteration. Segment sizing is
+what bounds the on-device Θ rebuild ([4096, 10⁵] int32 = 1.6 GB) — the dense-Θ
+TPU adaptation documented in DESIGN.md §3.
+
+Cells:
+  train_segment — one ring-Gibbs epoch over a resident segment (the paper's
+                  SampleSegment, Fig. 4), single-pod ring of 256.
+  serve_rt      — RT-LDA batched query inference (Eq. 4) against the full
+                  K=10⁵ model.
+The multi-pod variants add the "pod" axis as Peacock layer-2 configurations.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, Cell, sds
+from repro.core import distributed as dist
+from repro.core import hierarchy, rtlda
+
+K_TOPICS = 100_000
+VOCAB = 210_000
+DOCS_PER_SHARD = 4096
+TOKENS_PER_DOC = 4.5
+
+LDA_SHAPES = {
+    "train_segment": dict(n_topics=K_TOPICS, vocab=VOCAB,
+                          docs_per_shard=DOCS_PER_SHARD, kind="train"),
+    # §Perf hillclimbed variant: int8 Θ + column-scatter ¬ivd (EXPERIMENTS §Perf)
+    "train_segment_opt": dict(n_topics=K_TOPICS, vocab=VOCAB,
+                              docs_per_shard=DOCS_PER_SHARD, kind="train",
+                              optimized=True),
+    "serve_rt": dict(n_topics=K_TOPICS, vocab=VOCAB, batch=1024, query_len=8,
+                     kind="serve"),
+}
+
+
+def ring_config(mesh, optimized: bool = False) -> dist.RingConfig:
+    import jax.numpy as _jnp
+
+    M = int(mesh.shape["data"] * mesh.shape["model"])
+    rows = math.ceil(VOCAB / M)
+    cap = int(math.ceil(DOCS_PER_SHARD * TOKENS_PER_DOC / M / 8) * 8)
+    cap = max(cap, 8)
+    return dist.RingConfig(
+        n_topics=K_TOPICS, vocab_size=VOCAB, rows_per_shard=rows,
+        docs_per_shard=DOCS_PER_SHARD, cap=cap, package_len=cap,
+        n_rounds=M,
+        theta_dtype=_jnp.int8 if optimized else _jnp.int32,
+        column_exclusion=optimized,
+        small_theta=optimized,
+    )
+
+
+def _train_cell(mesh, multi_pod: bool, optimized: bool = False) -> Cell:
+    cfg = ring_config(mesh, optimized)
+    M = cfg.n_rounds
+    n_pods = int(mesh.shape["pod"]) if multi_pod else 1
+    K, rows, cap = cfg.n_topics, cfg.rows_per_shard, cfg.cap
+
+    if multi_pod:
+        fn, in_specs, out_specs = hierarchy.pod_ring_epoch_parts(mesh, cfg)
+        lead = (n_pods,)
+    else:
+        fn, in_specs, out_specs = dist.ring_epoch_parts(mesh, cfg)
+        lead = ()
+
+    stack_sds = sds(lead + (M, M, cap), jnp.int32)
+    args = (
+        sds(lead + (M, rows, K), jnp.int32),          # phi
+        sds(lead + (K,), jnp.int32),                  # psi
+        stack_sds,                                    # word_local
+        stack_sds,                                    # doc_local
+        sds(lead + (M, M, cap), jnp.uint32),          # uid
+        stack_sds,                                    # z
+        sds((K,), jnp.float32),                       # alpha
+        sds((), jnp.float32),                         # beta
+        sds((), jnp.uint32),                          # seed
+    )
+    nmd = lambda s: NamedSharding(mesh, s)
+    in_sh = tuple(nmd(s) for s in in_specs)
+    out_sh = tuple(nmd(s) for s in out_specs)
+
+    sampled_tokens = n_pods * M * M * cap
+    # per (token, topic): 3 log-plane reads ≈ 3 log + 2 add + gumbel(≈6) + cmp
+    flops = 12.0 * sampled_tokens * K
+    # ring traffic: each device ships its 4 int32 [M, cap] stack arrays
+    # (16·M·cap bytes) every round; M devices × M rounds → 16·M³·cap per
+    # epoch, plus one Ψ psum per segment
+    coll = n_pods * (16.0 * M ** 3 * cap + M * K * 4.0)
+    return Cell(
+        arch="peacock-lda",
+        shape="train_segment_opt" if optimized else "train_segment",
+        step_kind="lda_train",
+        fn=fn, args=args, in_shardings=in_sh, out_shardings=out_sh,
+        model_flops=flops, model_coll_bytes=coll,
+        donate=(0, 2, 3, 4, 5),
+        note=f"M={M} ring, cap={cap}, segment={M * DOCS_PER_SHARD} docs"
+             + (", int8-Θ+col-excl" if optimized else "")
+             + (f", {n_pods} pods" if multi_pod else ""),
+    )
+
+
+def _serve_cell(mesh, multi_pod: bool) -> Cell:
+    info = LDA_SHAPES["serve_rt"]
+    B, Ld = info["batch"], info["query_len"]
+
+    def serve(pvk, alpha, r_topic, r_value, word_ids):
+        model = rtlda.RTLDAModel(pvk=pvk, alpha=alpha, r_topic=r_topic,
+                                 r_value=r_value)
+        return rtlda.rtlda_infer_batch(model, word_ids, seed=jnp.uint32(17),
+                                       n_iters=5, n_trials=2)
+
+    nmd = lambda s: NamedSharding(mesh, s)
+    ring = ("data", "model")
+    # vocab rows padded so they divide the flattened ring (jit divisibility)
+    vpad = ((VOCAB + 511) // 512) * 512
+    args = (
+        sds((vpad, K_TOPICS), jnp.float32),
+        sds((K_TOPICS,), jnp.float32),
+        sds((vpad,), jnp.int32),
+        sds((vpad,), jnp.float32),
+        sds((B, Ld), jnp.int32),
+    )
+    # word_ids replicated is fine (8k ints); pvk row-sharded over the ring
+    in_sh = (nmd(P(ring, None)), nmd(P()), nmd(P(ring)), nmd(P(ring)), nmd(P()))
+    out_sh = nmd(P(None, "model"))   # K divides "model" (16) but not the ring
+    flops = 2.0 * B * (5 * 2) * Ld * Ld * 8.0
+    return Cell(
+        arch="peacock-lda", shape="serve_rt", step_kind="lda_serve",
+        fn=serve, args=args, in_shardings=in_sh, out_shardings=out_sh,
+        model_flops=flops, model_coll_bytes=5 * 2 * B * Ld * Ld * 4.0,
+        note="Eq.4 candidate-set hill climb, 2 trials × 5 iters",
+    )
+
+
+def spec() -> ArchSpec:
+    def build(shape_name, mesh, multi_pod):
+        if shape_name == "train_segment":
+            return _train_cell(mesh, multi_pod)
+        if shape_name == "train_segment_opt":
+            return _train_cell(mesh, multi_pod, optimized=True)
+        return _serve_cell(mesh, multi_pod)
+
+    return ArchSpec(arch_id="peacock-lda", family="lda", shapes=LDA_SHAPES,
+                    build=build)

@@ -1,0 +1,1 @@
+# Peacock core: hierarchical distributed LDA training + real-time serving.

@@ -1,0 +1,290 @@
+"""Peacock layer-1 on a TPU mesh: the diagonal-ring distributed Gibbs sampler.
+
+Mapping (DESIGN.md §3): every device on the flattened ("data","model") ring is
+simultaneously one Peacock *data server* (it owns one document shard's token
+stack) and one *sampling server* (it owns one vocabulary shard of Φ). The
+M×M block-diagonal schedule becomes a **ring rotation**:
+
+  round r: device v samples the sub-block B_{(v-r) mod M, v} — the tokens of
+  data shard (v-r) whose words live in vocab shard v — against its resident
+  Φ_v, then forwards the whole visiting stack one hop around the ring.
+
+Properties preserved from the paper:
+  * lock-freedom by construction — Φ_v has exactly one owner; no replicas of Φ
+    are ever written concurrently inside a pod;
+  * sampler-side freshness — Φ_v sees data shard i's updates before sampling
+    data shard i+1's block (the per-diagonal serialization of Fig. 2);
+  * relaxed Ψ synchronization — Ψ deltas are psum'd once per segment (Fig. 4),
+    not per diagonal;
+  * static load balance — weighted round-robin vocab placement makes every
+    (data, vocab) sub-block ≈ equal tokens, so one static capacity suffices
+    (the shapes ARE the load-balance proof);
+  * pipeline — within a round the sub-block is sampled in T packages of L
+    tokens (lax.scan) and the next hop's collective-permute is issued *before*
+    sampling starts, so XLA overlaps transfer with compute (§3.1.2).
+
+Θ is never stored globally (SparseLDA): each visiting stack carries its z, and
+the doc-topic counts for the visiting shard's documents are rebuilt locally per
+round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.data.corpus import ShardedCorpus
+from repro.kernels.gibbs import ops as gibbs_ops
+
+
+RING_AXES = ("data", "model")
+
+
+def prng_gumbel(seed, uid, n_topics: int):
+    from repro.core import prng
+
+    return prng.gumbel(jnp.asarray(seed, jnp.uint32),
+                       uid.astype(jnp.uint32)[:, None],
+                       jnp.arange(n_topics, dtype=jnp.uint32)[None, :])
+
+
+def ring_size(mesh) -> int:
+    return int(mesh.shape[RING_AXES[0]] * mesh.shape[RING_AXES[1]])
+
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _flat_index(mesh_axis_sizes):
+    i = jax.lax.axis_index(RING_AXES[0])
+    j = jax.lax.axis_index(RING_AXES[1])
+    return i * mesh_axis_sizes[1] + j
+
+
+@dataclasses.dataclass(frozen=True)
+class RingConfig:
+    n_topics: int
+    vocab_size: int            # global V (for the V*beta smoothing term)
+    rows_per_shard: int
+    docs_per_shard: int
+    cap: int                   # tokens per (data, vocab) sub-block
+    package_len: int           # L — pipeline package size (§3.1.2)
+    n_rounds: int              # = ring size M
+    use_kernel: bool = False
+    # §Perf hillclimb knobs (EXPERIMENTS.md §Perf / peacock-lda):
+    theta_dtype: Any = jnp.int32   # int8 → 4× less Θ-rebuild traffic (query
+                                   # docs never exceed 127 repeats of a topic)
+    column_exclusion: bool = False # ¬ivd via per-token column scatters instead
+                                   # of materialized one-hot [cap, K] planes
+    small_theta: bool = False      # rebuild Θ only for the ≤cap docs actually
+                                   # sampled this round ([cap+1, K] instead of
+                                   # [docs_per_shard, K]) — also removes the
+                                   # Θ-size bound on segment size
+
+
+def _sample_subblock(phi, psi, theta, w, d, z, uid, alpha, beta, seed, cfg: RingConfig):
+    """Sample one sub-block in packages of L tokens (the pipeline inner loop).
+
+    phi [rows, K] int32 (THIS device's vocab shard), psi [K] int32, theta
+    [docs_per_shard, K] int32; w/d/z/uid [cap]. Sentinels (w < 0) are skipped via
+    masked count updates. Returns updated (phi, psi, theta, z).
+    """
+    K = cfg.n_topics
+    L = cfg.package_len
+    n_pkg = cfg.cap // L
+    wp = w.reshape(n_pkg, L)
+    dp = d.reshape(n_pkg, L)
+    zp = z.reshape(n_pkg, L)
+    up = uid.reshape(n_pkg, L)
+
+    def package(carry, xs):
+        phi, psi, theta = carry
+        w, d, z, uid = xs
+        valid = w >= 0
+        w_s = jnp.where(valid, w, 0)
+        d_s = jnp.where(valid, d, 0)
+        rows = jnp.arange(w.shape[0])
+        if cfg.column_exclusion:
+            # ¬ivd as three per-token column scatters — no one-hot planes
+            phi_rows = phi[w_s].astype(jnp.float32).at[rows, z].add(-1.0)
+            theta_rows = theta[d_s].astype(jnp.float32).at[rows, z].add(-1.0)
+            vb = cfg.vocab_size * beta
+            psi_z = psi[z].astype(jnp.float32)
+            if cfg.use_kernel:
+                # fused Pallas path: psi stays a [K] row; its ¬ivd correction
+                # folds into phi's z-column so the kernel streams only two
+                # [T, K] planes + two [K] rows and writes [T] ids
+                corr = (psi_z + vb) / (psi_z - 1.0 + vb)
+                phi_rows = phi_rows.at[rows, z].set(
+                    (phi_rows[rows, z] + beta) * corr - beta)
+                z_new = gibbs_ops.gibbs_argmax(
+                    phi_rows, psi.astype(jnp.float32), theta_rows, alpha,
+                    beta, uid.astype(jnp.uint32), jnp.asarray(seed, jnp.uint32),
+                    cfg.vocab_size, 1.0, force="pallas")
+            else:
+                logits = (
+                    jnp.log(phi_rows + beta)
+                    - jnp.log(psi.astype(jnp.float32)[None, :] + vb)
+                    + jnp.log(theta_rows + alpha[None, :])
+                )
+                # psi self-exclusion touches exactly one column per token
+                logits = logits.at[rows, z].add(
+                    jnp.log(psi_z + vb) - jnp.log(psi_z - 1.0 + vb))
+                g = prng_gumbel(seed, uid, K)
+                z_new = jnp.argmax(logits + g, axis=1).astype(jnp.int32)
+        else:
+            onehot = jax.nn.one_hot(z, K, dtype=jnp.float32)
+            phi_rows = phi[w_s].astype(jnp.float32) - onehot
+            theta_rows = theta[d_s].astype(jnp.float32) - onehot
+            psi_rows = psi.astype(jnp.float32)[None, :] - onehot
+            z_new = gibbs_ops.gibbs_argmax(
+                phi_rows, psi_rows, theta_rows, alpha, beta,
+                uid.astype(jnp.uint32), jnp.asarray(seed, jnp.uint32),
+                cfg.vocab_size, 1.0,
+                force="pallas" if cfg.use_kernel else None,
+            )
+        z_new = jnp.where(valid, z_new, z)
+        delta = valid.astype(jnp.int32)
+        dtheta = valid.astype(theta.dtype)
+        phi = phi.at[w_s, z].add(-delta).at[w_s, z_new].add(delta)
+        psi = psi.at[z].add(-delta).at[z_new].add(delta)
+        theta = theta.at[d_s, z].add(-dtheta).at[d_s, z_new].add(dtheta)
+        return (phi, psi, theta), z_new
+
+    (phi, psi, theta), z_new = jax.lax.scan(package, (phi, psi, theta), (wp, dp, zp, up))
+    return phi, psi, theta, z_new.reshape(-1)
+
+
+def ring_epoch_parts(mesh, cfg: RingConfig):
+    """Build the one-epoch ring sampler for ``mesh`` (unjitted + its specs).
+
+    Global array layout (S = M = ring size):
+      phi   [M, rows, K] int32  — sharded over the ring (leading dim)
+      psi   [K]          int32  — replicated
+      stack [S, M, cap]  int32  — word_local / doc_local / z (+uid uint32),
+                                   sharded over the ring (leading dim)
+    """
+    M = ring_size(mesh)
+    assert cfg.n_rounds == M, "ring rounds must equal ring size"
+    axis_sizes = (int(mesh.shape[RING_AXES[0]]), int(mesh.shape[RING_AXES[1]]))
+    perm = _ring_perm(M)
+
+    def epoch(phi, psi, wl, dl, uid, z, alpha, beta, seed):
+        # per-device views: phi [1, rows, K]; stack arrays [1, M, cap]; psi [K]
+        me = _flat_index(axis_sizes)
+        phi_l = phi[0]
+        psi0 = psi
+        # psi becomes device-varying once local deltas accumulate; mark it so
+        # (JAX 0.8 varying-manual-axes typing for shard_map scan carries)
+        psi = jax.lax.pcast(psi, RING_AXES, to="varying")
+
+        def round_fn(carry, r):
+            phi_l, psi, stack = carry
+            wl, dl, uid, z = stack
+
+            # ship the immutable stack arrays for the NEXT round first — XLA
+            # overlaps the collective-permute with this round's sampling
+            # (pipeline, §3.1.2); z ships after sampling updates it.
+            nxt = tuple(
+                jax.lax.ppermute(a, RING_AXES, perm) for a in (wl, dl, uid)
+            )
+
+            # Θ for the visiting shard's documents, rebuilt from the stack's z
+            flat_d = dl[0].reshape(-1)
+            flat_z = z[0].reshape(-1)
+            flat_w = wl[0].reshape(-1)
+            valid = (flat_w >= 0).astype(cfg.theta_dtype)
+
+            # my vocab sub-block of the visiting stack
+            take = lambda a: jax.lax.dynamic_slice_in_dim(a[0], me, 1, axis=0)[0]
+            w_sub, d_sub, u_sub, z_sub = take(wl), take(dl), take(uid), take(z)
+
+            if cfg.small_theta:
+                # Θ only for docs actually sampled this round: remap their doc
+                # ids into [0, cap) (one row per present doc; absent docs hit
+                # the scratch row). Θ build cost: [cap+1, K] instead of
+                # [docs_per_shard, K] — and segment size no longer bounds Θ.
+                inv = jnp.full((cfg.docs_per_shard,), cfg.cap, jnp.int32)
+                inv = inv.at[d_sub].set(jnp.arange(cfg.cap, dtype=jnp.int32))
+                idx = inv[flat_d]
+                theta = jnp.zeros((cfg.cap + 1, cfg.n_topics),
+                                  cfg.theta_dtype).at[idx, flat_z].add(valid)
+                d_sub_local = inv[d_sub]
+            else:
+                theta = jnp.zeros((cfg.docs_per_shard, cfg.n_topics),
+                                  cfg.theta_dtype).at[flat_d, flat_z].add(valid)
+                d_sub_local = d_sub
+
+            phi_l, psi, _, z_new = _sample_subblock(
+                phi_l, psi, theta, w_sub, d_sub_local, z_sub, u_sub,
+                alpha, beta, seed, cfg,
+            )
+            # write updated z back into the (already-shipped view of the) stack:
+            # the z we forward must include this round's update, so we update
+            # BEFORE shipping in program order — instead we re-ship z only.
+            z_upd = jax.lax.dynamic_update_slice_in_dim(
+                z[0], z_new[None], me, axis=0
+            )[None]
+            z_next = jax.lax.ppermute(z_upd, RING_AXES, perm)
+            stack = (nxt[0], nxt[1], nxt[2], z_next)
+            return (phi_l, psi, stack), None
+
+        (phi_l, psi, stack), _ = jax.lax.scan(
+            round_fn, (phi_l, psi, (wl, dl, uid, z)), jnp.arange(M)
+        )
+        # relaxed per-segment Ψ synchronization (Fig. 4)
+        psi = psi0 + jax.lax.psum(psi - psi0, RING_AXES)
+        return phi_l[None], psi, stack[0], stack[1], stack[2], stack[3]
+
+    sharded = P(("data", "model"))
+    in_specs = (sharded, P(), sharded, sharded, sharded, sharded, P(), P(), P())
+    out_specs = (sharded, P(), sharded, sharded, sharded, sharded)
+    epoch_sm = jax.shard_map(epoch, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    return epoch_sm, in_specs, out_specs
+
+
+def make_ring_epoch(mesh, cfg: RingConfig):
+    epoch_sm, _, _ = ring_epoch_parts(mesh, cfg)
+    return jax.jit(epoch_sm, donate_argnums=(0, 2, 3, 4, 5))
+
+
+def device_arrays(sc: ShardedCorpus, n_topics: int):
+    """Host → device: the [S, M, cap] stacks + phi/psi built from z0."""
+    import numpy as np
+
+    S, M, cap = sc.word_local.shape
+    rows = sc.rows_per_shard
+    phi = np.zeros((M, rows, n_topics), np.int32)
+    psi = np.zeros((n_topics,), np.int64)
+    valid = sc.word_local >= 0
+    # vocab shard of sub-block index m is m (by construction)
+    for m in range(M):
+        w = sc.word_local[:, m][valid[:, m]]
+        zz = sc.z0[:, m][valid[:, m]]
+        np.add.at(phi[m], (w, zz), 1)
+        np.add.at(psi, zz, 1)
+    return (
+        jnp.asarray(phi),
+        jnp.asarray(psi.astype(np.int32)),
+        jnp.asarray(sc.word_local),
+        jnp.asarray(sc.doc_local),
+        jnp.asarray(sc.uid),
+        jnp.asarray(sc.z0),
+    )
+
+
+def gather_phi(phi_sharded, sc: ShardedCorpus, n_topics: int):
+    """Reassemble the global [V, K] phi from ring shards (for eval / serving)."""
+    import numpy as np
+
+    phi = np.asarray(phi_sharded)      # [M, rows, K]
+    out = np.zeros((sc.vocab_size, n_topics), np.int32)
+    for v in range(sc.vocab_size):
+        out[v] = phi[sc.shard_of_word[v], sc.local_of_word[v]]
+    return out

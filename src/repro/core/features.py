@@ -1,0 +1,43 @@
+"""Topic features for downstream systems (paper §5, Eq. 5).
+
+P(v|d) = Σ_k P(v|k) P(k|d) — a V-length vector compatible with the word vector
+space model. ``top_topic_features`` returns the top-N (word, weight) pairs that
+Peacock injects at the head of Weak-AND posting lists; ``feature_matrix``
+returns dense P(k|d) rows used as pCTR model inputs (Fig. 8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lda import phi_hat
+from repro.core.rtlda import RTLDAModel, rtlda_infer_batch
+
+
+@functools.partial(jax.jit, static_argnames=("top_n",))
+def word_likelihood_topk(pvk, pkd, top_n: int = 30) -> Tuple[jax.Array, jax.Array]:
+    """Top-N entries of P(v|d) = pvk @ pkd^T per document (Eq. 5).
+
+    pvk [V, K], pkd [B, K] → (ids [B, top_n] int32, weights [B, top_n] f32).
+    """
+    pvd = jnp.einsum("vk,bk->bv", pvk, pkd)
+    w, ids = jax.lax.top_k(pvd, top_n)
+    return ids.astype(jnp.int32), w
+
+
+def query_topic_features(model: RTLDAModel, word_ids, seed=0,
+                         n_iters: int = 5, n_trials: int = 1, top_n: int = 30):
+    """End-to-end serving path: RT-LDA inference → Eq. 5 → top-N features."""
+    pkd = rtlda_infer_batch(model, word_ids, seed, n_iters, n_trials)
+    ids, w = word_likelihood_topk(model.pvk, pkd, top_n)
+    return pkd, ids, w
+
+
+def cosine_topic_similarity(pkd_a, pkd_b) -> jax.Array:
+    """Query–document cosine similarity in topic space (the retrieval scorer)."""
+    a = pkd_a / jnp.linalg.norm(pkd_a, axis=-1, keepdims=True)
+    b = pkd_b / jnp.linalg.norm(pkd_b, axis=-1, keepdims=True)
+    return a @ b.T

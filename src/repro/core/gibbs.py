@@ -1,0 +1,211 @@
+"""Blocked collapsed Gibbs sampling for LDA — the Peacock sampling-server inner loop.
+
+TPU adaptation of SparseLDA (DESIGN.md §3): tokens are sampled in vectorized blocks
+via **Gumbel-max** categorical sampling,
+
+    z_t  ~  argmax_k [ log p(z_t = k | ...) + G_tk ],   G ~ Gumbel(0,1)
+
+which is an exact draw from Eq. (1) of the paper and turns the sampler into a
+streaming max over K — the shape the Pallas kernel fuses. Within one block all
+tokens see the same count snapshot with **exact self-exclusion** (the ¬ivd terms);
+count deltas are applied at block boundaries (chromatic / AD-LDA-style relaxation
+already licensed by the paper's own stale-sync argument [30]).
+
+RT-LDA (paper §3.2) is the ``temperature=0`` special case of the same code path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prng
+from repro.core.lda import LDAState, doc_topic_counts
+from repro.kernels.gibbs import ops as gibbs_ops
+
+
+def token_logits(
+    phi_rows: jax.Array,    # [T, K] f32 — phi[w_t] rows (already float)
+    psi: jax.Array,         # [K]    f32
+    theta_rows: jax.Array,  # [T, K] f32 — theta[d_t] rows
+    alpha: jax.Array,       # [K]    f32
+    beta: jax.Array,        # []     f32
+    vocab_size: int,
+) -> jax.Array:
+    """log of the unnormalized collapsed posterior, Eq. (1)."""
+    vb = vocab_size * beta
+    return (
+        jnp.log(phi_rows + beta)
+        - jnp.log(psi[None, :] + vb)
+        + jnp.log(theta_rows + alpha[None, :])
+    )
+
+
+def _self_excluded(phi, psi, theta, w, dloc, z):
+    """Gather per-token rows with the token's own assignment removed (¬ivd)."""
+    K = phi.shape[1]
+    onehot = jax.nn.one_hot(z, K, dtype=jnp.float32)            # [T, K]
+    phi_rows = phi[w].astype(jnp.float32) - onehot
+    theta_rows = theta[dloc].astype(jnp.float32) - onehot
+    psi_rows = psi.astype(jnp.float32)[None, :] - onehot
+    return phi_rows, psi_rows, theta_rows
+
+
+@partial(jax.jit, static_argnames=("vocab_size", "temperature", "use_kernel"))
+def sample_block(
+    phi: jax.Array,          # [V, K] int32
+    psi: jax.Array,          # [K]    int32
+    theta: jax.Array,        # [D_blk, K] int32 — doc-topic counts for this block
+    z: jax.Array,            # [T]    int32 current assignments
+    w: jax.Array,            # [T]    int32 word ids (local to this phi shard)
+    dloc: jax.Array,         # [T]    int32 doc ids local to theta
+    token_uid: jax.Array,    # [T]    uint32 globally-unique token ids (RNG counters)
+    alpha: jax.Array,
+    beta: jax.Array,
+    seed,                    # uint32 scalar (varies per sweep)
+    vocab_size: int,
+    temperature: float = 1.0,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One Gumbel-max Gibbs sweep over a token block.
+
+    Returns (z_new, phi', psi', theta'). ``vocab_size`` is the *global* V (the
+    smoothing constant V*beta), which differs from phi.shape[0] on a vocab shard.
+    """
+    phi_rows, psi_rows, theta_rows = _self_excluded(phi, psi, theta, w, dloc, z)
+    if use_kernel:
+        z_new = gibbs_ops.gibbs_argmax(
+            phi_rows, psi_rows, theta_rows, alpha, beta, token_uid,
+            jnp.uint32(seed), vocab_size, temperature,
+        )
+    else:
+        # NB: psi self-exclusion is per-token, so the psi term is a [T, K] matrix.
+        vb = vocab_size * beta
+        logits = (
+            jnp.log(phi_rows + beta)
+            - jnp.log(psi_rows + vb)
+            + jnp.log(theta_rows + alpha[None, :])
+        )
+        if temperature > 0.0:
+            K = phi.shape[1]
+            g = prng.gumbel(seed, token_uid[:, None], jnp.arange(K, dtype=jnp.uint32)[None, :])
+            logits = logits + temperature * g
+        z_new = jnp.argmax(logits, axis=1).astype(jnp.int32)
+
+    # --- apply count deltas (scatter-add handles duplicate indices) ---
+    one = jnp.ones_like(z)
+    phi = phi.at[w, z].add(-one).at[w, z_new].add(one)
+    psi = psi.at[z].add(-one).at[z_new].add(one)
+    theta = theta.at[dloc, z].add(-one).at[dloc, z_new].add(one)
+    return z_new, phi, psi, theta
+
+
+@partial(jax.jit, static_argnames=("n_docs", "vocab_size", "n_sweeps", "block_size", "use_kernel"))
+def gibbs_epoch(
+    state: LDAState,
+    word_ids: jax.Array,
+    doc_ids: jax.Array,
+    n_docs: int,
+    vocab_size: int,
+    seed,
+    n_sweeps: int = 1,
+    block_size: int = 8192,
+    use_kernel: bool = False,
+) -> LDAState:
+    """Full single-device Gibbs pass: scan over fixed-size token blocks.
+
+    The corpus arrays must be padded to a multiple of ``block_size`` with
+    word_id == -1 sentinels (``repro.data.corpus.pad_corpus``); sentinel tokens are
+    masked out of both sampling and count updates by pointing them at a scratch row.
+    """
+    n_tokens = word_ids.shape[0]
+    assert n_tokens % block_size == 0, "pad corpus to a block multiple"
+    n_blocks = n_tokens // block_size
+    K = state.n_topics
+
+    theta = doc_topic_counts(doc_ids, state.z, n_docs, K)
+    token_uid = jnp.arange(n_tokens, dtype=jnp.uint32)
+
+    wb = word_ids.reshape(n_blocks, block_size)
+    db = doc_ids.reshape(n_blocks, block_size)
+    zb = state.z.reshape(n_blocks, block_size)
+    ub = token_uid.reshape(n_blocks, block_size)
+
+    def sweep(carry, _):
+        phi, psi, theta, zb, sweep_ix = carry
+
+        def block(carry, xs):
+            phi, psi, theta = carry
+            w, d, z, uid = xs
+            valid = w >= 0
+            w_safe = jnp.where(valid, w, 0)
+            d_safe = jnp.where(valid, d, 0)
+            z_new, phi2, psi2, theta2 = sample_block(
+                phi, psi, theta, z, w_safe, d_safe, uid,
+                state.alpha, state.beta,
+                jnp.uint32(seed) + sweep_ix.astype(jnp.uint32),
+                vocab_size, 1.0, use_kernel,
+            )
+            z_new = jnp.where(valid, z_new, z)
+            # roll back sentinel-token updates
+            undo = jnp.where(valid, 0, 1).astype(jnp.int32)
+            phi2 = phi2.at[w_safe, z].add(undo).at[w_safe, z_new].add(-undo)
+            psi2 = psi2.at[z].add(undo).at[z_new].add(-undo)
+            theta2 = theta2.at[d_safe, z].add(undo).at[d_safe, z_new].add(-undo)
+            return (phi2, psi2, theta2), z_new
+
+        (phi, psi, theta), zb_new = jax.lax.scan(block, (phi, psi, theta), (wb, db, zb, ub))
+        return (phi, psi, theta, zb_new, sweep_ix + 1), None
+
+    (phi, psi, theta, zb, _), _ = jax.lax.scan(
+        sweep, (state.phi, state.psi, theta, zb, jnp.int32(0)), None, length=n_sweeps
+    )
+    return LDAState(phi=phi, psi=psi, z=zb.reshape(-1), alpha=state.alpha, beta=state.beta)
+
+
+@partial(jax.jit, static_argnames=("n_docs", "vocab_size", "n_sweeps"))
+def fold_in(
+    phi: jax.Array,
+    psi: jax.Array,
+    alpha: jax.Array,
+    beta: jax.Array,
+    word_ids: jax.Array,
+    doc_ids: jax.Array,
+    z0: jax.Array,
+    n_docs: int,
+    vocab_size: int,
+    seed,
+    n_sweeps: int = 10,
+):
+    """Held-out inference: resample z for unseen documents with phi/psi FROZEN.
+
+    Used by perplexity evaluation (paper Fig. 5B) and as the reference
+    ("SparseLDA prediction") against which RT-LDA is compared.
+    """
+    K = phi.shape[1]
+    theta = doc_topic_counts(doc_ids, z0, n_docs, K)
+    token_uid = jnp.arange(word_ids.shape[0], dtype=jnp.uint32)
+    vb = vocab_size * beta
+    phi_f = phi.astype(jnp.float32)
+    psi_f = psi.astype(jnp.float32)
+
+    def sweep(carry, s):
+        z, theta = carry
+        onehot = jax.nn.one_hot(z, K, dtype=jnp.float32)
+        theta_rows = theta[doc_ids].astype(jnp.float32) - onehot
+        logits = (
+            jnp.log(phi_f[word_ids] + beta)
+            - jnp.log(psi_f[None, :] + vb)
+            + jnp.log(theta_rows + alpha[None, :])
+        )
+        g = prng.gumbel(jnp.uint32(seed) + s.astype(jnp.uint32),
+                        token_uid[:, None], jnp.arange(K, dtype=jnp.uint32)[None, :])
+        z_new = jnp.argmax(logits + g, axis=1).astype(jnp.int32)
+        one = jnp.ones_like(z_new)
+        theta = theta.at[doc_ids, z].add(-one).at[doc_ids, z_new].add(one)
+        return (z_new, theta), None
+
+    (z, theta), _ = jax.lax.scan(sweep, (z0, theta), jnp.arange(n_sweeps))
+    return z, theta

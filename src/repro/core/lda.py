@@ -1,0 +1,195 @@
+"""LDA count-state and model math for Peacock.
+
+Collapsed Gibbs sampling LDA keeps three count structures (paper §2):
+
+  * ``phi``   — Phi_{V x K}: word-topic counts (the "big model", sharded by vocab
+                rows over the ``"model"`` mesh axis in the distributed sampler).
+  * ``psi``   — Psi_K = sum_v Phi: per-topic token totals (replicated, relaxed sync).
+  * ``z``     — token-level topic assignments. Theta_{K x D} is *never stored*
+                (SparseLDA [26] trick): per-document topic counts are rebuilt on the
+                fly from ``z`` for the documents currently being sampled.
+
+Hyperparameters: asymmetric document-topic prior ``alpha_k`` (optimized by
+``repro.core.dedup.optimize_alpha``) and symmetric word-topic prior ``beta``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import gammaln
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LDAState:
+    """Device-resident LDA sampler state (a pytree)."""
+
+    phi: jax.Array          # [V, K] int32 word-topic counts
+    psi: jax.Array          # [K]    int32 topic totals (= phi.sum(0) when in sync)
+    z: jax.Array            # [N]    int32 token topic assignments
+    alpha: jax.Array        # [K]    f32 asymmetric doc-topic prior
+    beta: jax.Array         # []     f32 symmetric word-topic prior
+
+    @property
+    def n_topics(self) -> int:
+        return self.phi.shape[1]
+
+    @property
+    def vocab_size(self) -> int:
+        return self.phi.shape[0]
+
+
+def init_state(
+    key: jax.Array,
+    word_ids: jax.Array,
+    n_topics: int,
+    vocab_size: int,
+    alpha0: float = 50.0,
+    beta: float = 0.01,
+) -> LDAState:
+    """Random topic init + consistent counts.
+
+    ``alpha0`` is the total prior mass: alpha_k = alpha0 / K (symmetric start; the
+    asymmetric optimizer reshapes it during training, paper §3.3).
+    """
+    n_tokens = word_ids.shape[0]
+    z = jax.random.randint(key, (n_tokens,), 0, n_topics, dtype=jnp.int32)
+    phi, psi = build_counts(word_ids, z, n_topics, vocab_size)
+    alpha = jnp.full((n_topics,), alpha0 / n_topics, dtype=jnp.float32)
+    return LDAState(phi=phi, psi=psi, z=z, alpha=alpha, beta=jnp.float32(beta))
+
+
+@partial(jax.jit, static_argnames=("n_topics", "vocab_size"))
+def build_counts(word_ids: jax.Array, z: jax.Array, n_topics: int, vocab_size: int):
+    """Rebuild (phi, psi) from scratch — used at init and by fault recovery."""
+    phi = jnp.zeros((vocab_size, n_topics), jnp.int32).at[word_ids, z].add(1)
+    psi = jnp.zeros((n_topics,), jnp.int32).at[z].add(1)
+    return phi, psi
+
+
+@partial(jax.jit, static_argnames=("n_docs", "n_topics"))
+def doc_topic_counts(doc_ids: jax.Array, z: jax.Array, n_docs: int, n_topics: int):
+    """Theta block [n_docs, K] rebuilt on the fly (SparseLDA: Theta is not stored)."""
+    return jnp.zeros((n_docs, n_topics), jnp.int32).at[doc_ids, z].add(1)
+
+
+def phi_hat(phi: jax.Array, beta: jax.Array) -> jax.Array:
+    """P̂(v|k): column-normalized smoothed topic-word distribution (paper Eq. 2)."""
+    phi_f = phi.astype(jnp.float32) + beta
+    return phi_f / phi_f.sum(axis=0, keepdims=True)
+
+
+def theta_hat(theta: jax.Array, alpha: jax.Array) -> jax.Array:
+    """P̂(k|d): row-normalized smoothed doc-topic distribution."""
+    th = theta.astype(jnp.float32) + alpha[None, :]
+    return th / th.sum(axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Model quality metrics
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def word_log_likelihood(phi: jax.Array, psi: jax.Array, beta: jax.Array) -> jax.Array:
+    """Collapsed log p(w|z) word part (used for the paper's Fig. 6 LL-vs-iteration).
+
+    log p(w|z) = K*[lnG(V*beta) - V*lnG(beta)]
+                 + sum_k [ sum_v lnG(phi_vk + beta) - lnG(psi_k + V*beta) ]
+    """
+    V = phi.shape[0]
+    K = phi.shape[1]
+    vb = V * beta
+    const = K * (gammaln(vb) - V * gammaln(beta))
+    per_topic = gammaln(phi.astype(jnp.float32) + beta).sum(axis=0) - gammaln(
+        psi.astype(jnp.float32) + vb
+    )
+    return const + per_topic.sum()
+
+
+@partial(jax.jit, static_argnames=("n_docs",))
+def doc_log_likelihood(doc_ids, z, alpha, n_docs: int):
+    """Collapsed log p(z) document part."""
+    K = alpha.shape[0]
+    theta = doc_topic_counts(doc_ids, z, n_docs, K).astype(jnp.float32)
+    a0 = alpha.sum()
+    lengths = theta.sum(axis=1)
+    per_doc = (
+        gammaln(a0)
+        - gammaln(alpha).sum()
+        + gammaln(theta + alpha[None, :]).sum(axis=1)
+        - gammaln(lengths + a0)
+    )
+    return per_doc.sum()
+
+
+@partial(jax.jit, static_argnames=("n_docs",))
+def predictive_log_prob(phi, psi, beta, alpha, word_ids, doc_ids, z, n_docs: int):
+    """Mean log p(w|d) of a (folded-in) corpus under the current model.
+
+    perplexity = exp(-predictive_log_prob) — the Fig. 5B metric [29].
+    """
+    K = phi.shape[1]
+    pvk = phi_hat(phi, beta)                                    # [V, K]
+    theta = doc_topic_counts(doc_ids, z, n_docs, K)
+    pkd = theta_hat(theta, alpha)                               # [D, K]
+    p = jnp.einsum("tk,tk->t", pvk[word_ids], pkd[doc_ids])     # [N]
+    return jnp.log(jnp.maximum(p, 1e-30)).mean()
+
+
+def perplexity(phi, psi, beta, alpha, word_ids, doc_ids, z, n_docs: int) -> float:
+    return float(jnp.exp(-predictive_log_prob(phi, psi, beta, alpha, word_ids, doc_ids, z, n_docs)))
+
+
+def topic_pmi(
+    phi: np.ndarray,
+    word_ids: np.ndarray,
+    doc_ids: np.ndarray,
+    n_docs: int,
+    top_n: int = 10,
+    eps: float = 1.0,
+) -> np.ndarray:
+    """Per-topic PMI coherence over the top-N topic words (paper Fig. 1, [20]).
+
+    PMI(k) = mean_{i<j} log [ P(w_i, w_j) / (P(w_i) P(w_j)) ] with document-level
+    co-occurrence probabilities estimated on the given corpus.
+    """
+    phi = np.asarray(phi)
+    V, K = phi.shape
+    top = np.argsort(-phi, axis=0)[:top_n]                      # [top_n, K]
+    # doc-word incidence for the words that appear in any top list
+    used = np.unique(top)
+    col = {v: i for i, v in enumerate(used)}
+    inc = np.zeros((n_docs, len(used)), dtype=bool)
+    mask = np.isin(word_ids, used)
+    inc[doc_ids[mask], [col[v] for v in word_ids[mask]]] = True
+    df = inc.sum(axis=0).astype(np.float64)                     # doc freq
+    co = (inc.T.astype(np.float64) @ inc.astype(np.float64))    # co-doc freq
+    pmis = np.zeros(K)
+    for k in range(K):
+        idx = np.array([col[v] for v in top[:, k]])
+        sub_co = co[np.ix_(idx, idx)]
+        p_i = df[idx] / n_docs
+        p_ij = (sub_co + eps / n_docs) / n_docs
+        with np.errstate(divide="ignore", invalid="ignore"):
+            pmi = np.log(p_ij / np.outer(p_i, p_i))
+        iu = np.triu_indices(top_n, k=1)
+        vals = pmi[iu]
+        vals = vals[np.isfinite(vals)]
+        pmis[k] = vals.mean() if vals.size else 0.0
+    return pmis
+
+
+def check_invariants(state: LDAState, word_ids: jax.Array) -> None:
+    """Count-conservation invariants (used by tests and fault-recovery audit)."""
+    phi, psi = build_counts(word_ids, state.z, state.n_topics, state.vocab_size)
+    if not bool(jnp.all(phi == state.phi)):
+        raise AssertionError("phi counts out of sync with z")
+    if not bool(jnp.all(psi == state.psi)):
+        raise AssertionError("psi counts out of sync with z")
+    if int(psi.sum()) != int(word_ids.shape[0]):
+        raise AssertionError("total token count mismatch")

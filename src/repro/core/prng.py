@@ -1,0 +1,55 @@
+"""Counter-based stateless RNG shared by the XLA path, the Pallas kernel and the oracle.
+
+A murmur3-finalizer hash of (seed, token, k) gives i.i.d. uniform bits without any
+carried RNG state. Consequences we rely on:
+
+  * kernel == ref **bitwise** (both evaluate the identical integer formula);
+  * the sample drawn for a token is invariant to sharding layout and to
+    fault-recovery replay (determinism across restarts, which the paper's Go
+    implementation could not offer);
+  * no PRNG key threading through scan/shard_map bodies.
+
+All arithmetic is uint32 with wraparound (XLA semantics), valid inside Pallas.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# plain Python ints: they stay weak-typed literals (never captured consts in Pallas)
+_C1 = 0x85EB_CA6B
+_C2 = 0xC2B2_AE35
+_GOLDEN = 0x9E37_79B9
+
+
+def fmix32(h):
+    """murmur3 32-bit finalizer — full avalanche."""
+    h = jnp.asarray(h, jnp.uint32)
+    h ^= h >> 16
+    h *= jnp.uint32(_C1)
+    h ^= h >> 13
+    h *= jnp.uint32(_C2)
+    h ^= h >> 16
+    return h
+
+
+def hash_bits(seed, a, b):
+    """uint32 hash of (seed, a, b); broadcasts like jnp ops."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    h = fmix32(seed ^ jnp.uint32(_GOLDEN))
+    h = fmix32(h ^ (a * jnp.uint32(_C1) + jnp.uint32(_GOLDEN)))
+    h = fmix32(h ^ (b * jnp.uint32(_C2) + jnp.uint32(_GOLDEN)))
+    return h
+
+
+def uniform01(seed, a, b):
+    """Uniform in (0, 1): top 24 bits of the hash, offset to avoid exact 0."""
+    bits = hash_bits(seed, a, b) >> 8
+    return (bits.astype(jnp.float32) + 0.5) * jnp.float32(1.0 / (1 << 24))
+
+
+def gumbel(seed, a, b):
+    """Standard Gumbel noise: -log(-log(U))."""
+    u = uniform01(seed, a, b)
+    return -jnp.log(-jnp.log(u))

@@ -1,0 +1,156 @@
+"""RT-LDA — real-time topic inference for unseen queries (paper §3.2).
+
+RT-LDA replaces SparseLDA's sampling operator with **max** (hill climbing on the
+collapsed posterior, CDN-style axis-aligned line search):
+
+    z_t ← argmax_k  P̂(v|k) · (Θ_kd + α_k)                      (Eq. 2)
+        = argmax_k [ P̂(v|k)·Θ_kd  +  P̂(v|k)·α_k ]
+
+The prior part is constant at serving time, so its per-word argmax is
+precomputed into the 1-nonzero-per-word cache **R** (Eq. 3). The data part is
+nonzero only where Θ_kd > 0 — at most len(d) topics for a query — giving the
+two-term max of Eq. 4: O(len(d)) work per token instead of O(K). We keep the
+candidate set as a static [Ld] column set per document (its tokens' current
+assignments), which is exact: argmax topics are either a doc topic or R*_v.
+
+Two implementations:
+  * ``rtlda_sparse_*`` — the faithful Eq.-4 candidate-set path (serving).
+  * the dense path — the Gibbs Gumbel-max kernel with temperature=0
+    (used for the speed comparison in benchmarks; "sampling → max" is literally
+    switching off the Gumbel noise, DESIGN.md §3).
+
+Parallel trials: RT-LDA's hill climb is greedy; the paper runs several trials
+and averages. Trials differ in their random initialization — our counter-based
+RNG makes trial r of token t use seed ⊕ r.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prng
+from repro.core.lda import phi_hat
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RTLDAModel:
+    """Frozen serving model: normalized topics + the R cache."""
+
+    pvk: jax.Array       # [V, K] f32 — P̂(v|k)
+    alpha: jax.Array     # [K] f32
+    r_topic: jax.Array   # [V] int32 — argmax_k P̂(v|k) α_k  (the R cache, Eq. 3)
+    r_value: jax.Array   # [V] f32   — its value
+
+
+def build_model(phi, beta, alpha) -> RTLDAModel:
+    pvk = phi_hat(phi, beta)
+    prior = pvk * alpha[None, :]
+    return RTLDAModel(
+        pvk=pvk,
+        alpha=alpha,
+        r_topic=jnp.argmax(prior, axis=1).astype(jnp.int32),
+        r_value=jnp.max(prior, axis=1),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "n_trials"))
+def rtlda_infer_batch(
+    model: RTLDAModel,
+    word_ids: jax.Array,    # [B, Ld] int32, -1 padded — a batch of queries
+    seed,
+    n_iters: int = 5,
+    n_trials: int = 1,
+) -> jax.Array:
+    """Infer P(k|d) for a batch of queries. Returns [B, K] f32.
+
+    Fully vectorized Eq. 4: for each token the candidate topics are the
+    current assignments of the *other* tokens of the same query (≤ Ld of them)
+    plus the token's R entry. Complexity O(B · Ld² · iters) — independent of K
+    (the paper's point: serving cost must not scale with 10⁵ topics).
+    """
+    B, Ld = word_ids.shape
+    K = model.alpha.shape[0]
+    valid = word_ids >= 0
+    vmask = valid.astype(jnp.float32)
+    w = jnp.where(valid, word_ids, 0)
+
+    r_top = model.r_topic[w]                               # [B, Ld]
+    # point gathers only — no [.., K] intermediates, so serving cost (and HBM
+    # traffic) is independent of K, the whole point of Eq. 4
+    pvk_at_r = model.pvk[w, r_top]                         # [B, Ld]
+
+    def trial(t):
+        # trial 0 starts at the R cache (Eq. 3); later trials randomize half the
+        # tokens — independent hill-climb restarts, averaged (paper §3.2).
+        u = prng.uniform01(
+            jnp.asarray(seed, jnp.uint32)
+            ^ jnp.uint32((t * 0x9E3779B9) & 0xFFFFFFFF),
+            jnp.arange(B * Ld, dtype=jnp.uint32).reshape(B, Ld),
+            jnp.uint32(0))
+        z0 = jnp.where((t == 0) | (u < 0.5), r_top, (u * (2 ** 24)).astype(jnp.int32) % K)
+        z0 = jnp.where(valid, z0, 0)
+
+        def hill_step(z, _):
+            # candidate topics for every token = the query's own assignments
+            # (columns c) plus the token's R entry — exactly the support of Eq. 4.
+            same = (z[:, None, :] == z[:, :, None]).astype(jnp.float32)   # [B, c, j]
+            cnt = jnp.einsum("bcj,bj->bc", same, vmask)                   # Θ at z[b,c]
+            score_tok = model.pvk[w[:, :, None], z[:, None, :]]           # P̂(w_bi|z[b,c])
+            self_hit = (z[:, None, :] == z[:, :, None]).astype(jnp.float32)  # [B, i, c]
+            alpha_c = model.alpha[z]                                      # [B, c]
+            cand_score = score_tok * (cnt[:, None, :] - self_hit + alpha_c[:, None, :])
+            cand_score = jnp.where(valid[:, None, :], cand_score, -jnp.inf)
+            best_c = jnp.argmax(cand_score, axis=-1)                      # [B, i]
+            best_v = jnp.max(cand_score, axis=-1)
+            z_cand = jnp.take_along_axis(z, best_c, axis=1)
+
+            # the R term of Eq. 4 (with Θ at the R topic, which may be > 0)
+            r_cnt = jnp.einsum(
+                "bij,bj->bi",
+                (z[:, None, :] == r_top[:, :, None]).astype(jnp.float32), vmask)
+            r_self = (z == r_top).astype(jnp.float32)
+            r_score = pvk_at_r * (r_cnt - r_self + model.alpha[r_top])
+            z_new = jnp.where(r_score > best_v, r_top, z_cand)
+            return jnp.where(valid, z_new, 0), None
+
+        z, _ = jax.lax.scan(hill_step, z0, None, length=n_iters)
+        return jax.vmap(
+            lambda zr, vr: jnp.zeros((K,), jnp.float32).at[zr].add(vr)
+        )(z, vmask)
+
+    theta = jnp.stack([trial(t) for t in range(n_trials)]).mean(axis=0)
+    pkd = theta + model.alpha[None, :]
+    return pkd / pkd.sum(axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def rtlda_infer_dense(model: RTLDAModel, word_ids, n_iters: int = 5):
+    """Dense O(K)-per-token RT-LDA (the Gibbs kernel with temperature=0) —
+    the baseline that Fig. 5A compares the sparse path against."""
+    B, Ld = word_ids.shape
+    K = model.alpha.shape[0]
+    valid = word_ids >= 0
+    w = jnp.where(valid, word_ids, 0)
+    rows = model.pvk[w]                                   # [B, Ld, K]
+    z = model.r_topic[w]
+
+    def step(z, _):
+        theta = jax.vmap(
+            lambda zr, vr: jnp.zeros((K,), jnp.float32).at[zr].add(vr)
+        )(z, valid.astype(jnp.float32))                   # [B, K]
+        self_oh = jax.nn.one_hot(z, K) * valid[..., None]
+        score = rows * (theta[:, None, :] - self_oh + model.alpha[None, None, :])
+        z_new = jnp.argmax(score, axis=-1).astype(jnp.int32)
+        return jnp.where(valid, z_new, 0), None
+
+    z, _ = jax.lax.scan(step, z, None, length=n_iters)
+    theta = jax.vmap(
+        lambda zr, vr: jnp.zeros((K,), jnp.float32).at[zr].add(vr)
+    )(z, valid.astype(jnp.float32))
+    pkd = theta + model.alpha[None, :]
+    return pkd / pkd.sum(axis=1, keepdims=True)

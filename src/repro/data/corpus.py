@@ -1,0 +1,290 @@
+"""Corpus containers, §4.1 preprocessing, and Peacock shard/segment layout.
+
+Host-side (numpy) data plumbing:
+
+  * ``preprocess``       — the paper's five SOSO cleaning steps.
+  * ``vocab_placement``  — PLDA+-style weighted round-robin word→vocab-shard
+                           assignment (paper §3.1.3): sort words by frequency
+                           descending, always assign to the lightest shard.
+  * ``shard_corpus``     — partition documents into data shards and each shard's
+                           tokens into per-vocab-shard sub-blocks of one common
+                           capacity (static shapes for the TPU ring sampler);
+                           pad with word_id = -1 sentinels.
+  * ``Segments``         — outer corpus segments for bigger-than-memory corpora
+                           (LoadShard/SaveShard of Fig. 3 ≙ host<->device swaps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Corpus:
+    """Token-level corpus. Tokens of one document are contiguous."""
+
+    word_ids: np.ndarray   # [N] int32
+    doc_ids: np.ndarray    # [N] int32, sorted ascending
+    n_docs: int
+    vocab_size: int
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.word_ids.shape[0])
+
+    def doc_lengths(self) -> np.ndarray:
+        return np.bincount(self.doc_ids, minlength=self.n_docs)
+
+
+def corpus_from_docs(docs: Sequence[np.ndarray], vocab_size: int) -> Corpus:
+    word_ids = np.concatenate([np.asarray(d, np.int32) for d in docs]) if docs else np.zeros(0, np.int32)
+    doc_ids = np.concatenate(
+        [np.full(len(d), i, np.int32) for i, d in enumerate(docs)]
+    ) if docs else np.zeros(0, np.int32)
+    return Corpus(word_ids, doc_ids, len(docs), vocab_size)
+
+
+def preprocess(
+    docs: List[np.ndarray],
+    vocab_size: int,
+    min_word_freq: int = 2,
+    max_word_fraction: float = 0.2,
+    drop_single_word_docs: bool = True,
+    dedup_docs: bool = True,
+):
+    """Paper §4.1 — the five preprocessing steps, in order:
+
+    1. tokenize + count word frequencies (input is already token ids),
+    2. remove low-frequency words (likely typos),
+    3. remove very-high-frequency words (common words dominate topics [23]),
+    4. de-duplicate identical documents (keep one appearance),
+    5. drop single-word documents (no co-occurrence signal).
+
+    Returns (Corpus with a compacted vocabulary, old→new vocab id map).
+    """
+    freq = np.zeros(vocab_size, np.int64)
+    for d in docs:
+        np.add.at(freq, d, 1)
+    total = freq.sum()
+    keep = (freq >= min_word_freq) & (freq <= max_word_fraction * max(total, 1))
+    remap = np.full(vocab_size, -1, np.int64)
+    remap[keep] = np.arange(int(keep.sum()))
+
+    seen = set()
+    out_docs = []
+    for d in docs:
+        nd = remap[d]
+        nd = nd[nd >= 0].astype(np.int32)
+        if drop_single_word_docs and len(nd) < 2:
+            continue
+        if dedup_docs:
+            key = nd.tobytes()
+            if key in seen:
+                continue
+            seen.add(key)
+        out_docs.append(nd)
+    return corpus_from_docs(out_docs, int(keep.sum())), remap
+
+
+def vocab_placement(word_freq: np.ndarray, n_shards: int):
+    """Weighted round-robin word→shard placement (paper §3.1.3, PLDA+ [17]).
+
+    Returns (shard_of_word [V], local_row_of_word [V], rows_per_shard).
+    Guarantees near-equal total token frequency per shard, which is what makes
+    the ring sub-blocks (and therefore the static capacity) balanced.
+    """
+    V = word_freq.shape[0]
+    order = np.argsort(-word_freq, kind="stable")
+    shard_of = np.zeros(V, np.int32)
+    local_of = np.zeros(V, np.int32)
+    load = np.zeros(n_shards, np.int64)
+    fill = np.zeros(n_shards, np.int32)
+    for w in order:
+        s = int(np.argmin(load))
+        shard_of[w] = s
+        local_of[w] = fill[s]
+        fill[s] += 1
+        load[s] += int(word_freq[w]) + 1  # +1 keeps zero-freq words spread too
+    return shard_of, local_of, int(fill.max())
+
+
+@dataclasses.dataclass
+class ShardedCorpus:
+    """Static-shape ring layout: [n_data_shards, n_vocab_shards, cap] arrays.
+
+    ``word_local`` holds the row index within the owning vocab shard (-1 = pad);
+    ``doc_local`` the document index within the data shard; ``uid`` a globally
+    unique uint32 token id (the counter-based RNG key, stable across layouts).
+    """
+
+    word_local: np.ndarray   # [S, M, cap] int32, -1 padding
+    doc_local: np.ndarray    # [S, M, cap] int32
+    uid: np.ndarray          # [S, M, cap] uint32
+    z0: np.ndarray           # [S, M, cap] int32 initial assignments (pad: 0)
+    shard_of_word: np.ndarray    # [V] int32
+    local_of_word: np.ndarray    # [V] int32
+    rows_per_shard: int
+    docs_per_shard: int
+    n_data_shards: int
+    n_vocab_shards: int
+    vocab_size: int
+    n_real_tokens: int
+
+
+def shard_corpus(
+    corpus: Corpus,
+    n_data_shards: int,
+    n_vocab_shards: int,
+    n_topics: int,
+    seed: int = 0,
+    cap_multiple: int = 8,
+    placement=None,
+    min_cap: int = 0,
+    min_docs_per_shard: int = 0,
+) -> ShardedCorpus:
+    """Shuffle docs (paper: randomize to balance blocks), round-robin them to data
+    shards, split each shard's tokens by vocab shard, pad to one capacity.
+
+    ``placement`` — optional shared (shard_of, local_of, rows) so that multiple
+    segments / pod partitions agree on one vocabulary layout (phi shards must be
+    stable across them). ``min_cap``/``min_docs_per_shard`` force common static
+    shapes across partitions.
+    """
+    rng = np.random.default_rng(seed)
+    if placement is None:
+        freq = np.bincount(corpus.word_ids, minlength=corpus.vocab_size)
+        shard_of, local_of, rows = vocab_placement(freq, n_vocab_shards)
+    else:
+        shard_of, local_of, rows = placement
+
+    doc_perm = rng.permutation(corpus.n_docs)
+    data_shard_of_doc = np.empty(corpus.n_docs, np.int32)
+    doc_local_of_doc = np.empty(corpus.n_docs, np.int32)
+    for pos, d in enumerate(doc_perm):
+        data_shard_of_doc[d] = pos % n_data_shards
+        doc_local_of_doc[d] = pos // n_data_shards
+    docs_per_shard = max(int(np.ceil(corpus.n_docs / n_data_shards)), min_docs_per_shard, 1)
+
+    tok_data_shard = data_shard_of_doc[corpus.doc_ids]
+    tok_vocab_shard = shard_of[corpus.word_ids]
+
+    counts = np.zeros((n_data_shards, n_vocab_shards), np.int64)
+    np.add.at(counts, (tok_data_shard, tok_vocab_shard), 1)
+    cap = max(int(counts.max()), min_cap)
+    cap = ((cap + cap_multiple - 1) // cap_multiple) * cap_multiple
+    cap = max(cap, cap_multiple)
+
+    S, M = n_data_shards, n_vocab_shards
+    word_local = np.full((S, M, cap), -1, np.int32)
+    doc_local = np.zeros((S, M, cap), np.int32)
+    uid = np.zeros((S, M, cap), np.uint32)
+    z0 = np.zeros((S, M, cap), np.int32)
+
+    fill = np.zeros((S, M), np.int64)
+    z_init = rng.integers(0, n_topics, corpus.n_tokens).astype(np.int32)
+    for t in range(corpus.n_tokens):
+        s = tok_data_shard[t]
+        m = tok_vocab_shard[t]
+        p = fill[s, m]
+        word_local[s, m, p] = local_of[corpus.word_ids[t]]
+        doc_local[s, m, p] = doc_local_of_doc[corpus.doc_ids[t]]
+        uid[s, m, p] = t
+        z0[s, m, p] = z_init[t]
+        fill[s, m] += 1
+
+    return ShardedCorpus(
+        word_local=word_local, doc_local=doc_local, uid=uid, z0=z0,
+        shard_of_word=shard_of, local_of_word=local_of,
+        rows_per_shard=rows, docs_per_shard=docs_per_shard,
+        n_data_shards=S, n_vocab_shards=M, vocab_size=corpus.vocab_size,
+        n_real_tokens=corpus.n_tokens,
+    )
+
+
+def pad_corpus(word_ids: np.ndarray, doc_ids: np.ndarray, multiple: int):
+    """Pad flat token arrays with word_id=-1 sentinels to a block multiple."""
+    pad = (-len(word_ids)) % multiple
+    return (
+        np.pad(word_ids, (0, pad), constant_values=-1).astype(np.int32),
+        np.pad(doc_ids, (0, pad), constant_values=0).astype(np.int32),
+    )
+
+
+@dataclasses.dataclass
+class Segments:
+    """Outer segmentation for bigger-than-device-memory corpora.
+
+    Mirrors Fig. 3/4: the epoch driver iterates segments, loading each segment's
+    sharded arrays to device (LoadShard), running the ring epoch, and writing the
+    updated z back to host (SaveShard). Segment boundaries are document-aligned.
+    """
+
+    segments: List[ShardedCorpus]
+
+    def __iter__(self) -> Iterator[ShardedCorpus]:
+        return iter(self.segments)
+
+    def __len__(self) -> int:
+        return len(self.segments)
+
+
+def segment_corpus(
+    corpus: Corpus, n_segments: int, n_data_shards: int, n_vocab_shards: int,
+    n_topics: int, seed: int = 0,
+) -> Segments:
+    """Split documents round-robin into segments, shard each independently.
+
+    All segments share one global vocab placement so that phi shards are stable
+    across segments (re-derived from the full-corpus frequency).
+    """
+    if n_segments == 1:
+        return Segments([shard_corpus(corpus, n_data_shards, n_vocab_shards, n_topics, seed)])
+    # one global vocab placement for every segment (phi shards must be stable)
+    freq = np.bincount(corpus.word_ids, minlength=corpus.vocab_size)
+    placement = vocab_placement(freq, n_vocab_shards)
+    segs = []
+    for g in range(n_segments):
+        mask = (corpus.doc_ids % n_segments) == g
+        w = corpus.word_ids[mask]
+        d = corpus.doc_ids[mask]
+        # compact doc ids within the segment
+        uniq, inv = np.unique(d, return_inverse=True)
+        sub = Corpus(w, inv.astype(np.int32), len(uniq), corpus.vocab_size)
+        segs.append(shard_corpus(sub, n_data_shards, n_vocab_shards, n_topics,
+                                 seed + g, placement=placement))
+    return Segments(segs)
+
+
+def shard_corpus_pods(
+    corpus: Corpus,
+    n_pods: int,
+    n_data_shards: int,
+    n_vocab_shards: int,
+    n_topics: int,
+    seed: int = 0,
+) -> List[ShardedCorpus]:
+    """Partition documents across Peacock configurations (pods), with one shared
+    vocab placement and common static shapes (cap, docs_per_shard) across pods."""
+    freq = np.bincount(corpus.word_ids, minlength=corpus.vocab_size)
+    placement = vocab_placement(freq, n_vocab_shards)
+    subs = []
+    for p in range(n_pods):
+        mask = (corpus.doc_ids % n_pods) == p
+        w = corpus.word_ids[mask]
+        d = corpus.doc_ids[mask]
+        uniq, inv = np.unique(d, return_inverse=True)
+        subs.append(Corpus(w, inv.astype(np.int32), len(uniq), corpus.vocab_size))
+    # first pass to learn the max shapes, second to build with common shapes
+    probe = [
+        shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + p, placement=placement)
+        for p, s in enumerate(subs)
+    ]
+    cap = max(sc.word_local.shape[2] for sc in probe)
+    dps = max(sc.docs_per_shard for sc in probe)
+    return [
+        shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + p,
+                     placement=placement, min_cap=cap, min_docs_per_shard=dps)
+        for p, s in enumerate(subs)
+    ]

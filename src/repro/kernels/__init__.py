@@ -1,0 +1,1 @@
+# Pallas TPU kernels for compute hot-spots (validated in interpret mode on CPU).

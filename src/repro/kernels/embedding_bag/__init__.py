@@ -1,0 +1,4 @@
+from repro.kernels.embedding_bag import ops, ref
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+__all__ = ["ops", "ref", "embedding_bag_pallas"]

@@ -1,0 +1,106 @@
+"""EmbeddingBag Pallas TPU kernel — the recsys lookup hot path.
+
+Shape of the problem: tables are 10⁶–10⁹ rows × 16–128 dims in HBM; a bag is a
+small set of row ids (one per categorical field, or a padded multi-hot). The op
+is pure HBM-gather bandwidth: D·F bytes read per bag, negligible compute, so the
+kernel's job is to keep row DMAs in flight back-to-back.
+
+Design: ids (and optional per-lookup weights) arrive via **scalar prefetch**
+(SMEM — they index the DMA); the table stays in HBM (`memory_space=ANY`); each
+grid step owns one bag and runs a **double-buffered DMA pipeline**: while row f
+is being accumulated in the VPU, the copy of row f+1 is already in flight.
+
+The Gibbs kernel streams K tiles; this one streams table rows — together they
+cover the two memory-access regimes (dense tile scan / random gather) of the
+paper's two hot loops (sampling ↔ big-Φ lookup, recsys embedding ≙ Φ row fetch,
+cf. DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _bag_kernel(
+    ids_ref,      # [B, F] int32   (scalar prefetch, SMEM)
+    weights_ref,  # [B, F] f32     (scalar prefetch, SMEM)
+    table_ref,    # [V, D] f32/bf16 (HBM, ANY)
+    out_ref,      # [1, D]
+    row0,         # VMEM [1, D] double buffer slot 0
+    row1,         # VMEM [1, D] double buffer slot 1
+    sem0,
+    sem1,
+    *,
+    n_lookups: int,
+    combiner: str,
+):
+    b = pl.program_id(0)
+    slots = (row0, row1)
+    sems = (sem0, sem1)
+
+    def start(f, slot):
+        idx = ids_ref[b, f]
+        pltpu.make_async_copy(
+            table_ref.at[pl.ds(idx, 1), :], slots[slot], sems[slot]
+        ).start()
+
+    def wait(f, slot):
+        idx = ids_ref[b, f]
+        pltpu.make_async_copy(
+            table_ref.at[pl.ds(idx, 1), :], slots[slot], sems[slot]
+        ).wait()
+
+    start(0, 0)
+
+    def body(f, acc):
+        slot = jax.lax.rem(f, 2)
+
+        @pl.when(f + 1 < n_lookups)
+        def _prefetch():
+            jax.lax.switch(slot, [lambda: start(f + 1, 1), lambda: start(f + 1, 0)])
+
+        jax.lax.switch(slot, [lambda: wait(f, 0), lambda: wait(f, 1)])
+        w = weights_ref[b, f]
+        row = jax.lax.switch(slot, [lambda: row0[...], lambda: row1[...]])
+        return acc + w * row.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, n_lookups, body, jnp.zeros(out_ref.shape, jnp.float32))
+    if combiner == "mean":
+        denom = jax.lax.fori_loop(
+            0, n_lookups, lambda f, s: s + weights_ref[b, f], jnp.float32(0.0)
+        )
+        acc = acc / jnp.maximum(denom, 1e-9)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "interpret"))
+def embedding_bag_pallas(table, ids, weights=None, combiner: str = "sum",
+                         interpret: bool = False):
+    """table [V, D], ids [B, F] int32, weights [B, F] f32 (None → ones) → [B, D]."""
+    B, F = ids.shape
+    V, D = table.shape
+    if weights is None:
+        weights = jnp.ones((B, F), jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY)],
+        out_specs=pl.BlockSpec((1, D), lambda b, ids, w: (b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), table.dtype),
+            pltpu.VMEM((1, D), table.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_bag_kernel, n_lookups=F, combiner=combiner),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )
+    return fn(ids, weights.astype(jnp.float32), table)

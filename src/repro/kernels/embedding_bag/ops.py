@@ -1,0 +1,34 @@
+"""Dispatching wrapper for EmbeddingBag (padded + ragged forms)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import (
+    embedding_bag_padded_ref,
+    embedding_bag_ragged_ref,
+)
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def embedding_bag(table, ids, weights=None, combiner: str = "sum",
+                  *, force: str | None = None):
+    """Padded multi-hot lookup. force in {None, "pallas", "interpret", "ref"}."""
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode == "pallas":
+        return embedding_bag_pallas(table, ids, weights, combiner)
+    if mode == "interpret":
+        return embedding_bag_pallas(table, ids, weights, combiner, interpret=True)
+    return embedding_bag_padded_ref(table, ids, weights, combiner)
+
+
+def embedding_bag_ragged(table, flat_ids, segment_ids, n_bags: int,
+                         weights=None, combiner: str = "sum"):
+    """Ragged form — always take+segment_sum (XLA fuses this well already)."""
+    return embedding_bag_ragged_ref(table, flat_ids, segment_ids, n_bags, weights, combiner)

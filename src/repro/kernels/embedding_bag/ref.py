@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for EmbeddingBag.
+
+JAX has no native EmbeddingBag — the reference implements it with
+``jnp.take`` + ``jax.ops.segment_sum`` (ragged form) / weighted einsum (padded
+form). These are also the XLA fallback paths used by the recsys models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_padded_ref(table, ids, weights=None, combiner: str = "sum"):
+    """Padded multi-hot bags: ids [B, F] (padding rows carry weight 0).
+
+    out[b] = combine_f weights[b,f] * table[ids[b,f]]
+    """
+    rows = jnp.take(table, ids, axis=0)                     # [B, F, D]
+    if weights is None:
+        weights = jnp.ones(ids.shape, table.dtype)
+    out = jnp.einsum("bfd,bf->bd", rows, weights.astype(table.dtype))
+    if combiner == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        out = out / denom.astype(table.dtype)
+    return out
+
+
+def embedding_bag_ragged_ref(table, flat_ids, segment_ids, n_bags: int,
+                             weights=None, combiner: str = "sum"):
+    """Ragged bags: flat_ids [L], segment_ids [L] (which bag), via take+segment_sum."""
+    rows = jnp.take(table, flat_ids, axis=0)                # [L, D]
+    if weights is not None:
+        rows = rows * weights[:, None].astype(table.dtype)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if combiner == "mean":
+        ones = jnp.ones((flat_ids.shape[0],), table.dtype) if weights is None \
+            else weights.astype(table.dtype)
+        denom = jax.ops.segment_sum(ones, segment_ids, num_segments=n_bags)
+        out = out / jnp.maximum(denom, 1e-9)[:, None]
+    return out

@@ -1,0 +1,4 @@
+from repro.kernels.gibbs import ops, ref
+from repro.kernels.gibbs.kernel import gibbs_argmax_pallas
+
+__all__ = ["ops", "ref", "gibbs_argmax_pallas"]

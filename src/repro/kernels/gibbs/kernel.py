@@ -1,0 +1,155 @@
+"""Fused Gibbs-sampling / RT-LDA Pallas TPU kernel.
+
+One pass over the [T, K] collapsed-posterior plane per token block:
+
+    score[t, k] = log(phi[t,k] + beta) - log(psi[t,k] + V*beta)
+                + log(theta[t,k] + alpha[k]) + temperature * Gumbel(seed, uid_t, k)
+    z[t] = argmax_k score[t, k]
+
+temperature=1 → exact categorical draw from Eq. (1) (Gumbel-max);
+temperature=0 → the RT-LDA max operator of Eq. (2).
+
+Why a kernel: unfused XLA materializes three [T, K] log terms plus a [T, K]
+Gumbel array in HBM (4 extra round trips of the dominant operand). The kernel
+streams K in VMEM tiles with a running (best, argbest) carry, reading each of the
+three count planes exactly once and writing only [T] topic ids. The op is
+memory-bound (arithmetic intensity ≈ 1 flop/byte), so eliminating HBM traffic is
+the whole game.
+
+Tiling: grid = (T/Tt, K/Kt), K innermost ("arbitrary" semantics, sequential);
+default Tt=256, Kt=512 → 3 input tiles × 256×512 f32 = 1.5 MB live in VMEM
+(+double buffering ≈ 3 MB), lane-aligned (Kt % 128 == 0), sublane-aligned
+(Tt % 8 == 0). Scratch carries (best_val, best_idx) across K tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core import prng
+
+
+def _gibbs_kernel(
+    # inputs
+    phi_ref,     # [Tt, Kt] f32   self-excluded phi[w_t] rows
+    psi_ref,     # [Tt, Kt] or [1, Kt] f32 — psi rows (row form: fused variant)
+    theta_ref,   # [Tt, Kt] f32   self-excluded theta[d_t] rows
+    alpha_ref,   # [1, Kt]  f32
+    uid_ref,     # [Tt, 1]  uint32 RNG counters
+    meta_ref,    # [1, 4]   f32: (beta, V*beta, temperature, K_actual)
+    seed_ref,    # [1, 1]   uint32
+    # outputs
+    out_ref,     # [Tt, 1]  int32
+    # scratch (persists across the sequential K grid dimension)
+    best_val,    # [Tt, 1]  f32
+    best_idx,    # [Tt, 1]  int32
+    *,
+    block_k: int,
+):
+    j = pl.program_id(1)
+    n_k = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_val[...] = jnp.full_like(best_val[...], -jnp.inf)
+        best_idx[...] = jnp.zeros_like(best_idx[...])
+
+    beta = meta_ref[0, 0]
+    vb = meta_ref[0, 1]
+    temperature = meta_ref[0, 2]
+    k_actual = meta_ref[0, 3]
+    seed = seed_ref[0, 0]
+
+    kidx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, phi_ref.shape, 1)
+    score = (
+        jnp.log(phi_ref[...] + beta)
+        - jnp.log(psi_ref[...] + vb)
+        + jnp.log(theta_ref[...] + alpha_ref[...])
+    )
+    g = prng.gumbel(seed, uid_ref[...], kidx.astype(jnp.uint32))
+    score = score + temperature * g
+    score = jnp.where(kidx.astype(jnp.float32) < k_actual, score, -jnp.inf)
+
+    tile_best = jnp.max(score, axis=1, keepdims=True)                  # [Tt, 1]
+    tile_arg = jnp.argmax(score, axis=1).astype(jnp.int32)[:, None]    # lowest-k ties
+    take = tile_best > best_val[...]                                   # strict > : earlier tile wins ties
+    best_idx[...] = jnp.where(take, tile_arg + j * block_k, best_idx[...])
+    best_val[...] = jnp.where(take, tile_best, best_val[...])
+
+    @pl.when(j == n_k - 1)
+    def _emit():
+        out_ref[...] = best_idx[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vocab_size", "temperature", "block_t", "block_k", "interpret"),
+)
+def gibbs_argmax_pallas(
+    phi_rows,    # [T, K] f32
+    psi_rows,    # [T, K] f32
+    theta_rows,  # [T, K] f32
+    alpha,       # [K] f32
+    beta,        # [] f32
+    token_uid,   # [T] uint32
+    seed,        # [] uint32
+    vocab_size: int,
+    temperature: float = 1.0,
+    block_t: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    T, K = phi_rows.shape
+    t_pad = (-T) % block_t
+    k_pad = (-K) % block_k
+    pad2 = lambda x, cv=0.0: jnp.pad(x, ((0, t_pad), (0, k_pad)), constant_values=cv)
+
+    phi_p, theta_p = pad2(phi_rows), pad2(theta_rows)
+    if psi_rows.ndim == 1:
+        # fused variant: one psi row streamed like alpha — no [T, K] psi plane
+        psi_p = jnp.pad(psi_rows, (0, k_pad), constant_values=1.0)[None, :]
+        psi_block = (1, block_k)
+        psi_index = lambda i, j: (0, j)
+    else:
+        psi_p = pad2(psi_rows, 1.0)  # avoid log(0) in padding (masked anyway)
+        psi_block = (block_t, block_k)
+        psi_index = lambda i, j: (i, j)
+    alpha_p = jnp.pad(alpha, (0, k_pad))[None, :]
+    uid_p = jnp.pad(token_uid, (0, t_pad))[:, None]
+    Tp, Kp = phi_p.shape
+
+    meta = jnp.stack(
+        [jnp.float32(beta), jnp.float32(vocab_size) * beta,
+         jnp.float32(temperature), jnp.float32(K)]
+    ).reshape(1, 4)
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+
+    grid = (Tp // block_t, Kp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_gibbs_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec(psi_block, psi_index),
+            pl.BlockSpec((block_t, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_k), lambda i, j: (0, j)),
+            pl.BlockSpec((block_t, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, 1), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((block_t, 1), jnp.float32),
+            pltpu.VMEM((block_t, 1), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(phi_p, psi_p, theta_p, alpha_p, uid_p, meta, seed_arr)
+    return out[:T, 0]

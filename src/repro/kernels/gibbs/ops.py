@@ -1,0 +1,42 @@
+"""Dispatching wrapper for the fused Gibbs/RT-LDA op.
+
+On TPU the Pallas kernel runs compiled; everywhere else (this CPU container, unit
+tests) we run either the kernel under ``interpret=True`` or the jnp oracle — both
+produce identical results. The default for library callers is the oracle path on
+CPU (fast to trace) and the kernel on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gibbs.kernel import gibbs_argmax_pallas
+from repro.kernels.gibbs.ref import gibbs_argmax_ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def gibbs_argmax(
+    phi_rows, psi_rows, theta_rows, alpha, beta, token_uid, seed,
+    vocab_size: int, temperature: float = 1.0, *, force: str | None = None,
+):
+    """force in {None, "pallas", "interpret", "ref"}."""
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode == "pallas":
+        return gibbs_argmax_pallas(
+            phi_rows, psi_rows, theta_rows, alpha, beta, token_uid, seed,
+            vocab_size, temperature)
+    if mode == "interpret":
+        return gibbs_argmax_pallas(
+            phi_rows, psi_rows, theta_rows, alpha, beta, token_uid, seed,
+            vocab_size, temperature, interpret=True)
+    return gibbs_argmax_ref(
+        phi_rows, psi_rows, theta_rows, alpha, beta, token_uid, seed,
+        vocab_size, temperature)

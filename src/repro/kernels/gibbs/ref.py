@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused Gibbs/RT-LDA kernel.
+
+Evaluates exactly the same formula as ``kernel.py`` — including the counter-based
+Gumbel noise — so kernel vs ref agreement is bitwise on the integer RNG path and
+exact-argmax on the float path (ties broken toward the lower k in both).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import prng
+
+
+def gibbs_argmax_ref(
+    phi_rows: jnp.ndarray,    # [T, K] f32 — self-excluded phi[w_t] rows
+    psi_rows: jnp.ndarray,    # [T, K] f32 — self-excluded psi broadcast rows
+    theta_rows: jnp.ndarray,  # [T, K] f32 — self-excluded theta[d_t] rows
+    alpha: jnp.ndarray,       # [K] f32
+    beta: jnp.ndarray,        # [] f32
+    token_uid: jnp.ndarray,   # [T] uint32
+    seed: jnp.ndarray,        # [] uint32
+    vocab_size: int,
+    temperature: float = 1.0,
+) -> jnp.ndarray:
+    K = phi_rows.shape[1]
+    vb = vocab_size * beta
+    logits = (
+        jnp.log(phi_rows + beta)
+        - jnp.log(psi_rows + vb)
+        + jnp.log(theta_rows + alpha[None, :])
+    )
+    if temperature > 0.0:
+        g = prng.gumbel(seed, token_uid[:, None], jnp.arange(K, dtype=jnp.uint32)[None, :])
+        logits = logits + jnp.float32(temperature) * g
+    return jnp.argmax(logits, axis=1).astype(jnp.int32)

@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first init, and the production dry-run needs 512 host devices.
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh) cell.
+
+For each cell we record:
+  * compile success, memory_analysis (bytes/device proof-of-fit),
+  * cost_analysis (with the documented scan-undercount caveat),
+  * jaxpr-walker FLOPs/bytes (scan-aware; the roofline source),
+  * collective op mix parsed from compiled HLO,
+  * the three roofline terms (see benchmarks/roofline.py for the math).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+# TPU v5e-class constants (given by the assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+
+def run_cell(spec, shape: str, multi_pod: bool, skip_jaxpr: bool = False) -> dict:
+    import jax
+
+    from repro.dist import analysis
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(len(jax.devices()) if multi_pod else 256)
+    rec: dict = {
+        "arch": spec.arch_id, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+    }
+    try:
+        cell = spec.cell(shape, mesh, multi_pod)
+    except Exception as e:  # noqa: BLE001 — a failed build is a recorded bug
+        rec["status"] = "fail"
+        rec["error"] = f"build: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        return rec
+    if cell is None:
+        rec["status"] = "skip"
+        rec["reason"] = spec.skip.get(shape, "")
+        return rec
+    rec["note"] = cell.note
+    t0 = time.time()
+    try:
+        lowered = cell.lower()
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+
+        ma = compiled.memory_analysis()
+        rec["bytes_per_device"] = {
+            "arguments": int(ma.argument_size_in_bytes),
+            "outputs": int(ma.output_size_in_bytes),
+            "temps": int(ma.temp_size_in_bytes),
+            "aliased": int(ma.alias_size_in_bytes),
+            "code": int(ma.generated_code_size_in_bytes),
+        }
+        live = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        rec["live_bytes_per_device"] = int(live)
+        rec["fits_16gb_hbm"] = bool(live < 16e9)
+
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
+                           "bytes": float(ca.get("bytes accessed", 0.0))}
+
+        rec["collectives_hlo"] = analysis.collective_bytes(compiled.as_text())
+
+        if not skip_jaxpr:
+            t0 = time.time()
+            cost = analysis.trace_cost(cell.fn, *cell.args)
+            rec["jaxpr_cost"] = {"flops": cost.flops, "bytes": cost.bytes,
+                                 "trace_s": round(time.time() - t0, 1)}
+        rec["model_flops"] = cell.model_flops
+        rec["model_coll_bytes"] = cell.model_coll_bytes
+
+        # roofline terms (global work / aggregate machine rate)
+        flops = rec.get("jaxpr_cost", {}).get("flops", cell.model_flops)
+        mem_bytes = rec.get("jaxpr_cost", {}).get("bytes", 0.0)
+        coll = max(cell.model_coll_bytes,
+                   sum(rec["collectives_hlo"].values()) * chips)
+        terms = {
+            "compute_s": flops / (chips * PEAK_FLOPS),
+            "memory_s": mem_bytes / (chips * HBM_BW),
+            "collective_s": coll / (chips * ICI_BW),
+        }
+        rec["roofline"] = terms
+        rec["bottleneck"] = max(terms, key=terms.get)
+        rec["useful_flops_ratio"] = (cell.model_flops / flops) if flops else None
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — a failed cell is a recorded bug
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--skip-jaxpr", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import all_specs, get_arch
+
+    if args.all:
+        work = [(spec, shape) for spec in all_specs().values()
+                for shape in spec.shapes]
+    else:
+        spec = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        work = [(spec, s) for s in shapes]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for spec, shape in work:
+        for mp in meshes:
+            rec = run_cell(spec, shape, mp, skip_jaxpr=args.skip_jaxpr)
+            line = json.dumps(rec)
+            print(line, flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(line + "\n")
+            if rec["status"] == "ok":
+                print(
+                    f"# {rec['arch']}/{rec['shape']} [{rec['mesh']}] OK "
+                    f"compile={rec['compile_s']}s live/dev="
+                    f"{rec['live_bytes_per_device']/1e9:.2f}GB "
+                    f"bottleneck={rec['bottleneck']}", flush=True)
+            elif rec["status"] == "skip":
+                print(f"# {rec['arch']}/{rec['shape']} SKIP: {rec['reason']}",
+                      flush=True)
+            else:
+                print(f"# {rec['arch']}/{rec['shape']} [{rec['mesh']}] FAIL: "
+                      f"{rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

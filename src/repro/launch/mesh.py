@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; (2,16,16) = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(n_data: int = 4, n_model: int = 2, n_pod: int | None = None):
+    """Small host-device meshes for subprocess tests."""
+    if n_pod:
+        return jax.make_mesh(
+            (n_pod, n_data, n_model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

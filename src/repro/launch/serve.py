@@ -1,0 +1,67 @@
+"""Serving driver: batched RT-LDA inference loop (paper §3.2/§5.1).
+
+    PYTHONPATH=src python -m repro.launch.serve --batch 256 --steps 10
+
+Trains a quick model (or loads a checkpoint), builds the R cache, then runs a
+continuous batched serving loop with latency/QPS reporting — the structure of
+Peacock's backend inference servers (Fig. 5A's measurement loop).
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--topics", type=int, default=32)
+    ap.add_argument("--vocab", type=int, default=600)
+    ap.add_argument("--n-trials", type=int, default=2)
+    ap.add_argument("--query-len", type=int, default=8)
+    args = ap.parse_args()
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gibbs, lda, rtlda, features
+    from repro.data import corpus as corpus_mod, synthetic
+    from repro.serving.server import BatchingServer
+
+    corpus, _ = synthetic.lda_corpus(seed=0, n_docs=1500, n_topics=20,
+                                     vocab_size=args.vocab, doc_len_mean=9)
+    wi, di = corpus_mod.pad_corpus(corpus.word_ids, corpus.doc_ids, 512)
+    valid = wi >= 0
+    state = lda.init_state(jax.random.key(0), jnp.array(wi[valid]),
+                           args.topics, args.vocab)
+    z = np.zeros(len(wi), np.int32)
+    z[valid] = np.asarray(state.z)
+    state = lda.LDAState(state.phi, state.psi, jnp.array(z), state.alpha,
+                         state.beta)
+    for it in range(25):
+        state = gibbs.gibbs_epoch(state, jnp.array(wi), jnp.array(di),
+                                  corpus.n_docs, args.vocab,
+                                  seed=it * 13 + 1, block_size=512)
+    model = rtlda.build_model(state.phi, state.beta, state.alpha)
+    server = BatchingServer(model, batch=args.batch,
+                            query_len=args.query_len,
+                            n_trials=args.n_trials)
+
+    rng = np.random.default_rng(1)
+    lats = []
+    for step in range(args.steps):
+        qc, _ = synthetic.lda_corpus(seed=500 + step, n_docs=args.batch,
+                                     n_topics=20, vocab_size=args.vocab,
+                                     query_like=True)
+        reqs = [qc.word_ids[qc.doc_ids == d] for d in range(qc.n_docs)]
+        t0 = time.perf_counter()
+        out = server.infer(reqs)
+        lats.append(time.perf_counter() - t0)
+    lat = np.array(lats[1:]) * 1e3
+    print(f"batch={args.batch} trials={args.n_trials}: "
+          f"{lat.mean():.1f} ms/batch, {args.batch/(lat.mean()/1e3):,.0f} QPS, "
+          f"p99 {np.quantile(lat, 0.99):.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

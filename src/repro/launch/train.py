@@ -1,0 +1,157 @@
+"""Production training driver for peacock-lda (the paper's kind of workload).
+
+    PYTHONPATH=src python -m repro.launch.train --docs 3000 --topics 32 \
+        --epochs 20 --data-shards 2 --model-shards 2 --pods 1
+
+Drives the full stack end to end: corpus preprocessing → vocab placement →
+ring-sharded segments → distributed Gibbs epochs (hierarchical across pods if
+--pods > 1) → asymmetric-α optimization → periodic checkpoints (per pod) →
+final topic de-duplication → RT-LDA model export. Supports --resume (restores
+the latest complete checkpoint, fault-recovery path §3.1.4) and --kill-at
+(simulates a mid-run failure for the recovery demo).
+
+On this CPU container device counts come from XLA host devices; on a real
+cluster the same code runs under jax.distributed with the production mesh
+(launch/mesh.py).
+"""
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=3000)
+    ap.add_argument("--vocab", type=int, default=800)
+    ap.add_argument("--topics", type=int, default=32)
+    ap.add_argument("--true-topics", type=int, default=20)
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--segments", type=int, default=1)
+    ap.add_argument("--data-shards", type=int, default=1)
+    ap.add_argument("--model-shards", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--agg-every", type=int, default=3)
+    ap.add_argument("--alpha-opt-from", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default="/tmp/peacock_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--kill-at", type=int, default=-1,
+                    help="simulate a failure after this epoch (exit 17)")
+    ap.add_argument("--package-len", type=int, default=0)
+    args = ap.parse_args()
+
+    n_dev_needed = args.pods * args.data_shards * args.model_shards
+    if "XLA_FLAGS" not in os.environ and n_dev_needed > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_dev_needed}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core import dedup, distributed as dist, hierarchy, lda, rtlda
+    from repro.data import corpus as corpus_mod, synthetic
+
+    # ------------------------------ data ------------------------------------
+    corpus, truth = synthetic.lda_corpus(
+        seed=0, n_docs=args.docs, n_topics=args.true_topics,
+        vocab_size=args.vocab, doc_len_mean=8)
+    print(f"[data] {corpus.n_docs} docs / {corpus.n_tokens} tokens / "
+          f"V={corpus.vocab_size}")
+
+    K = args.topics
+    M = args.data_shards * args.model_shards
+    multi_pod = args.pods > 1
+    if multi_pod:
+        mesh = jax.make_mesh((args.pods, args.data_shards, args.model_shards),
+                             ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        scs = corpus_mod.shard_corpus_pods(corpus, args.pods, M, M, K, seed=1)
+        state = hierarchy.init_pod_state(scs, K)
+        sc0 = scs[0]
+    else:
+        mesh = jax.make_mesh((args.data_shards, args.model_shards),
+                             ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        sc0 = corpus_mod.shard_corpus(corpus, M, M, K, seed=1)
+        state = dist.device_arrays(sc0, K)
+
+    cap = sc0.word_local.shape[2]
+    cfg = dist.RingConfig(
+        n_topics=K, vocab_size=corpus.vocab_size,
+        rows_per_shard=sc0.rows_per_shard, docs_per_shard=sc0.docs_per_shard,
+        cap=cap, package_len=args.package_len or cap, n_rounds=M)
+    if multi_pod:
+        epoch_fn = hierarchy.make_pod_ring_epoch(mesh, cfg)
+        agg_fn = hierarchy.make_aggregate(mesh)
+    else:
+        epoch_fn = dist.make_ring_epoch(mesh, cfg)
+
+    alpha = jnp.full((K,), 50.0 / K, jnp.float32)
+    beta = jnp.float32(0.01)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+
+    start_epoch = 0
+    ckpt_like = {"state": tuple(state), "alpha": alpha}
+    if args.resume:
+        restored = mgr.restore_latest(ckpt_like)
+        if restored is not None:
+            tree, meta = restored
+            state = tuple(jnp.asarray(x) for x in tree["state"])
+            alpha = jnp.asarray(tree["alpha"])
+            start_epoch = meta["step"]
+            print(f"[recovery] resumed from epoch {start_epoch} "
+                  f"(deterministic replay covers the gap)")
+
+    # --------------------------- training loop ------------------------------
+    phi_ref = psi_ref = None
+    if multi_pod:
+        phi_ref, psi_ref = jnp.copy(state[0]), jnp.copy(state[1])
+    t0 = time.time()
+    for ep in range(start_epoch, args.epochs):
+        state = tuple(epoch_fn(*state, alpha, beta, jnp.uint32(ep * 131 + 7)))
+        if multi_pod and (ep + 1) % args.agg_every == 0:
+            phi, psi = agg_fn(state[0], state[1], phi_ref, psi_ref)
+            state = (phi, psi) + state[2:]
+            phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
+        if ep >= args.alpha_opt_from:
+            # coordinator: Ω_kn + doc-length histograms → Minka fixed point
+            z = state[5][0] if multi_pod else state[5]
+            dl_ = state[3][0] if multi_pod else state[3]
+            wl_ = state[2][0] if multi_pod else state[2]
+            omega = dedup.topic_count_histogram(
+                dl_.reshape(-1), z.reshape(-1),
+                (wl_ >= 0).reshape(-1), cfg.docs_per_shard * M, K)
+            hist = dedup.doc_length_histogram(jnp.array(corpus.doc_lengths()))
+            alpha = dedup.optimize_alpha(alpha, omega, hist, n_iters=3)
+        if (ep + 1) % args.ckpt_every == 0:
+            mgr.save(ep + 1, {"state": tuple(state), "alpha": alpha},
+                     pod=None)
+            print(f"[ckpt] epoch {ep+1} saved")
+        if ep + 1 == args.kill_at:
+            print(f"[failure-sim] killing run after epoch {ep+1}; "
+                  f"restart with --resume")
+            raise SystemExit(17)
+        phi0 = state[0][0] if multi_pod else state[0]
+        psi0 = state[1][0] if multi_pod else state[1]
+        ll = float(lda.word_log_likelihood(
+            jnp.asarray(dist.gather_phi(phi0, sc0, K)), psi0, beta))
+        print(f"epoch {ep+1:3d}/{args.epochs}  LL {ll:,.0f}  "
+              f"({time.time()-t0:.1f}s)")
+
+    # ----------------------- dedup + serving export -------------------------
+    phi0 = state[0][0] if multi_pod else state[0]
+    psi0 = state[1][0] if multi_pod else state[1]
+    phi_full = jnp.asarray(dist.gather_phi(phi0, sc0, K))
+    frac = dedup.duplicate_fraction(phi_full, beta, 0.5)
+    cl, ncl = dedup.cluster_topics(phi_full, beta, l1_threshold=0.3)
+    phi_m, psi_m, alpha_m = dedup.merge_topics(phi_full, psi0, alpha, cl, ncl)
+    model = rtlda.build_model(jnp.asarray(phi_m), beta, jnp.asarray(alpha_m))
+    print(f"[dedup] duplicate fraction {frac:.2f}; {K} → {ncl} topics")
+    print(f"[export] RT-LDA model ready: V={model.pvk.shape[0]} "
+          f"K={model.pvk.shape[1]}")
+
+
+if __name__ == "__main__":
+    main()

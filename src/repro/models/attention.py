@@ -1,0 +1,174 @@
+"""Attention: chunked online-softmax (flash-style, pure XLA) + decode attention.
+
+Why not a Pallas flash kernel: the dry-run must ``.lower().compile()`` every
+(arch × shape × mesh) cell on the CPU host platform, where TPU Pallas cannot
+lower; and this paper's hot loops are the Gibbs sampler and embedding fetch,
+not attention. The chunked XLA formulation below has the same O(S) memory as
+flash (online max/denominator over KV chunks) and exact causal block
+scheduling (q-chunk i only visits kv-chunks 0..i — no masked-out FLOPs beyond
+the diagonal chunk), so the roofline compute term is honest.
+
+Decode: the KV cache is **sequence-sharded** over the ``"model"`` axis (KV head
+counts of the assigned archs — 36/3/8/8/16 — rarely divide 16, sequence always
+does). Per-shard partial attention combines exactly via log-sum-exp, i.e.
+flash-decoding's split-K scheme mapped onto the mesh; under jit the combine is
+a small [B, H] all-reduce instead of gathering S.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+
+NEG_INF = -1e30
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embeddings. x [..., S, H, Dh], positions [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                              # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, KV, Dh] → [B, S, KV*n_rep, Dh] (GQA head sharing)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, dh)).reshape(
+        b, s, kv * n_rep, dh
+    )
+
+
+def flash_attention(
+    q: jax.Array,          # [B, Sq, H, Dh]
+    k: jax.Array,          # [B, Sk, KV, Dh]
+    v: jax.Array,          # [B, Sk, KV, Dh]
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Chunked online-softmax attention, O(chunk²) live memory, grouped GQA.
+
+    Outer loop over q-chunks is a Python unroll (static causal prefix per
+    chunk); inner loop over kv-chunks is a lax.scan with running (m, l, acc).
+    K/V stay at their native KV-head width — queries are reshaped to
+    [B, S, KV, G, Dh] and contracted against un-repeated K/V (§Perf: the
+    repeat_kv materialization cost G× the K/V traffic; see EXPERIMENTS.md).
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, _ = k.shape
+    n_rep = H // KV
+    scale = Dh ** -0.5
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad to chunk multiples; causal mask already excludes padded kv (kpos >= Sq
+    # positions are masked for every real query), padded q rows are sliced off
+    q_pad = (-Sq) % q_chunk
+    kv_pad = (-Sk) % kv_chunk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    Sq_p, Sk_p = Sq + q_pad, Sk + kv_pad
+    n_q = Sq_p // q_chunk
+
+    prefix_len = Sk - Sq  # already-attended prefix (prefill continuation); 0 in training
+
+    def q_block(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        # grouped layout: [B, qc, KV, G, Dh]
+        qs = (qs.astype(jnp.float32) * scale).reshape(
+            B, q_chunk, KV, n_rep, Dh)
+        if causal:
+            hi = min(prefix_len + (i + 1) * q_chunk, Sk_p)  # static per unrolled i
+        else:
+            hi = Sk_p
+        hi = ((hi + kv_chunk - 1) // kv_chunk) * kv_chunk
+        n_kv = hi // kv_chunk
+
+        def kv_block(carry, j):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, j * kv_chunk, kv_chunk, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, j * kv_chunk, kv_chunk, axis=1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qs, ks.astype(jnp.float32))
+            # anchor batch sharding: GSPMD loses it through scan+remat and
+            # replicates the backward score residuals (DESIGN/EXPERIMENTS note)
+            s = shd.constrain_batch_dim0(s)
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            if causal:
+                qpos = prefix_len + i * q_chunk + jnp.arange(q_chunk)
+                mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] < Sk)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            elif kv_pad:
+                s = jnp.where((kpos < Sk)[None, None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            # (bf16 p was tried for the PV contraction and REVERTED: it breaks
+            # the 2e-5 oracle tolerance — EXPERIMENTS.md §Perf/phi3.5 iter 2)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vs.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, n_rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, n_rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, n_rep, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), jnp.arange(n_kv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # [B, KV, G, qc, Dh]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, Dh)
+
+    out = jnp.concatenate([q_block(i) for i in range(n_q)], axis=1)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def cached_attention(
+    q: jax.Array,           # [B, C, H, Dh] — C=1 decode, C=chunk for prefill
+    k_cache: jax.Array,     # [B, S, KV, Dh]  (sequence-sharded over "model")
+    v_cache: jax.Array,     # [B, S, KV, Dh]  (the C new positions already written)
+    cache_len: jax.Array,   # [] int32 — valid positions BEFORE this chunk
+) -> jax.Array:
+    """Chunk attention over a (possibly sequence-sharded) KV cache.
+
+    One code path serves both decode (C=1) and chunked prefill (Sarathi-style):
+    query i attends cache positions ≤ cache_len + i. Written as a plain masked
+    softmax over S: under pjit with the cache sharded on S, XLA partitions the
+    contraction and inserts the LSE-combine collectives — flash-decoding
+    split-K where the sharding annotation IS the split.
+    """
+    B, C, H, Dh = q.shape
+    _, S, KV, _ = k_cache.shape
+    n_rep = H // KV
+    kk = _repeat_kv(k_cache, n_rep)
+    vv = _repeat_kv(v_cache, n_rep)
+    # keep K/V in their cache dtype (bf16) and accumulate in f32 on the MXU —
+    # an explicit .astype(f32) would materialize an f32 copy of the whole cache
+    s = jnp.einsum("bqhd,bkhd->bhqk", (q * Dh ** -0.5).astype(k_cache.dtype), kk,
+                   preferred_element_type=jnp.float32)   # [B, H, C, S]
+    qpos = cache_len + jnp.arange(C)
+    mask = jnp.arange(S)[None, None, None, :] <= qpos[None, None, :, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_cache.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode (C=1). ``cache_len`` counts positions INCLUDING the
+    freshly-written token, matching the original decode contract."""
+    return cached_attention(q, k_cache, v_cache, cache_len - 1)

@@ -1,0 +1,150 @@
+"""GraphSAGE [arXiv:1706.02216] — mean aggregator, full-batch and sampled.
+
+Message passing is built on ``jax.ops.segment_sum`` over an edge index (JAX has
+no CSR SpMM): for full-batch training the edge list is processed in chunks via
+``lax.scan`` so the gathered-message intermediate stays bounded
+([chunk, d] instead of [E, d] — ogbn-products has 61.8M edges). Sampled
+training uses padded neighbor matrices from ``repro.data.sampler`` (real
+uniform fanout sampling, the paper's 25-10 scheme).
+
+Peacock applicability: none at the core (no huge sharded parameter matrix) —
+see DESIGN.md §4. Distribution = data parallelism over nodes/edges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    aggregator: str = "mean"
+    fanouts: Tuple[int, ...] = (25, 10)     # sampling fanout per layer (outer→inner)
+    edge_chunk: int = 1_048_576             # full-batch message chunk
+
+
+def param_shapes(cfg: SAGEConfig) -> Dict[str, Any]:
+    shapes = {}
+    d_prev = cfg.d_in
+    for l in range(cfg.n_layers):
+        d_out = cfg.d_hidden
+        shapes[f"w_self_{l}"] = (d_prev, d_out)
+        shapes[f"w_neigh_{l}"] = (d_prev, d_out)
+        shapes[f"b_{l}"] = (d_out,)
+        d_prev = d_out
+    shapes["w_out"] = (d_prev, cfg.n_classes)
+    shapes["b_out"] = (cfg.n_classes,)
+    return shapes
+
+
+def init_params(cfg: SAGEConfig, key) -> Dict[str, jax.Array]:
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    out = {}
+    for k, (name, s) in zip(keys, sorted(shapes.items())):
+        if len(s) == 1:
+            out[name] = jnp.zeros(s, jnp.float32)
+        else:
+            out[name] = jax.random.normal(k, s) * (2.0 / s[0]) ** 0.5
+    return out
+
+
+def _mean_aggregate(h, src, dst, n_nodes: int, edge_chunk: int):
+    """mean_{(s,d) in E} h[s] into rows d — edge list chunked via scan."""
+    E = src.shape[0]
+    chunk = min(edge_chunk, E)
+    pad = (-E) % chunk
+    if pad:
+        src = jnp.pad(src, (0, pad), constant_values=0)
+        dst = jnp.pad(dst, (0, pad), constant_values=n_nodes)  # scatter to scratch row
+    n_chunks = src.shape[0] // chunk
+    srcs = src.reshape(n_chunks, chunk)
+    dsts = dst.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        acc, deg = carry
+        s, d = xs
+        msgs = h[s]                                           # [chunk, d]
+        acc = acc.at[d].add(msgs)
+        deg = deg.at[d].add(1.0)
+        return (acc, deg), None
+
+    acc0 = jnp.zeros((n_nodes + 1, h.shape[1]), h.dtype)
+    deg0 = jnp.zeros((n_nodes + 1,), jnp.float32)
+    (acc, deg), _ = jax.lax.scan(body, (acc0, deg0), (srcs, dsts))
+    return acc[:n_nodes] / jnp.maximum(deg[:n_nodes], 1.0)[:, None]
+
+
+def forward_full(cfg: SAGEConfig, params, x, src, dst):
+    """Full-batch forward. x [N, d_in]; edges (src, dst) [E]."""
+    h = x
+    n = x.shape[0]
+    for l in range(cfg.n_layers):
+        agg = _mean_aggregate(h, src, dst, n, cfg.edge_chunk)
+        h = h @ params[f"w_self_{l}"] + agg @ params[f"w_neigh_{l}"] + params[f"b_{l}"]
+        h = jax.nn.relu(h)
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=1, keepdims=True), 1e-6)
+    return h @ params["w_out"] + params["b_out"]
+
+
+def forward_sampled(cfg: SAGEConfig, params, feats: Sequence[jax.Array],
+                    neigh: Sequence[jax.Array]):
+    """Sampled-minibatch forward over bipartite blocks.
+
+    feats[l]  — [n_l, d_in] input features of layer-l nodes (l=0 are seeds;
+                feats[L] the outermost frontier);
+    neigh[l]  — [n_l, fanout_l] indices into level l+1's rows (-1 = padding).
+    """
+    L = cfg.n_layers
+    h = [f for f in feats]
+    for l in range(L - 1, -1, -1):
+        # aggregate level l+1 → level l, for every level at depth <= l
+        new_h = []
+        for depth in range(l + 1):
+            nb = neigh[depth]
+            valid = (nb >= 0)
+            rows = h[depth + 1][jnp.maximum(nb, 0)]           # [n_d, fan, d]
+            rows = rows * valid[..., None]
+            agg = rows.sum(axis=1) / jnp.maximum(valid.sum(axis=1, keepdims=True), 1.0)
+            hh = h[depth] @ params[f"w_self_{L-1-l}"] + agg @ params[f"w_neigh_{L-1-l}"] \
+                + params[f"b_{L-1-l}"]
+            hh = jax.nn.relu(hh)
+            hh = hh / jnp.maximum(jnp.linalg.norm(hh, axis=1, keepdims=True), 1e-6)
+            new_h.append(hh)
+        h = new_h
+    return h[0] @ params["w_out"] + params["b_out"]
+
+
+def loss_full(cfg: SAGEConfig, params, x, src, dst, labels, mask):
+    logits = forward_full(cfg, params, x, src, dst)
+    ll = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(ll, labels[:, None], axis=1)[:, 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_graph_pool(cfg: SAGEConfig, params, x, src, dst, graph_ids,
+                    n_graphs: int, labels):
+    """Graph classification over a disjoint union of small graphs (the
+    ``molecule`` shape): node logits mean-pooled per graph."""
+    node_logits = forward_full(cfg, params, x, src, dst)
+    summed = jax.ops.segment_sum(node_logits, graph_ids, num_segments=n_graphs)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],)), graph_ids,
+                                 num_segments=n_graphs)
+    logits = summed / jnp.maximum(counts, 1.0)[:, None]
+    ll = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(ll, labels[:, None], axis=1)[:, 0].mean()
+
+
+def loss_sampled(cfg: SAGEConfig, params, feats, neigh, labels):
+    logits = forward_sampled(cfg, params, feats, neigh)
+    ll = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(ll, labels[:, None], axis=1)[:, 0].mean()

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Dispatch: flatten (token, k) pairs, argsort by expert id, compute each pair's
+position within its expert via a cumulative count, drop pairs beyond capacity
+C = ceil(T·k/E · capacity_factor), scatter token activations into an [E, C, d]
+buffer, run a grouped einsum per expert, gather back and combine with router
+gates. All shapes static; backward is the transpose gather/scatter. (The
+GShard one-hot-einsum dispatch materializes [T, E, C] — prohibitive at
+E=60; sort-based is O(T·k) bookkeeping.)
+
+Sharding: expert weights are [E, d, f]; with E divisible by the model axis we
+shard dim 0 (expert parallelism — phi3.5's 16 experts on 16 devices), otherwise
+dim 2 (per-expert tensor parallelism — qwen2-moe's 60×1408). Chosen per config
+(``moe_shard``), cf. DESIGN.md §5.
+
+Shared experts (qwen2-moe): a dense SwiGLU over all tokens, summed with the
+routed output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    d_ff_shared: int = 0           # total shared-expert hidden width
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_shard: str = "expert"      # "expert" | "ffn"
+
+
+def moe_params_shape(cfg: MoEConfig, d_model: int):
+    """Shapes for one layer's MoE params (see transformer.init for dtypes)."""
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    shapes = {
+        "router": (d_model, e),
+        "w1": (e, d_model, f),
+        "w3": (e, d_model, f),
+        "w2": (e, f, d_model),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff_shared
+        shapes.update({"sw1": (d_model, fs), "sw3": (d_model, fs), "sw2": (fs, d_model)})
+    return shapes
+
+
+def moe_ffn(params, x: jax.Array, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """x [T, d] → (out [T, d], aux_loss []). T = flattened tokens."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = int(max(1, -(-T * k // E) * cfg.capacity_factor))
+
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)                # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch/GShard style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert.reshape(-1)].add(1.0) / (T * k)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    flat_e = expert.reshape(-1)                            # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), k)                  # token of each pair
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    g_sorted = flat_g[order]
+    # position of each pair within its expert
+    pos = jnp.arange(T * k) - jnp.searchsorted(e_sorted, e_sorted, side="left")
+    keep = pos < C
+    slot = e_sorted * C + pos                              # [T*k] in [0, E*C)
+    slot = jnp.where(keep, slot, E * C)                    # overflow → scratch row
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(x[t_sorted])
+    h = buf[: E * C].reshape(E, C, d)
+    if cfg.moe_shard == "expert":
+        # expert-parallel: tokens all-to-all to their expert's owner device
+        h = shd.constrain(h, P("model", None, None))
+    # ffn-TP mode: leave placement to GSPMD — the global argsort dispatch is
+    # inherently cross-shard; memory is bounded by the microbatch size instead
+    # (MoE train cells run micro_per_device=1; §Perf hillclimbs this further)
+
+    # ---- grouped expert SwiGLU ----------------------------------------------
+    a = jnp.einsum("ecd,edf->ecf", h, params["w1"])
+    b = jnp.einsum("ecd,edf->ecf", h, params["w3"])
+    hmid = jax.nn.silu(a) * b
+    out_e = jnp.einsum("ecf,efd->ecd", hmid, params["w2"]).reshape(E * C, d)
+
+    # ---- combine --------------------------------------------------------------
+    gathered = jnp.where(keep[:, None], out_e[jnp.minimum(slot, E * C - 1)], 0.0)
+    out = jnp.zeros((T, d), x.dtype).at[t_sorted].add(
+        (gathered.astype(jnp.float32) * g_sorted[:, None]).astype(x.dtype)
+    )
+
+    if cfg.n_shared_experts:
+        shared = (
+            jax.nn.silu(x @ params["sw1"]) * (x @ params["sw3"])
+        ) @ params["sw2"]
+        out = out + shared
+    return out, aux

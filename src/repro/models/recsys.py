@@ -1,0 +1,341 @@
+"""RecSys models: DLRM, xDeepFM, DIN, AutoInt — plus the sharded embedding path.
+
+This family is where Peacock's core idea transfers directly (DESIGN.md §4):
+the embedding tables are the Φ matrix — huge, sparse-accessed, keyed by ids —
+row-sharded over the ``"model"`` axis while the batch is sharded over
+``"data"``; a lookup is "rotate the query to the parameter shard", here one
+psum-combine because each id row lives on exactly one shard.
+
+All tables of a model are concatenated into ONE [total_rows, dim] array with
+per-field offsets: a single gather serves every field, and the row-sharding
+story is identical to Φ's vocab sharding (weighted round-robin ≙ the offsets
+interleaving hot fields across shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.embedding_bag import ops as bag_ops
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingSpec:
+    vocab_sizes: Tuple[int, ...]      # rows per field
+    dim: int
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def padded_rows(self) -> int:
+        """Row-pad to 256 so the table divides any mesh axis combination."""
+        return ((self.total_rows + 255) // 256) * 256
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]).astype(np.int32)
+
+
+def lookup(table: jax.Array, spec: EmbeddingSpec, ids: jax.Array) -> jax.Array:
+    """ids [B, F] per-field local ids → [B, F, D]. One fused gather.
+
+    The batch anchor keeps the gather output sharded like its consumers
+    (otherwise GSPMD replicates it — an extra [B, F, D] all-gather per step,
+    see EXPERIMENTS.md §Perf/dlrm)."""
+    from repro.dist import sharding as shd
+
+    flat = ids + jnp.asarray(spec.offsets)[None, :]
+    return shd.constrain_batch_dim0(jnp.take(table, flat, axis=0))
+
+
+def lookup_sharded(table_shard, spec: EmbeddingSpec, ids, axis: str = "model"):
+    """shard_map body: row-sharded lookup — mask + local gather + psum.
+
+    table_shard [rows/M, D] is this device's contiguous row slice; ids carry
+    GLOBAL (offset) row ids. Rows outside the local range contribute zeros;
+    the psum over ``axis`` reassembles exact rows (each id lives on one shard).
+    This is Peacock's data-to-model-shard rotation collapsed to one collective.
+    """
+    rows_local = table_shard.shape[0]
+    me = jax.lax.axis_index(axis)
+    lo = me * rows_local
+    flat = ids + jnp.asarray(spec.offsets)[None, :]
+    local = flat - lo
+    hit = (local >= 0) & (local < rows_local)
+    rows = jnp.take(table_shard, jnp.clip(local, 0, rows_local - 1), axis=0)
+    rows = jnp.where(hit[..., None], rows, 0)
+    return jax.lax.psum(rows, axis)
+
+
+def multi_hot_lookup(table, spec: EmbeddingSpec, ids, weights=None, force=None):
+    """Padded multi-hot bags per field → EmbeddingBag kernel (sum combiner)."""
+    B, F = ids.shape
+    flat = ids + jnp.asarray(spec.offsets)[None, :]
+    return bag_ops.embedding_bag(table, flat, weights, "sum", force=force)
+
+
+def _mlp_shapes(dims: Sequence[int]) -> Dict[str, tuple]:
+    out = {}
+    for i in range(len(dims) - 1):
+        out[f"w{i}"] = (dims[i], dims[i + 1])
+        out[f"b{i}"] = (dims[i + 1],)
+    return out
+
+
+def _mlp(params, prefix: str, x, n: int, act=jax.nn.relu, final_act=False):
+    for i in range(n):
+        x = x @ params[f"{prefix}w{i}"] + params[f"{prefix}b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def _init_from_shapes(shapes: Dict[str, tuple], key) -> Dict[str, jax.Array]:
+    keys = jax.random.split(key, len(shapes))
+    out = {}
+    for k, (name, s) in zip(keys, sorted(shapes.items())):
+        if name.split("/")[-1].startswith("b"):
+            out[name] = jnp.zeros(s, jnp.float32)
+        elif len(s) == 2 and name.endswith("table"):
+            out[name] = jax.random.normal(k, s) * (1.0 / np.sqrt(s[1]))
+        else:
+            fan_in = s[0] if len(s) >= 2 else 1
+            out[name] = jax.random.normal(k, s) * (2.0 / max(fan_in, 1)) ** 0.5
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DLRM (MLPerf config) [arXiv:1906.00091]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    embedding: EmbeddingSpec
+    n_dense: int = 13
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+
+    def param_shapes(self):
+        F, D = self.embedding.n_fields, self.embedding.dim
+        n_pairs = (F + 1) * F // 2
+        top_in = D + n_pairs
+        shapes = {"table": (self.embedding.padded_rows, D)}
+        shapes.update({f"bot/{k}": v for k, v in _mlp_shapes(self.bot_mlp).items()})
+        shapes.update({f"top/{k}": v for k, v in
+                       _mlp_shapes((top_in,) + self.top_mlp).items()})
+        return shapes
+
+
+def dlrm_forward(cfg: DLRMConfig, params, dense, sparse_ids, table_lookup=lookup):
+    emb = table_lookup(params["table"], cfg.embedding, sparse_ids)      # [B, F, D]
+    bot = _mlp(params, "bot/", dense, len(cfg.bot_mlp) - 1, final_act=True)  # [B, D]
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)                 # [B, F+1, D]
+    inter = jnp.einsum("bid,bjd->bij", z, z)
+    iu, ju = np.triu_indices(z.shape[1], k=1)
+    pairs = inter[:, iu, ju]                                            # [B, n_pairs]
+    x = jnp.concatenate([bot, pairs], axis=1)
+    return _mlp(params, "top/", x, len(cfg.top_mlp))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM (CIN) [arXiv:1803.05170]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str
+    embedding: EmbeddingSpec
+    cin_layers: Tuple[int, ...] = (200, 200, 200)
+    mlp: Tuple[int, ...] = (400, 400)
+
+    def param_shapes(self):
+        F, D = self.embedding.n_fields, self.embedding.dim
+        shapes = {"table": (self.embedding.padded_rows, D),
+                  "linear_w": (self.embedding.padded_rows,)}
+        h_prev = F
+        for i, h in enumerate(self.cin_layers):
+            shapes[f"cin_w{i}"] = (h, h_prev, F)
+            h_prev = h
+        shapes["cin_out"] = (int(sum(self.cin_layers)), 1)
+        dnn_dims = (F * D,) + self.mlp + (1,)
+        shapes.update({f"dnn/{k}": v for k, v in _mlp_shapes(dnn_dims).items()})
+        return shapes
+
+
+def xdeepfm_forward(cfg: XDeepFMConfig, params, sparse_ids, table_lookup=lookup):
+    spec = cfg.embedding
+    x0 = table_lookup(params["table"], spec, sparse_ids)                # [B, F, D]
+    # linear (first-order) term over raw feature ids
+    flat = sparse_ids + jnp.asarray(spec.offsets)[None, :]
+    linear = jnp.take(params["linear_w"], flat).sum(axis=1)
+    # CIN
+    xl = x0
+    pools = []
+    for i, h in enumerate(cfg.cin_layers):
+        xl = jnp.einsum("bid,bjd,hij->bhd", xl, x0, params[f"cin_w{i}"])
+        pools.append(xl.sum(axis=2))                                    # [B, h]
+    cin = jnp.concatenate(pools, axis=1) @ params["cin_out"]
+    # DNN
+    dnn = _mlp(params, "dnn/", x0.reshape(x0.shape[0], -1), len(cfg.mlp) + 1)
+    return linear + cin[:, 0] + dnn[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIN (target attention over user history) [arXiv:1706.06978]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str
+    n_items: int
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    mlp: Tuple[int, ...] = (200, 80)
+    n_context: int = 4       # extra context fields (user profile etc.)
+    context_vocab: int = 10_000
+
+    def param_shapes(self):
+        D = self.embed_dim
+        pad = lambda n: ((n + 255) // 256) * 256
+        shapes = {
+            "item_table": (pad(self.n_items), D),
+            "ctx_table": (pad(self.context_vocab * self.n_context), D),
+        }
+        attn_dims = (4 * D,) + self.attn_mlp + (1,)
+        shapes.update({f"attn/{k}": v for k, v in _mlp_shapes(attn_dims).items()})
+        mlp_in = D * (2 + self.n_context)
+        shapes.update({f"mlp/{k}": v for k, v in
+                       _mlp_shapes((mlp_in,) + self.mlp + (1,)).items()})
+        return shapes
+
+
+def din_forward(cfg: DINConfig, params, target_id, hist_ids, ctx_ids):
+    """target_id [B], hist_ids [B, S] (-1 pad), ctx_ids [B, n_context]."""
+    D = cfg.embed_dim
+    e_t = jnp.take(params["item_table"], target_id, axis=0)            # [B, D]
+    valid = hist_ids >= 0
+    e_h = jnp.take(params["item_table"], jnp.maximum(hist_ids, 0), axis=0)  # [B, S, D]
+    et_b = jnp.broadcast_to(e_t[:, None, :], e_h.shape)
+    a_in = jnp.concatenate([et_b, e_h, et_b - e_h, et_b * e_h], axis=-1)
+    a = _mlp(params, "attn/", a_in, len(cfg.attn_mlp) + 1,
+             act=jax.nn.sigmoid)[..., 0]                                # [B, S]
+    a = jnp.where(valid, a, 0.0)                                        # DIN: no softmax
+    user = jnp.einsum("bs,bsd->bd", a, e_h)
+    ctx_flat = ctx_ids + (jnp.arange(cfg.n_context) * cfg.context_vocab)[None, :]
+    ctx = jnp.take(params["ctx_table"], ctx_flat, axis=0).reshape(ctx_ids.shape[0], -1)
+    x = jnp.concatenate([user, e_t, ctx], axis=1)
+    return _mlp(params, "mlp/", x, len(cfg.mlp) + 1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# AutoInt (self-attention over field embeddings) [arXiv:1810.11921]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str
+    embedding: EmbeddingSpec
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+
+    def param_shapes(self):
+        F, D = self.embedding.n_fields, self.embedding.dim
+        shapes = {"table": (self.embedding.padded_rows, D)}
+        d_in = D
+        for l in range(self.n_attn_layers):
+            shapes[f"wq_{l}"] = (d_in, self.d_attn)
+            shapes[f"wk_{l}"] = (d_in, self.d_attn)
+            shapes[f"wv_{l}"] = (d_in, self.d_attn)
+            shapes[f"wres_{l}"] = (d_in, self.d_attn)
+            d_in = self.d_attn
+        shapes["out_w"] = (F * d_in, 1)
+        return shapes
+
+
+def autoint_forward(cfg: AutoIntConfig, params, sparse_ids, table_lookup=lookup):
+    x = table_lookup(params["table"], cfg.embedding, sparse_ids)        # [B, F, D]
+    H = cfg.n_heads
+    for l in range(cfg.n_attn_layers):
+        q = x @ params[f"wq_{l}"]
+        k = x @ params[f"wk_{l}"]
+        v = x @ params[f"wv_{l}"]
+        B, F, Da = q.shape
+        dh = Da // H
+        qh = q.reshape(B, F, H, dh)
+        kh = k.reshape(B, F, H, dh)
+        vh = v.reshape(B, F, H, dh)
+        s = jnp.einsum("bfhd,bghd->bhfg", qh, kh) / jnp.sqrt(dh)
+        att = jnp.einsum("bhfg,bghd->bfhd", jax.nn.softmax(s, axis=-1), vh)
+        x = jax.nn.relu(att.reshape(B, F, Da) + x @ params[f"wres_{l}"])
+    return (x.reshape(x.shape[0], -1) @ params["out_w"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring (the retrieval_cand shape): 1 query vs 10⁶ candidates
+# ---------------------------------------------------------------------------
+
+def retrieval_scores(user_vec: jax.Array, cand_table: jax.Array,
+                     top_k: int = 100, chunk: int = 131_072):
+    """user_vec [B, D] vs cand_table [N, D] → (scores, ids) of the global top-k.
+
+    Batched dot (not a loop): candidates are streamed in chunks with a running
+    top-k merge, so the [B, N] score plane never materializes at once.
+    """
+    B, D = user_vec.shape
+    N = cand_table.shape[0]
+    chunk = min(chunk, N)
+    pad = (-N) % chunk
+    if pad:
+        cand_table = jnp.pad(cand_table, ((0, pad), (0, 0)))
+    n_chunks = cand_table.shape[0] // chunk
+    cands = cand_table.reshape(n_chunks, chunk, D)
+
+    def body(carry, xs):
+        best_s, best_i = carry
+        cand, j = xs
+        s = user_vec @ cand.T                                           # [B, chunk]
+        ids = j * chunk + jnp.arange(chunk)
+        ids = jnp.broadcast_to(ids[None], s.shape)
+        s = jnp.where(ids < N, s, -jnp.inf)
+        all_s = jnp.concatenate([best_s, s], axis=1)
+        all_i = jnp.concatenate([best_i, ids], axis=1)
+        top_s, pos = jax.lax.top_k(all_s, best_s.shape[1])
+        top_i = jnp.take_along_axis(all_i, pos, axis=1)
+        return (top_s, top_i), None
+
+    init = (jnp.full((B, top_k), -jnp.inf), jnp.zeros((B, top_k), jnp.int32))
+    (s, i), _ = jax.lax.scan(body, init, (cands, jnp.arange(n_chunks)))
+    return s, i
+
+
+# ---------------------------------------------------------------------------
+# Shared loss / init
+# ---------------------------------------------------------------------------
+
+def bce_loss(logits, labels):
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def init_params(cfg, key) -> Dict[str, jax.Array]:
+    return _init_from_shapes(cfg.param_shapes(), key)

@@ -1,0 +1,281 @@
+"""Decoder-only LM family: dense (llama-style) + MoE, GQA, RoPE, RMSNorm,
+SwiGLU, optional qk-norm (qwen3). One implementation covers all five assigned
+LM architectures; layers are stacked and scanned (compile time independent of
+depth), with optional remat for training memory.
+
+Params are a plain dict pytree so sharding specs (dist/sharding.py) map onto
+names; everything is usable under jax.eval_shape for the allocation-free
+dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shd
+from repro.models import attention
+from repro.models.moe import MoEConfig, moe_ffn, moe_params_shape
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    loss_chunk: int = 512
+
+    vocab_pad_multiple: int = 256
+
+    @property
+    def padded_vocab(self) -> int:
+        """Megatron-style padded vocab so embedding rows divide any mesh axis."""
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for 6·N·D model FLOPs)."""
+        shapes = jax.tree.leaves(param_shapes(self),
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return int(sum(int(np.prod(s)) for s in shapes))
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k of n_experts + shared)."""
+        if self.moe is None:
+            return self.n_params
+        m = self.moe
+        expert_p = 3 * self.d_model * m.d_ff_expert
+        inactive = (m.n_experts - m.top_k) * expert_p * self.n_layers
+        return self.n_params - inactive
+
+
+def param_shapes(cfg: LMConfig) -> Dict[str, Any]:
+    L, d, V = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    H, KV, dh, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff
+    layers: Dict[str, tuple] = {
+        "ln1": (L, d), "ln2": (L, d),
+        "wq": (L, d, H * dh), "wk": (L, d, KV * dh), "wv": (L, d, KV * dh),
+        "wo": (L, H * dh, d),
+    }
+    if cfg.qk_norm:
+        layers.update({"qnorm": (L, dh), "knorm": (L, dh)})
+    if cfg.moe is None:
+        layers.update({"w1": (L, d, f), "w3": (L, d, f), "w2": (L, f, d)})
+    else:
+        for k, s in moe_params_shape(cfg.moe, d).items():
+            layers[f"moe_{k}"] = (L,) + s
+    shapes = {"embed": (V, d), "layers": layers, "ln_f": (d,)}
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (d, V)
+    return shapes
+
+
+def init_params(cfg: LMConfig, key: jax.Array, dtype=jnp.float32):
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(flat))
+    scale = 0.02
+    leaves = []
+    for k, s in zip(keys, flat):
+        if len(s) == 1 or (len(s) == 2 and s[0] == cfg.n_layers):  # norm scales
+            leaves.append(jnp.ones(s, dtype))
+        else:
+            leaves.append((jax.random.normal(k, s) * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _rms_norm(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    n = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (n * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _layer(cfg: LMConfig, lp, x, positions, kv_cache=None, cache_len=None):
+    """One transformer block. x [B, S, d].
+
+    Returns (x, (k_new, v_new)) — the fresh K/V for cache construction.
+    """
+    B, S, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = _rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (h @ lp["wq"]).reshape(B, S, H, dh)
+    k = (h @ lp["wk"]).reshape(B, S, KV, dh)
+    v = (h @ lp["wv"]).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = _rms_norm(q, lp["qnorm"], cfg.norm_eps)
+        k = _rms_norm(k, lp["knorm"], cfg.norm_eps)
+    q = attention.rope(q, positions, cfg.rope_theta)
+    k = attention.rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        att = attention.flash_attention(q, k, v, causal=True,
+                                        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    else:
+        k_c, v_c = kv_cache  # [B, Smax, KV, dh] with fresh k/v already inserted
+        att = attention.decode_attention(q, k_c, v_c, cache_len)
+    x = x + (att.reshape(B, S, H * dh) @ lp["wo"]).astype(x.dtype)
+
+    h = _rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is None:
+        ff = (jax.nn.silu(h @ lp["w1"]) * (h @ lp["w3"])) @ lp["w2"]
+        aux = jnp.float32(0.0)
+    else:
+        mp = {kk[len("moe_"):]: vv for kk, vv in lp.items() if kk.startswith("moe_")}
+        ff, aux = moe_ffn(mp, h.reshape(B * S, d), cfg.moe)
+        ff = ff.reshape(B, S, d)
+    return x + ff.astype(x.dtype), (k, v), aux
+
+
+def forward(cfg: LMConfig, params, tokens: jax.Array, return_kv: bool = False,
+            kv_constraint=None):
+    """tokens [B, S] → logits [B, S, V] (bf16 compute, f32 logits path chunked
+    by the loss). Scan over stacked layers.
+
+    ``kv_constraint`` (optional) reshards each layer's returned (k, v) — the
+    prefill path uses it to stack the cache directly in the decode layout
+    (sequence sharded over "model"), which otherwise overflows HBM at 32k.
+    """
+    B, S = tokens.shape
+    x = shd.constrain_batch_dim0(params["embed"].astype(cfg.dtype)[tokens])
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, kv, a = _layer(cfg, lp, x, positions)
+        x = shd.constrain_batch_dim0(x)
+        if return_kv and kv_constraint is not None:
+            kv = (kv_constraint(kv[0]), kv_constraint(kv[1]))
+        out = kv if return_kv else ()
+        return (x, aux + a), out
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), kvs = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    x = _rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if return_kv:
+        return x, head, aux, kvs
+    return x, head, aux
+
+
+def lm_loss(cfg: LMConfig, params, tokens, labels):
+    """Sequence-chunked cross entropy (never materializes [B, S, V] at once)."""
+    x, head, aux = forward(cfg, params, tokens)
+    B, S, d = x.shape
+    c = min(cfg.loss_chunk, S)
+    if S % c:  # pad to a chunk multiple with ignored (-1) labels
+        pad = c - S % c
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S += pad
+    xc = x.reshape(B, S // c, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, S // c, c).transpose(1, 0, 2)
+
+    def chunk(carry, xs):
+        xx, ll = xs
+        logits = (xx.astype(jnp.float32) @ head.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        valid = (ll >= 0).astype(jnp.float32)
+        return (carry[0] + ((lse - gold) * valid).sum(), carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0) + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def serve_step(cfg: LMConfig, params, tokens, cache, cache_len):
+    """Unified serving step: C=1 is decode, C>1 is one Sarathi-style chunked-
+    prefill step. tokens [B, C]; cache [L, B, Smax, KV, dh] ×2 (donated,
+    sequence-sharded over "model" at scale); cache_len [] int32 = #valid
+    positions before this chunk (the chunk is written at [cache_len, +C)).
+
+    Returns (next_tokens [B, 1], last-position logits [B, V], new_cache).
+    """
+    B, C = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]          # [B, C, d]
+    positions = jnp.broadcast_to((cache_len + jnp.arange(C))[None], (B, C))
+
+    def body(carry, xs):
+        x = carry
+        lp, k_c, v_c = xs
+
+        h = _rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = (h @ lp["wq"]).reshape(B, C, cfg.n_heads, cfg.d_head)
+        k = (h @ lp["wk"]).reshape(B, C, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ lp["wv"]).reshape(B, C, cfg.n_kv_heads, cfg.d_head)
+        if cfg.qk_norm:
+            q = _rms_norm(q, lp["qnorm"], cfg.norm_eps)
+            k = _rms_norm(k, lp["knorm"], cfg.norm_eps)
+        q = attention.rope(q, positions, cfg.rope_theta)
+        k = attention.rope(k, positions, cfg.rope_theta)
+        k_c = jax.lax.dynamic_update_slice_in_dim(k_c, k.astype(k_c.dtype), cache_len, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(v_c, v.astype(v_c.dtype), cache_len, axis=1)
+        att = attention.cached_attention(q, k_c, v_c, cache_len)
+        x = x + (att.reshape(B, C, cfg.n_heads * cfg.d_head) @ lp["wo"]).astype(x.dtype)
+
+        h = _rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            ff = (jax.nn.silu(h @ lp["w1"]) * (h @ lp["w3"])) @ lp["w2"]
+        else:
+            mp = {kk[len("moe_"):]: vv for kk, vv in lp.items() if kk.startswith("moe_")}
+            ff, _ = moe_ffn(mp, h.reshape(B * C, cfg.d_model), cfg.moe)
+            ff = ff.reshape(B, C, cfg.d_model)
+        return x + ff.astype(x.dtype), (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = _rms_norm(x[:, -1], params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return nxt, logits, {"k": k_new, "v": v_new}
+
+
+def decode_step(cfg: LMConfig, params, tokens, cache, cache_len):
+    """One-token decode (the C=1 special case of ``serve_step``)."""
+    return serve_step(cfg, params, tokens, cache, cache_len)
+
+
+def prefill(cfg: LMConfig, params, tokens, max_len: int, kv_constraint=None):
+    """Prefill: full forward, returning last-position logits + populated cache."""
+    B, S = tokens.shape
+    x, head, aux, kvs = forward(cfg, params, tokens, return_kv=True,
+                                kv_constraint=kv_constraint)
+    logits = x[:, -1].astype(jnp.float32) @ head.astype(jnp.float32)
+    k, v = kvs                                            # [L, B, S, KV, dh]
+    pad = max_len - S
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}

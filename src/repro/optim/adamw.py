@@ -1,0 +1,70 @@
+"""AdamW with global-norm clipping — minimal, pytree-generic, shard-friendly.
+
+Optimizer state is a pytree of the same structure as params, so sharding rules
+(FSDP/TP specs) propagate to m/v automatically. f32 master weights with bf16
+compute params are handled by the caller (train step casts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads, state, params):
+        as_dict = isinstance(state, dict)
+        if as_dict:  # dict states keep sharding-spec trees structurally simple
+            state = AdamWState(state["step"], state["m"], state["v"])
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            mhat = mm / c1
+            vhat = vv / c2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        new_state = {"step": step, "m": m, "v": v} if as_dict else AdamWState(
+            step=step, m=m, v=v)
+        return new_params, new_state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

@@ -1,0 +1,35 @@
+"""LR schedules. WSD (warmup–stable–decay) is MiniCPM's schedule [arXiv:2404.06395]."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(step, peak_lr: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, final_ratio: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup → constant plateau → exp decay.
+
+    MiniCPM's key property: the plateau lets checkpoints fork into a short decay
+    at any time (continuous pretraining), which is why it pairs with the
+    per-pod checkpointing story.
+    """
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = (step - warmup_steps - stable_steps) / jnp.maximum(decay_steps, 1)
+    decay = peak_lr * jnp.power(final_ratio, jnp.clip(t, 0.0, 1.0))
+    return jnp.where(
+        step < warmup_steps, warm,
+        jnp.where(step < warmup_steps + stable_steps, peak_lr, decay),
+    )
+
+
+def cosine(step, peak_lr: float, warmup_steps: int, total_steps: int,
+           final_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_ratio + (1 - final_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+
+def constant(step, peak_lr: float):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)

@@ -1,0 +1,102 @@
+"""Topic de-duplication: asymmetric prior fixed point + L1 clustering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dedup
+
+
+def test_omega_histogram_counts():
+    doc_ids = jnp.array([0, 0, 0, 1, 1, 2], jnp.int32)
+    z = jnp.array([1, 1, 0, 1, 2, 2], jnp.int32)
+    valid = jnp.ones(6, bool)
+    omega = dedup.topic_count_histogram(doc_ids, z, valid, 3, 4, max_count=8)
+    # topic 1: appears 2x in doc0, 1x in doc1 → omega[1,2]=1, omega[1,1]=1
+    assert int(omega[1, 2]) == 1 and int(omega[1, 1]) == 1
+    # topic 0: once in doc0
+    assert int(omega[0, 1]) == 1
+    # topic 2: once in doc1, once in doc2
+    assert int(omega[2, 1]) == 2
+    assert int(omega[:, 0].sum()) == 0
+
+
+def test_alpha_fixed_point_matches_direct_minka():
+    """Histogram-based update == direct per-document Minka update."""
+    from jax.scipy.special import digamma
+
+    rng = np.random.default_rng(0)
+    D, K = 60, 5
+    theta = rng.integers(0, 6, (D, K))
+    lengths = theta.sum(axis=1)
+    alpha0 = np.full(K, 0.7, np.float32)
+
+    # direct Minka fixed point (one iteration, per-document sums)
+    a = jnp.array(alpha0)
+    num = np.zeros(K)
+    for d in range(D):
+        # zero-count topics contribute ψ(α)−ψ(α) = 0, consistent with Ω_k0 = 0
+        num += np.asarray(digamma(theta[d] + a) - digamma(a))
+    den = float(sum(np.asarray(digamma(l + a.sum()) - digamma(a.sum()))
+                    for l in lengths))
+    direct = alpha0 * num / den
+
+    # histogram-based
+    doc_ids = np.repeat(np.arange(D), lengths)
+    z = np.concatenate([np.repeat(np.arange(K), theta[d]) for d in range(D)])
+    omega = dedup.topic_count_histogram(
+        jnp.array(doc_ids, jnp.int32), jnp.array(z, jnp.int32),
+        jnp.ones(len(z), bool), D, K, max_count=16)
+    dl = dedup.doc_length_histogram(jnp.array(lengths, jnp.int32))
+    ours = dedup.optimize_alpha(jnp.array(alpha0), omega, dl, n_iters=1)
+    np.testing.assert_allclose(np.asarray(ours), direct, rtol=1e-4)
+
+
+def test_alpha_optimization_concentrates_on_used_topics():
+    rng = np.random.default_rng(1)
+    D, K = 200, 8
+    # docs use topics 0-3 heavily, 4-7 almost never
+    theta = np.concatenate([rng.integers(2, 10, (D, 4)),
+                            rng.integers(0, 2, (D, 4))], axis=1)
+    doc_ids = np.repeat(np.arange(D), theta.sum(axis=1))
+    z = np.concatenate([np.repeat(np.arange(K), theta[d]) for d in range(D)])
+    omega = dedup.topic_count_histogram(
+        jnp.array(doc_ids, jnp.int32), jnp.array(z, jnp.int32),
+        jnp.ones(len(z), bool), D, K)
+    dl = dedup.doc_length_histogram(jnp.array(theta.sum(axis=1), jnp.int32))
+    alpha = dedup.optimize_alpha(jnp.full((K,), 1.0), omega, dl, n_iters=30)
+    a = np.asarray(alpha)
+    assert a[:4].mean() > 3 * a[4:].mean()   # prior mass follows usage
+    assert (a > 0).all()
+
+
+@given(k=st.integers(2, 10), dup=st.integers(1, 3), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_l1_merge_properties(k, dup, seed):
+    rng = np.random.default_rng(seed)
+    V = 40
+    base = rng.integers(0, 60, (V, k)).astype(np.int32)
+    # append `dup` exact duplicates of column 0
+    phi = np.concatenate([base] + [base[:, :1]] * dup, axis=1)
+    psi = phi.sum(axis=0)
+    alpha = np.full(phi.shape[1], 0.5, np.float32)
+    cl, ncl = dedup.cluster_topics(jnp.array(phi), jnp.float32(0.01),
+                                   l1_threshold=1e-6)
+    assert ncl <= k   # duplicates merged (maybe more if random cols collide)
+    phi_m, psi_m, alpha_m = dedup.merge_topics(phi, psi, alpha, cl, ncl)
+    assert int(np.asarray(phi_m).sum()) == int(phi.sum())       # mass conserved
+    assert int(np.asarray(psi_m).sum()) == int(psi.sum())
+    np.testing.assert_allclose(float(np.asarray(alpha_m).sum()),
+                               float(alpha.sum()), rtol=1e-5)
+    # merged phi columns still consistent with merged psi
+    assert (np.asarray(phi_m).sum(axis=0) == np.asarray(psi_m)).all()
+
+
+def test_duplicate_fraction_detects_duplicates():
+    rng = np.random.default_rng(2)
+    phi = rng.integers(0, 50, (60, 10)).astype(np.int32)
+    phi_dup = np.concatenate([phi, phi[:, :5]], axis=1)
+    f_clean = dedup.duplicate_fraction(jnp.array(phi), jnp.float32(0.01), 0.05)
+    f_dup = dedup.duplicate_fraction(jnp.array(phi_dup), jnp.float32(0.01), 0.05)
+    assert f_dup > f_clean
+    assert f_dup >= 10 / 15 - 1e-6   # at least the 10 involved columns

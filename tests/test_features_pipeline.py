@@ -1,0 +1,55 @@
+"""Topic features (Eq. 5) + pipeline model (Table 1)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features, pipeline
+
+
+def test_topk_features_match_dense():
+    rng = np.random.default_rng(0)
+    V, K, B = 40, 6, 5
+    pvk = rng.dirichlet(np.ones(V), K).T.astype(np.float32)   # [V, K] cols sum 1
+    pkd = rng.dirichlet(np.ones(K), B).astype(np.float32)
+    ids, w = features.word_likelihood_topk(jnp.array(pvk), jnp.array(pkd),
+                                           top_n=7)
+    pvd = pvk @ pkd.T                                          # [V, B]
+    for b in range(B):
+        expect = np.sort(pvd[:, b])[-7:][::-1]
+        np.testing.assert_allclose(np.asarray(w[b]), expect, rtol=1e-5)
+        np.testing.assert_allclose(pvd[np.asarray(ids[b]), b],
+                                   np.asarray(w[b]), rtol=1e-5)
+
+
+def test_cosine_similarity_normalized():
+    rng = np.random.default_rng(1)
+    a = jnp.array(rng.uniform(0.1, 1, (4, 8)).astype(np.float32))
+    s = features.cosine_topic_similarity(a, a)
+    np.testing.assert_allclose(np.asarray(jnp.diag(s)), 1.0, rtol=1e-5)
+    assert (np.asarray(s) <= 1.0 + 1e-5).all()
+
+
+# ------------------------------ pipeline ------------------------------------
+
+def test_table1_fit_quality():
+    rows = pipeline.validate_against_paper()
+    errs = {lkb: abs(m - p) for lkb, (m, p) in rows.items()}
+    # calibration points essentially exact
+    assert errs[1] < 0.2 and errs[200000] < 0.2 and errs[1000] < 0.2
+    # interior predictions within 2 minutes of the paper
+    assert max(errs.values()) < 2.0
+
+
+def test_curve_is_u_shaped():
+    m = pipeline.PipelineModel()
+    t = [m.time_seconds(lkb * 1e3) for lkb in [1, 100, 1000, 20000, 200000]]
+    assert t[0] > t[2] and t[-1] > t[2]          # ends higher than middle
+    opt = pipeline.optimal_package()
+    assert 10 < opt < 200000                     # optimum strictly interior
+
+
+def test_buffer_constraint_respected():
+    m = pipeline.PipelineModel()
+    # T = c/L ≥ 1 — at L = c the pipeline degenerates (T=1) and time jumps
+    t_half = m.time_seconds(m.buffer_bytes / 2)
+    t_full = m.time_seconds(m.buffer_bytes)
+    assert t_full > t_half

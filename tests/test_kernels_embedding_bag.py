@@ -1,0 +1,67 @@
+"""EmbeddingBag kernel vs take+segment_sum oracle (shape/dtype sweep + hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.embedding_bag import ops
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("B,F,V,D", [(8, 4, 100, 128), (16, 1, 1000, 16),
+                                     (5, 7, 64, 256), (32, 3, 50, 128),
+                                     (1, 2, 10, 512), (64, 8, 2048, 32)])
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_bag_matches_ref(B, F, V, D, combiner):
+    table = jnp.array(RNG.normal(size=(V, D)).astype(np.float32))
+    ids = jnp.array(RNG.integers(0, V, (B, F)), jnp.int32)
+    w = jnp.array(RNG.uniform(0.1, 2, (B, F)).astype(np.float32))
+    a = ops.embedding_bag(table, ids, w, combiner, force="ref")
+    b = ops.embedding_bag(table, ids, w, combiner, force="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bag_dtypes(dtype):
+    table = jnp.array(RNG.normal(size=(64, 128))).astype(dtype)
+    ids = jnp.array(RNG.integers(0, 64, (4, 3)), jnp.int32)
+    a = ops.embedding_bag(table, ids, None, "sum", force="ref")
+    b = ops.embedding_bag(table, ids, None, "sum", force="interpret")
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_zero_weight_padding_is_ignored():
+    table = jnp.array(RNG.normal(size=(10, 8)).astype(np.float32))
+    ids = jnp.array([[1, 2, 0], [3, 0, 0]], jnp.int32)
+    w = jnp.array([[1.0, 1.0, 0.0], [1.0, 0.0, 0.0]], jnp.float32)
+    out = ops.embedding_bag(table, ids, w, "sum", force="interpret")
+    expect = np.stack([np.asarray(table)[1] + np.asarray(table)[2],
+                       np.asarray(table)[3]])
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+
+
+@given(
+    b=st.integers(1, 12), f=st.integers(1, 6), v=st.integers(4, 80),
+    d=st.sampled_from([8, 16, 128]), seed=st.integers(0, 1000),
+)
+@settings(max_examples=15, deadline=None)
+def test_bag_property_matches_manual(b, f, v, d, seed):
+    rng = np.random.default_rng(seed)
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    ids = rng.integers(0, v, (b, f)).astype(np.int32)
+    out = ops.embedding_bag(jnp.array(table), jnp.array(ids), None, "sum",
+                            force="ref")
+    expect = table[ids].sum(axis=1)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_matches_padded():
+    table = jnp.array(RNG.normal(size=(30, 16)).astype(np.float32))
+    flat = jnp.array([1, 2, 3, 7, 7, 9], jnp.int32)
+    seg = jnp.array([0, 0, 1, 1, 1, 2], jnp.int32)
+    r = ops.embedding_bag_ragged(table, flat, seg, 3)
+    t = np.asarray(table)
+    expect = np.stack([t[1] + t[2], t[3] + 2 * t[7], t[9]])
+    np.testing.assert_allclose(np.asarray(r), expect, rtol=1e-6)

@@ -1,0 +1,107 @@
+"""RT-LDA: R-cache correctness, Eq.4 path vs dense max, accuracy vs fold-in."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gibbs, lda, rtlda
+from repro.data import corpus as corpus_mod
+from repro.data import synthetic
+
+
+def _model(K=10, V=200, iters=30):
+    corpus, truth = synthetic.lda_corpus(seed=0, n_docs=400, n_topics=8,
+                                         vocab_size=V, doc_len_mean=10)
+    wi, di = corpus_mod.pad_corpus(corpus.word_ids, corpus.doc_ids, 256)
+    valid = wi >= 0
+    state = lda.init_state(jax.random.key(0), jnp.array(wi[valid]), K, V)
+    z = np.zeros(len(wi), np.int32)
+    z[valid] = np.array(state.z)
+    state = lda.LDAState(state.phi, state.psi, jnp.array(z), state.alpha, state.beta)
+    for it in range(iters):
+        state = gibbs.gibbs_epoch(state, jnp.array(wi), jnp.array(di),
+                                  corpus.n_docs, V, seed=it * 7 + 1, block_size=256)
+    return corpus, truth, state
+
+
+def _queries(V, n=24, Ld=10, seed=3):
+    test_c, truth = synthetic.lda_corpus(seed=seed, n_docs=n, n_topics=8,
+                                         vocab_size=V, query_like=True)
+    qs = np.full((n, Ld), -1, np.int32)
+    for d in range(n):
+        toks = test_c.word_ids[test_c.doc_ids == d][:Ld]
+        qs[d, :len(toks)] = toks
+    return jnp.array(qs), test_c
+
+
+def test_r_cache_is_prior_argmax():
+    _, _, state = _model()
+    model = rtlda.build_model(state.phi, state.beta, state.alpha)
+    pvk = np.asarray(model.pvk)
+    prior = pvk * np.asarray(model.alpha)[None, :]
+    np.testing.assert_array_equal(np.asarray(model.r_topic), prior.argmax(axis=1))
+    np.testing.assert_allclose(np.asarray(model.r_value), prior.max(axis=1), rtol=1e-6)
+
+
+def test_sparse_path_close_to_dense():
+    corpus, truth, state = _model()
+    model = rtlda.build_model(state.phi, state.beta, state.alpha)
+    qs, _ = _queries(state.vocab_size)
+    pkd_s = rtlda.rtlda_infer_batch(model, qs, seed=1, n_iters=6, n_trials=2)
+    pkd_d = rtlda.rtlda_infer_dense(model, qs, n_iters=6)
+    cos = np.asarray(jnp.sum(pkd_s * pkd_d, 1)
+                     / (jnp.linalg.norm(pkd_s, axis=1)
+                        * jnp.linalg.norm(pkd_d, axis=1)))
+    assert cos.mean() > 0.9, cos.mean()
+
+
+def test_distributions_normalized_and_finite():
+    _, _, state = _model(iters=10)
+    model = rtlda.build_model(state.phi, state.beta, state.alpha)
+    qs, _ = _queries(state.vocab_size)
+    for fn in (lambda: rtlda.rtlda_infer_batch(model, qs, seed=2, n_trials=3),
+               lambda: rtlda.rtlda_infer_dense(model, qs)):
+        pkd = np.asarray(fn())
+        assert np.isfinite(pkd).all()
+        np.testing.assert_allclose(pkd.sum(axis=1), 1.0, rtol=1e-4)
+        assert (pkd >= 0).all()
+
+
+def test_rtlda_close_to_gibbs_fold_in():
+    """Paper Fig. 5B: RT-LDA accuracy ≈ SparseLDA (tolerable loss)."""
+    corpus, truth, state = _model(iters=30)
+    V, K = state.vocab_size, state.n_topics
+    model = rtlda.build_model(state.phi, state.beta, state.alpha)
+    qs, test_c = _queries(V, n=40)
+    pkd_rt = rtlda.rtlda_infer_batch(model, qs, seed=2, n_iters=6, n_trials=3)
+
+    z0 = jnp.zeros((test_c.n_tokens,), jnp.int32)
+    z, theta = gibbs.fold_in(state.phi, state.psi, state.alpha, state.beta,
+                             jnp.array(test_c.word_ids), jnp.array(test_c.doc_ids),
+                             z0, test_c.n_docs, V, seed=4, n_sweeps=15)
+    pkd_gibbs = np.asarray(lda.theta_hat(theta, state.alpha))
+
+    # predictive log-prob of test tokens under each inferred mixture
+    pvk = np.asarray(lda.phi_hat(state.phi, state.beta))
+    def score(pkd):
+        p = np.einsum("tk,tk->t", pvk[test_c.word_ids],
+                      np.asarray(pkd)[test_c.doc_ids])
+        return float(np.log(np.maximum(p, 1e-30)).mean())
+    s_rt, s_gibbs = score(pkd_rt), score(pkd_gibbs)
+    # RT-LDA may lose a little accuracy but must be in the same regime
+    assert s_rt > s_gibbs - 0.5, (s_rt, s_gibbs)
+
+
+def test_parallel_trials_help_or_tie():
+    corpus, truth, state = _model(iters=20)
+    model = rtlda.build_model(state.phi, state.beta, state.alpha)
+    qs, test_c = _queries(state.vocab_size, n=40)
+    pvk = np.asarray(lda.phi_hat(state.phi, state.beta))
+
+    def score(pkd):
+        p = np.einsum("tk,tk->t", pvk[test_c.word_ids],
+                      np.asarray(pkd)[test_c.doc_ids])
+        return float(np.log(np.maximum(p, 1e-30)).mean())
+
+    s1 = score(rtlda.rtlda_infer_batch(model, qs, seed=2, n_trials=1))
+    s4 = score(rtlda.rtlda_infer_batch(model, qs, seed=2, n_trials=4))
+    assert s4 > s1 - 0.05
