@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Canonical tier-1 entry point (ROADMAP.md): the full suite, fail-fast.
+# pyproject.toml sets pythonpath=["src"], so no PYTHONPATH incantation needed.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python -m pytest -x -q "$@"

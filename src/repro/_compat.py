@@ -1,0 +1,113 @@
+"""Version shims so one codebase runs on old and new jax releases.
+
+The distribution layer (repro.dist) targets the current jax API surface:
+``jax.shard_map``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType`` and ``jax.lax.pcast``. Older runtimes (the CI image
+pins jax 0.4.x) predate those names but carry exact functional equivalents
+(``jax.experimental.shard_map.shard_map`` with ``check_rep``; meshes without
+axis types; no varying-manual-axes typing, so ``pcast`` is the identity).
+
+``install()`` grafts the missing names onto jax. Every patch is additive and
+existence-gated: on a new-enough jax this whole module is a no-op, and nothing
+here ever *changes* behavior that already exists.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def install() -> None:
+    _ensure_axis_type()
+    _ensure_make_mesh_axis_types()
+    _ensure_shard_map()
+    _ensure_pcast()
+
+
+def _ensure_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _ensure_make_mesh_axis_types() -> None:
+    if not hasattr(jax, "make_mesh"):
+        return  # pre-0.4.35 jax: below the supported floor; nothing to wrap
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # C-level signature: assume current API
+        return
+    if "axis_types" in params:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        del axis_types  # pre-AxisType meshes are implicitly fully Auto
+        return orig(axis_shapes, axis_names, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _ensure_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=bool(check_vma),
+                          **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Compiled.cost_analysis normalized to a dict.
+
+    Old jax returns ``[dict]`` (one per partition, identical for SPMD); new
+    jax returns ``dict``. A helper rather than a monkey-patch: this module
+    only ever *adds* missing names to jax, never rewrites existing behavior.
+    """
+    out = compiled.cost_analysis()
+    if isinstance(out, (list, tuple)):
+        out = out[0] if out else {}
+    return dict(out or {})
+
+
+def ensure_pallas_aliases() -> None:
+    """Old pallas releases spell CompilerParams/MemorySpace with a TPU prefix.
+
+    Called lazily from repro.kernels (NOT from install()): importing pallas
+    pulls the whole mosaic stack, which non-kernel code paths never need.
+    """
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+    except ImportError:  # no pallas on this runtime — kernels gate on force=
+        return
+    if not hasattr(pltpu, "CompilerParams") and hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+    if not hasattr(pltpu, "MemorySpace") and hasattr(pltpu, "TPUMemorySpace"):
+        pltpu.MemorySpace = pltpu.TPUMemorySpace
+
+
+def _ensure_pcast() -> None:
+    if hasattr(jax.lax, "pcast"):
+        return
+
+    def pcast(x, axes, *, to=None):
+        # pcast only adjusts the varying-manual-axes *type* of x on new jax;
+        # pre-VMA tracers carry no such type, so the value is already correct.
+        del axes, to
+        return x
+
+    jax.lax.pcast = pcast

@@ -59,7 +59,13 @@ class Cell:
             out_shardings=self.out_shardings,
             donate_argnums=self.donate,
         )
-        return jitted.lower(*self.args)
+        # activation anchors (shd.constrain*) fire during this trace: scope
+        # the ambient mesh to it, derived from our own shardings
+        mesh = next((s.mesh for s in jax.tree.leaves(self.in_shardings)
+                     if isinstance(s, NamedSharding)), None)
+        multi_pod = mesh is not None and "pod" in mesh.axis_names
+        with shd.ambient_mesh_scope(mesh, multi_pod):
+            return jitted.lower(*self.args)
 
 
 @dataclasses.dataclass
@@ -121,8 +127,8 @@ def build_lm_cell(cfg, shape_name: str, mesh, multi_pod: bool,
     mesh_obj = mesh
     param_specs = shd.lm_param_specs(cfg)
     nmd = lambda t: shd.tree_named(mesh_obj, t)
-    # activation anchors read the ambient mesh at trace (= lower) time
-    shd.set_ambient_mesh(mesh_obj, multi_pod)
+    # activation anchors read the ambient mesh at trace time — Cell.lower()
+    # scopes it; nothing is set globally at build time
 
     if kind == "train":
         dp = _dp_size(mesh, multi_pod)
@@ -379,7 +385,6 @@ def build_recsys_cell(cfg, forward_fn, input_maker, flops_fn,
     info = RECSYS_SHAPES[shape_name]
     B = info["batch"]
     nmd = lambda spec: NamedSharding(mesh, spec)
-    shd.set_ambient_mesh(mesh, multi_pod)
     shapes = cfg.param_shapes()
     pspecs = shd.recsys_param_specs(shapes)
     # §Perf: tables live in bf16 (halves lookup-plane collectives + table HBM;
@@ -398,7 +403,7 @@ def build_recsys_cell(cfg, forward_fn, input_maker, flops_fn,
             return rec_mod.retrieval_scores(query, cand, top_k=100)
 
         args = (sds((B, D), jnp.float32), sds((N, D), jnp.float32))
-        in_sh = (nmd(P(None, None)), nmd(P("model", None)))
+        in_sh = (nmd(P(None, None)), nmd(shd.table_rows_spec()))
         out_sh = (nmd(P()), nmd(P()))
         return Cell(cfg.name, shape_name, "retrieval", retrieval, args, in_sh,
                     out_sh, model_flops=2.0 * B * N * D)

@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchSpec, Cell, sds
 from repro.core import distributed as dist
 from repro.core import hierarchy, rtlda
+from repro.dist import sharding as shd
 
 K_TOPICS = 100_000
 VOCAB = 210_000
@@ -47,7 +48,7 @@ LDA_SHAPES = {
 def ring_config(mesh, optimized: bool = False) -> dist.RingConfig:
     import jax.numpy as _jnp
 
-    M = int(mesh.shape["data"] * mesh.shape["model"])
+    M = shd.ring_size(mesh)
     rows = math.ceil(VOCAB / M)
     cap = int(math.ceil(DOCS_PER_SHARD * TOKENS_PER_DOC / M / 8) * 8)
     cap = max(cap, 8)
@@ -121,9 +122,8 @@ def _serve_cell(mesh, multi_pod: bool) -> Cell:
                                        n_iters=5, n_trials=2)
 
     nmd = lambda s: NamedSharding(mesh, s)
-    ring = ("data", "model")
     # vocab rows padded so they divide the flattened ring (jit divisibility)
-    vpad = ((VOCAB + 511) // 512) * 512
+    vpad = shd.round_up(VOCAB, 512)
     args = (
         sds((vpad, K_TOPICS), jnp.float32),
         sds((K_TOPICS,), jnp.float32),
@@ -132,7 +132,8 @@ def _serve_cell(mesh, multi_pod: bool) -> Cell:
         sds((B, Ld), jnp.int32),
     )
     # word_ids replicated is fine (8k ints); pvk row-sharded over the ring
-    in_sh = (nmd(P(ring, None)), nmd(P()), nmd(P(ring)), nmd(P(ring)), nmd(P()))
+    in_sh = (nmd(shd.ring_spec(None)), nmd(P()), nmd(shd.ring_spec()),
+             nmd(shd.ring_spec()), nmd(P()))
     out_sh = nmd(P(None, "model"))   # K divides "model" (16) but not the ring
     flops = 2.0 * B * (5 * 2) * Ld * Ld * 8.0
     return Cell(

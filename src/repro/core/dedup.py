@@ -119,13 +119,17 @@ class _UnionFind:
             self.p[max(ra, rb)] = min(ra, rb)
 
 
-def cluster_topics(phi, beta, l1_threshold: float) -> Tuple[np.ndarray, int]:
+def cluster_topics(phi, beta, l1_threshold: float,
+                   dist: np.ndarray | None = None) -> Tuple[np.ndarray, int]:
     """Merge topics with L1 distance below threshold.
 
     Returns (cluster_of_topic [K], n_clusters). Lower threshold ⇒ fewer merges;
     the paper prunes 10⁶ → ~10⁵ topics this way (Fig. 7B).
+
+    ``dist`` may carry a precomputed ``pairwise_l1`` matrix so callers that
+    also need ``duplicate_fraction`` pay the O(K²V) distance pass once.
     """
-    d = pairwise_l1(phi, beta)
+    d = pairwise_l1(phi, beta) if dist is None else np.asarray(dist)
     K = d.shape[0]
     uf = _UnionFind(K)
     ii, jj = np.where((d < l1_threshold) & (np.triu(np.ones_like(d), 1) > 0))
@@ -149,8 +153,12 @@ def merge_topics(phi, psi, alpha, cluster_of: np.ndarray, n_clusters: int):
     return jnp.asarray(phi_new), jnp.asarray(psi_new), jnp.asarray(alpha_new)
 
 
-def duplicate_fraction(phi, beta, l1_threshold: float = 0.5) -> float:
-    """Fraction of topics that have at least one duplicate (paper: 20–40% at 10⁵)."""
-    d = pairwise_l1(phi, beta)
+def duplicate_fraction(phi, beta, l1_threshold: float = 0.5,
+                       dist: np.ndarray | None = None) -> float:
+    """Fraction of topics that have at least one duplicate (paper: 20–40% at 10⁵).
+
+    Accepts a precomputed ``pairwise_l1`` matrix via ``dist`` (not mutated).
+    """
+    d = pairwise_l1(phi, beta) if dist is None else np.array(dist, copy=True)
     np.fill_diagonal(d, np.inf)
     return float((d.min(axis=0) < l1_threshold).mean())

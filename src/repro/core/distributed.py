@@ -30,18 +30,17 @@ round.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.data.corpus import ShardedCorpus
+from repro.dist import sharding as shd
+from repro.dist.sharding import (RING_AXES, flat_ring_index, ring_perm,
+                                 ring_size)
 from repro.kernels.gibbs import ops as gibbs_ops
-
-
-RING_AXES = ("data", "model")
 
 
 def prng_gumbel(seed, uid, n_topics: int):
@@ -50,20 +49,6 @@ def prng_gumbel(seed, uid, n_topics: int):
     return prng.gumbel(jnp.asarray(seed, jnp.uint32),
                        uid.astype(jnp.uint32)[:, None],
                        jnp.arange(n_topics, dtype=jnp.uint32)[None, :])
-
-
-def ring_size(mesh) -> int:
-    return int(mesh.shape[RING_AXES[0]] * mesh.shape[RING_AXES[1]])
-
-
-def _ring_perm(n: int):
-    return [(i, (i + 1) % n) for i in range(n)]
-
-
-def _flat_index(mesh_axis_sizes):
-    i = jax.lax.axis_index(RING_AXES[0])
-    j = jax.lax.axis_index(RING_AXES[1])
-    return i * mesh_axis_sizes[1] + j
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,31 +145,42 @@ def _sample_subblock(phi, psi, theta, w, d, z, uid, alpha, beta, seed, cfg: Ring
     return phi, psi, theta, z_new.reshape(-1)
 
 
-def ring_epoch_parts(mesh, cfg: RingConfig):
-    """Build the one-epoch ring sampler for ``mesh`` (unjitted + its specs).
+def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
+    """The per-device ring-epoch body — THE one implementation of the round
+    loop, shared by the single-pod path (``ring_epoch_parts``) and the
+    pod-batched path (``hierarchy.pod_ring_epoch_parts``).
 
-    Global array layout (S = M = ring size):
-      phi   [M, rows, K] int32  — sharded over the ring (leading dim)
-      psi   [K]          int32  — replicated
-      stack [S, M, cap]  int32  — word_local / doc_local / z (+uid uint32),
-                                   sharded over the ring (leading dim)
+    ``pod_axis=None`` builds the single-pod body (phi [1, rows, K] views);
+    naming the pod axis adds one leading singleton dim to every per-device
+    view ([1, 1, rows, K] etc.) and decorrelates the sampler seed per pod.
     """
     M = ring_size(mesh)
     assert cfg.n_rounds == M, "ring rounds must equal ring size"
     axis_sizes = (int(mesh.shape[RING_AXES[0]]), int(mesh.shape[RING_AXES[1]]))
-    perm = _ring_perm(M)
+    perm = ring_perm(M)
+    lead = 2 if pod_axis is not None else 1     # leading singleton view dims
+    plead = lead - 1                            # psi has one fewer (replicated
+                                                # intra-pod, P() or P(pod))
 
     def epoch(phi, psi, wl, dl, uid, z, alpha, beta, seed):
-        # per-device views: phi [1, rows, K]; stack arrays [1, M, cap]; psi [K]
-        me = _flat_index(axis_sizes)
-        phi_l = phi[0]
-        psi0 = psi
+        me = flat_ring_index(axis_sizes)
+        seed = jnp.asarray(seed, jnp.uint32)
+        if pod_axis is not None:
+            # pods derive decorrelated seeds so replica samplers do not shadow
+            # each other
+            pod = jax.lax.axis_index(pod_axis)
+            seed = seed + pod.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+        sq = lambda a: a.reshape(a.shape[lead:])
+        phi_l = sq(phi)                               # [rows, K]
+        psi_l = psi.reshape(psi.shape[plead:])        # [K]
+        stack0 = tuple(sq(a) for a in (wl, dl, uid, z))   # each [M, cap]
+        psi0 = psi_l
         # psi becomes device-varying once local deltas accumulate; mark it so
         # (JAX 0.8 varying-manual-axes typing for shard_map scan carries)
-        psi = jax.lax.pcast(psi, RING_AXES, to="varying")
+        psi_l = jax.lax.pcast(psi_l, RING_AXES, to="varying")
 
         def round_fn(carry, r):
-            phi_l, psi, stack = carry
+            phi_l, psi_l, stack = carry
             wl, dl, uid, z = stack
 
             # ship the immutable stack arrays for the NEXT round first — XLA
@@ -195,13 +191,13 @@ def ring_epoch_parts(mesh, cfg: RingConfig):
             )
 
             # Θ for the visiting shard's documents, rebuilt from the stack's z
-            flat_d = dl[0].reshape(-1)
-            flat_z = z[0].reshape(-1)
-            flat_w = wl[0].reshape(-1)
+            flat_d = dl.reshape(-1)
+            flat_z = z.reshape(-1)
+            flat_w = wl.reshape(-1)
             valid = (flat_w >= 0).astype(cfg.theta_dtype)
 
             # my vocab sub-block of the visiting stack
-            take = lambda a: jax.lax.dynamic_slice_in_dim(a[0], me, 1, axis=0)[0]
+            take = lambda a: jax.lax.dynamic_slice_in_dim(a, me, 1, axis=0)[0]
             w_sub, d_sub, u_sub, z_sub = take(wl), take(dl), take(uid), take(z)
 
             if cfg.small_theta:
@@ -220,28 +216,42 @@ def ring_epoch_parts(mesh, cfg: RingConfig):
                                   cfg.theta_dtype).at[flat_d, flat_z].add(valid)
                 d_sub_local = d_sub
 
-            phi_l, psi, _, z_new = _sample_subblock(
-                phi_l, psi, theta, w_sub, d_sub_local, z_sub, u_sub,
+            phi_l, psi_l, _, z_new = _sample_subblock(
+                phi_l, psi_l, theta, w_sub, d_sub_local, z_sub, u_sub,
                 alpha, beta, seed, cfg,
             )
             # write updated z back into the (already-shipped view of the) stack:
             # the z we forward must include this round's update, so we update
             # BEFORE shipping in program order — instead we re-ship z only.
-            z_upd = jax.lax.dynamic_update_slice_in_dim(
-                z[0], z_new[None], me, axis=0
-            )[None]
+            z_upd = jax.lax.dynamic_update_slice_in_dim(z, z_new[None], me,
+                                                        axis=0)
             z_next = jax.lax.ppermute(z_upd, RING_AXES, perm)
             stack = (nxt[0], nxt[1], nxt[2], z_next)
-            return (phi_l, psi, stack), None
+            return (phi_l, psi_l, stack), None
 
-        (phi_l, psi, stack), _ = jax.lax.scan(
-            round_fn, (phi_l, psi, (wl, dl, uid, z)), jnp.arange(M)
+        (phi_l, psi_l, stack), _ = jax.lax.scan(
+            round_fn, (phi_l, psi_l, stack0), jnp.arange(M)
         )
         # relaxed per-segment Ψ synchronization (Fig. 4)
-        psi = psi0 + jax.lax.psum(psi - psi0, RING_AXES)
-        return phi_l[None], psi, stack[0], stack[1], stack[2], stack[3]
+        psi_out = psi0 + jax.lax.psum(psi_l - psi0, RING_AXES)
+        unsq = lambda a: a.reshape((1,) * lead + a.shape)
+        return (unsq(phi_l), psi_out.reshape((1,) * plead + psi_out.shape),
+                *(unsq(s) for s in stack))
 
-    sharded = P(("data", "model"))
+    return epoch
+
+
+def ring_epoch_parts(mesh, cfg: RingConfig):
+    """Build the one-epoch ring sampler for ``mesh`` (unjitted + its specs).
+
+    Global array layout (S = M = ring size):
+      phi   [M, rows, K] int32  — sharded over the ring (leading dim)
+      psi   [K]          int32  — replicated
+      stack [S, M, cap]  int32  — word_local / doc_local / z (+uid uint32),
+                                   sharded over the ring (leading dim)
+    """
+    epoch = build_epoch_body(mesh, cfg)
+    sharded = shd.ring_spec()
     in_specs = (sharded, P(), sharded, sharded, sharded, sharded, P(), P(), P())
     out_specs = (sharded, P(), sharded, sharded, sharded, sharded)
     epoch_sm = jax.shard_map(epoch, mesh=mesh, in_specs=in_specs,

@@ -22,155 +22,95 @@ at most one epoch, not one diagonal).
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-POD_AXIS = "pod"
+from repro.dist.sharding import POD_AXIS, pod_ring_spec, pod_spec
 
 
 def make_aggregate(mesh, compressed: bool = False):
     """jitted ΔΦ/ΔΨ merge over the pod axis.
 
-    Arguments are (phi, psi, phi_ref, psi_ref) where *_ref is the value at the
-    previous aggregation boundary; returns merged (phi, psi) — identical on
-    every pod — which also become the next refs. ``compressed=True`` sends the
-    ΔΦ payload int8-quantized (dist/collectives.compressed_psum — 4× less
-    cross-pod DCN traffic; Ψ and the tiny scales stay exact).
+    Arguments are (phi, psi, phi_ref, psi_ref[, seed]) where *_ref is the
+    value at the previous aggregation boundary; returns merged (phi, psi) —
+    identical on every pod — which also become the next refs.
+    ``compressed=True`` sends the ΔΦ payload int8-quantized over an int16
+    reduction (dist/collectives.compressed_psum — 2× less cross-pod DCN
+    traffic than f32, 4× on int8-accumulating fabrics; Ψ and the tiny scales
+    stay exact). Pass the aggregation-boundary index as ``seed`` so the
+    stochastic rounding decorrelates across boundaries.
     """
 
-    def agg(phi, psi, phi_ref, psi_ref):
+    def agg(phi, psi, phi_ref, psi_ref, seed):
         if compressed:
             from repro.dist.collectives import compressed_psum
 
             dphi_f = compressed_psum(
-                {"d": (phi - phi_ref).astype(jnp.float32)}, POD_AXIS)["d"]
+                {"d": (phi - phi_ref).astype(jnp.float32)}, POD_AXIS,
+                seed=seed)["d"]
             dphi = jnp.round(dphi_f).astype(phi.dtype)
         else:
+            del seed
             dphi = jax.lax.psum(phi - phi_ref, POD_AXIS)
         dpsi = jax.lax.psum(psi - psi_ref, POD_AXIS)
         return phi_ref + dphi, psi_ref + dpsi
 
-    ring = P(("data", "model"))
     agg_sm = jax.shard_map(
         agg,
         mesh=mesh,
-        in_specs=(P(POD_AXIS, *ring), P(POD_AXIS), P(POD_AXIS, *ring), P(POD_AXIS)),
-        out_specs=(P(POD_AXIS, *ring), P(POD_AXIS)),
+        in_specs=(pod_ring_spec(), pod_spec(), pod_ring_spec(), pod_spec(),
+                  P()),
+        out_specs=(pod_ring_spec(), pod_spec()),
+        check_vma=False,
     )
-    return jax.jit(agg_sm)
+    jitted = jax.jit(agg_sm)
+
+    def call(phi, psi, phi_ref, psi_ref, seed=0):
+        return jitted(phi, psi, phi_ref, psi_ref, jnp.uint32(seed))
+
+    return call
+
+
+def _pod_epoch_specs():
+    specs_in = (
+        pod_ring_spec(),      # phi      [Pods, M, rows, K]
+        pod_spec(),           # psi      [Pods, K]
+        pod_ring_spec(),      # word     [Pods, S, M, cap]
+        pod_ring_spec(),      # doc
+        pod_ring_spec(),      # uid
+        pod_ring_spec(),      # z
+        P(),                  # alpha
+        P(),                  # beta
+        P(),                  # seed
+    )
+    specs_out = specs_in[:6]
+    return specs_in, specs_out
 
 
 def make_pod_ring_epoch(mesh, cfg):
     """The layer-1 ring epoch, batched over pods.
 
-    Same body as ``distributed.make_ring_epoch`` but every array carries a
-    leading pod dimension sharded over ``"pod"``; pods never communicate inside
-    an epoch (cross-pod traffic only at aggregation), which is exactly what
-    keeps the busy inner loop off the slow inter-pod (DCN) links at ≥1000-node
-    scale.
+    The SAME round-loop body as ``distributed.make_ring_epoch``
+    (``distributed.build_epoch_body`` with the pod axis named) — every array
+    just carries a leading pod dimension sharded over ``"pod"``; pods never
+    communicate inside an epoch (cross-pod traffic only at aggregation),
+    which is exactly what keeps the busy inner loop off the slow inter-pod
+    (DCN) links at ≥1000-node scale.
     """
-    from repro.core import distributed as dist
-
-    inner = _build_inner_epoch(mesh, cfg)
-    ring = P(("data", "model"))
-    specs_in = (
-        P(POD_AXIS, *ring),   # phi      [Pods, M, rows, K]
-        P(POD_AXIS),          # psi      [Pods, K]
-        P(POD_AXIS, *ring),   # word     [Pods, S, M, cap]
-        P(POD_AXIS, *ring),   # doc
-        P(POD_AXIS, *ring),   # uid
-        P(POD_AXIS, *ring),   # z
-        P(),                  # alpha
-        P(),                  # beta
-        P(),                  # seed
-    )
-    specs_out = (
-        P(POD_AXIS, *ring), P(POD_AXIS),
-        P(POD_AXIS, *ring), P(POD_AXIS, *ring), P(POD_AXIS, *ring), P(POD_AXIS, *ring),
-    )
-    epoch_sm = jax.shard_map(inner, mesh=mesh, in_specs=specs_in,
-                         out_specs=specs_out, check_vma=False)
+    epoch_sm, _, _ = pod_ring_epoch_parts(mesh, cfg)
     return jax.jit(epoch_sm, donate_argnums=(0, 1, 2, 3, 4, 5))
 
 
 def pod_ring_epoch_parts(mesh, cfg):
     """Unjitted pod-batched ring epoch + specs (for the dry-run Cell builder)."""
-    inner = _build_inner_epoch(mesh, cfg)
-    ring = P(("data", "model"))
-    specs_in = (
-        P(POD_AXIS, *ring), P(POD_AXIS),
-        P(POD_AXIS, *ring), P(POD_AXIS, *ring), P(POD_AXIS, *ring), P(POD_AXIS, *ring),
-        P(), P(), P(),
-    )
-    specs_out = (
-        P(POD_AXIS, *ring), P(POD_AXIS),
-        P(POD_AXIS, *ring), P(POD_AXIS, *ring), P(POD_AXIS, *ring), P(POD_AXIS, *ring),
-    )
+    from repro.core import distributed as dist
+
+    inner = dist.build_epoch_body(mesh, cfg, pod_axis=POD_AXIS)
+    specs_in, specs_out = _pod_epoch_specs()
     epoch_sm = jax.shard_map(inner, mesh=mesh, in_specs=specs_in,
                          out_specs=specs_out, check_vma=False)
     return epoch_sm, specs_in, specs_out
-
-
-def _build_inner_epoch(mesh, cfg):
-    """Per-device epoch body shared with the single-pod path (pod dim size 1)."""
-    from repro.core import distributed as dist
-
-    axis_sizes = (int(mesh.shape["data"]), int(mesh.shape["model"]))
-    M = cfg.n_rounds
-    perm = [(i, (i + 1) % M) for i in range(M)]
-    RING_AXES = ("data", "model")
-
-    def epoch(phi, psi, wl, dl, uid, z, alpha, beta, seed):
-        # views: phi [1, 1, rows, K]; psi [1, K]; stacks [1, 1, M, cap]
-        me = jax.lax.axis_index(RING_AXES[0]) * axis_sizes[1] + jax.lax.axis_index(RING_AXES[1])
-        # pods derive decorrelated seeds so replica samplers do not shadow each other
-        pod = jax.lax.axis_index(POD_AXIS)
-        seed = jnp.asarray(seed, jnp.uint32) + pod.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
-        phi_l = phi[0, 0]
-        psi_l = psi[0]
-        psi0 = psi_l
-        psi_l = jax.lax.pcast(psi_l, RING_AXES, to="varying")
-
-        def round_fn(carry, r):
-            phi_l, psi_l, stack = carry
-            wl, dl, uid, z = stack
-            nxt = tuple(jax.lax.ppermute(a, RING_AXES, perm) for a in (wl, dl, uid))
-            flat_d = dl[0, 0].reshape(-1)
-            flat_z = z[0, 0].reshape(-1)
-            flat_w = wl[0, 0].reshape(-1)
-            valid = (flat_w >= 0).astype(cfg.theta_dtype)
-            take = lambda a: jax.lax.dynamic_slice_in_dim(a[0, 0], me, 1, axis=0)[0]
-            w_sub, d_sub, u_sub, z_sub = take(wl), take(dl), take(uid), take(z)
-            if cfg.small_theta:
-                inv = jnp.full((cfg.docs_per_shard,), cfg.cap, jnp.int32)
-                inv = inv.at[d_sub].set(jnp.arange(cfg.cap, dtype=jnp.int32))
-                idx = inv[flat_d]
-                theta = jnp.zeros((cfg.cap + 1, cfg.n_topics),
-                                  cfg.theta_dtype).at[idx, flat_z].add(valid)
-                d_sub_local = inv[d_sub]
-            else:
-                theta = jnp.zeros((cfg.docs_per_shard, cfg.n_topics),
-                                  cfg.theta_dtype).at[flat_d, flat_z].add(valid)
-                d_sub_local = d_sub
-            phi_l, psi_l, _, z_new = dist._sample_subblock(
-                phi_l, psi_l, theta, w_sub, d_sub_local, z_sub, u_sub,
-                alpha, beta, seed, cfg
-            )
-            z_upd = jax.lax.dynamic_update_slice_in_dim(z[0, 0], z_new[None], me, axis=0)[None, None]
-            z_next = jax.lax.ppermute(z_upd, RING_AXES, perm)
-            return (phi_l, psi_l, (nxt[0], nxt[1], nxt[2], z_next)), None
-
-        (phi_l, psi_l, stack), _ = jax.lax.scan(
-            round_fn, (phi_l, psi_l, (wl, dl, uid, z)), jnp.arange(M)
-        )
-        psi_out = psi0 + jax.lax.psum(psi_l - psi0, RING_AXES)
-        return (phi_l[None, None], psi_out[None], *stack)
-
-    return epoch
 
 
 def init_pod_state(scs, n_topics: int):
@@ -210,6 +150,7 @@ def run_hierarchical(
             phi, psi, wl, dl, uid, z, alpha, beta, jnp.uint32(seed0 + ep)
         )
         if (ep + 1) % agg_every == 0:
-            phi, psi = agg_fn(phi, psi, phi_ref, psi_ref)
+            # boundary index as quantization seed (decorrelated rounding)
+            phi, psi = agg_fn(phi, psi, phi_ref, psi_ref, seed=seed0 + ep)
             phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
     return phi, psi, wl, dl, uid, z

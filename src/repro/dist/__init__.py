@@ -1,0 +1,16 @@
+"""repro.dist — the single distribution layer (DESIGN.md §2).
+
+Three modules, one per concern:
+
+  sharding    — the named-axis vocabulary (ring/pod axis constants) and every
+                PartitionSpec builder used by configs, models and samplers.
+                Nothing else in the repo spells axis names or P(...) layouts.
+  collectives — cross-pod aggregation primitives: ``compressed_psum`` (int8
+                ΔΦ psum with stochastic rounding) and ``elastic_aggregate``
+                (merge over the live-pod subset, paper §3.1.4).
+  analysis    — static cost analyzers: ``trace_cost`` (jaxpr walker) and
+                ``collective_bytes`` (compiled-HLO collective traffic).
+"""
+from repro.dist import analysis, collectives, sharding
+
+__all__ = ["analysis", "collectives", "sharding"]

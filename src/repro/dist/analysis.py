@@ -1,0 +1,168 @@
+"""Static cost analyzers: jaxpr walker + compiled-HLO collective parser.
+
+``trace_cost`` walks the jaxpr of a function (descending into scan / while /
+cond / pjit / remat / custom_* sub-jaxprs, multiplying by scan trip counts)
+and accumulates matmul FLOPs, memory-traffic bytes and collective-op counts.
+It is the roofline's compute source: XLA's own ``cost_analysis`` undercounts
+work inside scans, which is exactly where the samplers and layer stacks live.
+
+``collective_bytes`` parses compiled HLO text for collective ops and sums
+their payload bytes per op kind. Caveat (also noted at the call sites):
+collectives *inside* HLO while-loops appear once, so scan-carried ring
+traffic is undercounted — use the analytic ``model_coll_bytes`` for those.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+import jax
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+_COLLECTIVE_PRIMS = {
+    "psum", "pmax", "pmin", "ppermute", "pshuffle", "all_gather",
+    "all_to_all", "reduce_scatter", "pbroadcast", "psum_scatter",
+}
+
+
+def _is_jaxpr(x) -> bool:
+    return hasattr(x, "eqns") and hasattr(x, "invars")
+
+
+def _as_jaxpr(x):
+    """Jaxpr from either an open Jaxpr or a ClosedJaxpr."""
+    if _is_jaxpr(x):
+        return x
+    inner = getattr(x, "jaxpr", None)
+    return inner if inner is not None and _is_jaxpr(inner) else None
+
+
+def _sub_jaxprs(params):
+    for v in params.values():
+        j = _as_jaxpr(v)
+        if j is not None:
+            yield j
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                j = _as_jaxpr(item)
+                if j is not None:
+                    yield j
+
+
+def _dot_flops(eqn) -> float:
+    (lc, rc), (lb, _rb) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    batch = 1.0
+    for i in lb:
+        batch *= lhs[i]
+    contract = 1.0
+    for i in lc:
+        contract *= lhs[i]
+    m = 1.0
+    for i, d in enumerate(lhs):
+        if i not in lb and i not in lc:
+            m *= d
+    n = 1.0
+    for i, d in enumerate(rhs):
+        if i not in _rb and i not in rc:
+            n *= d
+    return 2.0 * batch * m * n * contract
+
+
+def _eqn_bytes(eqn) -> float:
+    total = 0.0
+    for v in list(eqn.invars) + list(eqn.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "shape") and hasattr(aval, "dtype"):
+            size = 1.0
+            for d in aval.shape:
+                size *= d
+            total += size * aval.dtype.itemsize
+    return total
+
+
+def _walk(jaxpr, mult: float, cost: Cost) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            inner = _as_jaxpr(eqn.params["jaxpr"])
+            _walk(inner, mult * float(eqn.params["length"]), cost)
+            continue
+        if name == "cond":
+            # static trip unknown: charge the most expensive branch
+            branch_costs = []
+            for b in eqn.params.get("branches", ()):
+                sub = Cost()
+                _walk(_as_jaxpr(b), mult, sub)
+                branch_costs.append(sub)
+            if branch_costs:
+                worst = max(branch_costs, key=lambda c: c.flops)
+                cost.flops += worst.flops
+                cost.bytes += worst.bytes
+                for k, v in worst.collectives.items():
+                    cost.collectives[k] = cost.collectives.get(k, 0.0) + v
+            continue
+        subs = list(_sub_jaxprs(eqn.params))
+        if subs:  # pjit / while / remat / custom_jvp|vjp / closed_call ...
+            for sub in subs:
+                _walk(sub, mult, cost)
+            continue
+        if name == "dot_general":
+            cost.flops += mult * _dot_flops(eqn)
+        if name in _COLLECTIVE_PRIMS:
+            cost.collectives[name] = cost.collectives.get(name, 0.0) + mult
+        cost.bytes += mult * _eqn_bytes(eqn)
+
+
+def trace_cost(f, *args, **kwargs) -> Cost:
+    """Scan-aware flops/bytes/collective counts of ``f(*args)`` (abstract
+    eval only — args may be ShapeDtypeStructs; nothing is executed)."""
+    closed = jax.make_jaxpr(f)(*args, **kwargs)
+    cost = Cost()
+    _walk(closed.jaxpr, 1.0, cost)
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Compiled-HLO collective traffic
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+"
+    r"(all-gather|all-reduce|reduce-scatter|collective-permute|"
+    r"all-to-all|collective-broadcast)(?:-start)?\("
+)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Payload bytes per collective op kind in compiled HLO text.
+
+    ``-start`` forms count once (their ``-done`` halves carry no shape here);
+    tuple-shaped variadic collectives are skipped — see the module caveat.
+    """
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, op = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op] = out.get(op, 0) + n * _DTYPE_BYTES[dtype]
+    return out

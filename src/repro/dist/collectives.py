@@ -1,0 +1,84 @@
+"""Cross-pod aggregation collectives (paper §3.1, DESIGN.md §3.4).
+
+Pods (layer-2 configurations) exchange model deltas only at aggregation
+boundaries, over the slow inter-pod links. Two primitives keep that traffic
+cheap and fault-tolerant:
+
+  * ``compressed_psum`` — ΔΦ psum with the payload int8-quantized against a
+    per-leaf scale shared across the axis (one pmax), using *stochastic
+    rounding* so the quantizer is unbiased: averaging over epochs/seeds
+    converges to the exact sum. The reduction runs in int16 (partial sums of
+    int8 terms need the headroom), so the wire payload is 2× smaller than
+    f32 today — 4× on fabrics that accumulate int8 natively — the bandwidth
+    lever LightLDA identifies at ≥10⁵ topics.
+  * ``elastic_aggregate`` — the §3.1.4 fault-recovery merge: dead pods'
+    deltas are excluded and the live count is reported, so a failed
+    configuration can restore from its own checkpoint and rejoin at the next
+    boundary while the others never roll back.
+
+Both are shard_map bodies: they must run under a mesh with the target axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prng
+from repro.dist.sharding import POD_AXIS
+
+_Q_MAX = 127.0  # int8 symmetric range
+
+
+def compressed_psum(tree, axis, seed: int = 0):
+    """psum of a float pytree over ``axis`` with int8-quantized payload.
+
+    Per leaf: scale = pmax(|leaf|)/127 (shared across the axis so shards add
+    in one integer domain), stochastic rounding via the counter-based hash
+    RNG (decorrelated per leaf, per shard and per ``seed``), int16 psum of
+    the int8 payload, rescale. Unbiased: E[result] equals the exact psum.
+
+    Pass a fresh ``seed`` per aggregation boundary — reusing one seed makes
+    stable elements round the same direction every time, so the quantization
+    error stops averaging out across boundaries.
+
+    int16 partial sums bound the axis size at 258 shards (258·127 < 2¹⁵);
+    Peacock runs ~10 configurations, pods here are single digits.
+    """
+    me = jax.lax.axis_index(axis)
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        x = jnp.asarray(leaf, jnp.float32)
+        amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)
+        scale = jnp.where(amax > 0, amax / _Q_MAX, jnp.float32(1.0))
+        scaled = x / scale
+        floor = jnp.floor(scaled)
+        # counter-based uniforms: element counter × (shard, leaf, seed) salt
+        counters = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+        salt = (me.astype(jnp.uint32) * jnp.uint32(0x85EB_CA6B)
+                + jnp.uint32(i) * jnp.uint32(0xC2B2_AE35))
+        u = prng.uniform01(jnp.asarray(seed, jnp.uint32), counters, salt)
+        q = floor + (u < scaled - floor).astype(jnp.float32)
+        q = jnp.clip(q, -_Q_MAX, _Q_MAX).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int16), axis)
+        out.append(total.astype(jnp.float32) * scale)
+    return jax.tree.unflatten(treedef, out)
+
+
+def elastic_aggregate(state, state_ref, live, axis: str = POD_AXIS):
+    """Merge Δ = state − state_ref over the *live* shards of ``axis``.
+
+    ``live`` is this shard's liveness flag (nonzero = alive); dead shards'
+    deltas are excluded from the psum, so their divergence since the last
+    boundary is simply dropped (they rejoin from state_ref + merged deltas).
+    Returns (merged pytree — identical on every shard, live count int32).
+    """
+    alive = (live != 0)
+    n_live = jax.lax.psum(alive.astype(jnp.int32), axis)
+
+    def merge(s, r):
+        delta = (s - r) * alive.astype(s.dtype)
+        return r + jax.lax.psum(delta, axis)
+
+    merged = jax.tree.map(merge, state, state_ref)
+    return merged, n_live

@@ -1,0 +1,270 @@
+"""Named-axis vocabulary and PartitionSpec builders.
+
+This module is the ONLY place that spells mesh axis names or hand-rolls
+``P(...)`` layouts; configs, models, samplers and launch scripts all ask here.
+
+Mesh contract (launch/mesh.py): the intra-pod axes ``("data", "model")`` are
+flattened into the diagonal ring of the layer-1 Gibbs sampler (DESIGN.md §3);
+the optional leading ``"pod"`` axis carries Peacock layer-2 replica
+configurations, which only talk to each other at aggregation boundaries.
+
+Two families of helpers:
+
+  * ring/pod vocabulary — ``RING_AXES``, ``POD_AXIS``, ``ring_size``,
+    ``ring_perm``, ``flat_ring_index`` and the ``ring_spec``/``pod_ring_spec``
+    builders used by ``core.distributed`` / ``core.hierarchy``;
+  * per-workload spec builders — ``lm_*``, ``gnn_*``, ``recsys_*`` — mapping
+    each model family's parameter/batch pytrees onto the mesh (FSDP over the
+    data axes, Megatron-style tensor parallel over ``"model"``, Peacock-style
+    row sharding for embedding tables).
+
+Activation anchors (``constrain*``) read the *ambient* mesh, which
+``Cell.lower()`` scopes around tracing (``ambient_mesh_scope``); outside any
+mesh scope they are the identity, so model code can call them
+unconditionally (smoke tests run un-meshed).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Axis vocabulary (the ring + pod constants formerly duplicated across
+# core/distributed.py and core/hierarchy.py)
+# ---------------------------------------------------------------------------
+
+RING_AXES: Tuple[str, str] = ("data", "model")
+POD_AXIS: str = "pod"
+
+
+def ring_size(mesh) -> int:
+    """Number of devices on the flattened intra-pod ring."""
+    return int(mesh.shape[RING_AXES[0]] * mesh.shape[RING_AXES[1]])
+
+
+def ring_perm(n: int):
+    """The one-hop rotation of the flattened ring (collective-permute pairs)."""
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def flat_ring_index(mesh_axis_sizes: Tuple[int, int]):
+    """This device's position on the flattened ring (inside shard_map)."""
+    i = jax.lax.axis_index(RING_AXES[0])
+    j = jax.lax.axis_index(RING_AXES[1])
+    return i * mesh_axis_sizes[1] + j
+
+
+def ring_spec(*trailing) -> P:
+    """Leading dim sharded over the flattened ring; extra dims as given."""
+    return P(RING_AXES, *trailing)
+
+
+def pod_ring_spec(*trailing) -> P:
+    """[pods, ring, ...] layout: pod-leading, then ring-sharded."""
+    return P(POD_AXIS, RING_AXES, *trailing)
+
+
+def pod_spec(*trailing) -> P:
+    """Leading dim sharded over pods only (per-configuration replicas)."""
+    return P(POD_AXIS, *trailing)
+
+
+def replicated() -> P:
+    return P()
+
+
+def round_up(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def dp_axes(multi_pod: Optional[bool] = None) -> Union[str, Tuple[str, str]]:
+    """The data-parallel axis (or axes): batch dims shard over these."""
+    if multi_pod is None:
+        multi_pod = _AMBIENT["multi_pod"]
+    return (POD_AXIS, RING_AXES[0]) if multi_pod else RING_AXES[0]
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh + activation anchors
+# ---------------------------------------------------------------------------
+
+_AMBIENT = {"mesh": None, "multi_pod": False}
+
+
+def set_ambient_mesh(mesh, multi_pod: bool = False) -> None:
+    """Declare the mesh that activation anchors target (trace-time state).
+
+    Model code calls ``constrain*`` without threading the mesh through every
+    layer; ``Cell.lower()`` scopes this around tracing via
+    ``ambient_mesh_scope`` so nothing leaks past the lowering. Pass
+    ``mesh=None`` to clear.
+    """
+    _AMBIENT["mesh"] = mesh
+    _AMBIENT["multi_pod"] = bool(multi_pod)
+
+
+@contextlib.contextmanager
+def ambient_mesh_scope(mesh, multi_pod: bool = False):
+    """Temporarily set the ambient mesh, restoring the previous one on exit —
+    keeps un-meshed code paths (smoke tests) truly un-meshed afterwards."""
+    prev = (_AMBIENT["mesh"], _AMBIENT["multi_pod"])
+    set_ambient_mesh(mesh, multi_pod)
+    try:
+        yield
+    finally:
+        _AMBIENT["mesh"], _AMBIENT["multi_pod"] = prev
+
+
+def ambient_mesh():
+    return _AMBIENT["mesh"]
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint against the ambient mesh (identity un-meshed)."""
+    mesh = _AMBIENT["mesh"]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_batch_dim0(x):
+    """Anchor dim 0 (the batch/row dim) to the data-parallel axes."""
+    if _AMBIENT["mesh"] is None:
+        return x
+    return constrain(x, P(dp_axes(), *([None] * (x.ndim - 1))))
+
+
+def tree_named(mesh, spec_tree):
+    """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# LM family: FSDP over the data axes × Megatron TP over "model"
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg) -> Any:
+    """Specs matching models.transformer.param_shapes(cfg)'s structure.
+
+    Projection weights split their TP-natural dim over ``"model"`` (column
+    parallel for wq/wk/wv/w1/w3, row parallel for wo/w2) and the shared
+    ``d_model`` dim over ``"data"`` (FSDP); norm scales replicate; the
+    embedding splits its vocab rows over ``"model"`` (vocab-parallel).
+    """
+    layers = {
+        "ln1": P(None, None), "ln2": P(None, None),
+        "wq": P(None, "data", "model"),
+        "wk": P(None, "data", "model"),
+        "wv": P(None, "data", "model"),
+        "wo": P(None, "model", "data"),
+    }
+    if cfg.qk_norm:
+        layers.update({"qnorm": P(None, None), "knorm": P(None, None)})
+    if cfg.moe is None:
+        layers.update({"w1": P(None, "data", "model"),
+                       "w3": P(None, "data", "model"),
+                       "w2": P(None, "model", "data")})
+    else:
+        layers["moe_router"] = P(None, None, None)
+        if cfg.moe.moe_shard == "expert":
+            ew = P(None, "model", None, None)        # expert parallelism
+            layers.update({"moe_w1": ew, "moe_w3": ew, "moe_w2": ew})
+        else:                                        # per-expert tensor parallel
+            layers.update({"moe_w1": P(None, None, None, "model"),
+                           "moe_w3": P(None, None, None, "model"),
+                           "moe_w2": P(None, None, "model", None)})
+        if cfg.moe.n_shared_experts:
+            layers.update({"moe_sw1": P(None, "data", "model"),
+                           "moe_sw3": P(None, "data", "model"),
+                           "moe_sw2": P(None, "model", "data")})
+    specs = {"embed": P("model", None), "layers": layers, "ln_f": P(None)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, "model")
+    return specs
+
+
+def lm_batch_spec(multi_pod: bool = False) -> P:
+    """[B, S] token batches: batch over the data-parallel axes."""
+    return P(dp_axes(multi_pod), None)
+
+
+def lm_cache_spec(multi_pod: bool = False) -> P:
+    """[L, B, S, KV, dh] KV cache: batch over dp, sequence over "model".
+
+    Sequence (not head) sharding because the assigned archs' KV head counts
+    rarely divide 16 while the sequence always does (models/attention.py).
+    """
+    return P(None, dp_axes(multi_pod), "model", None, None)
+
+
+# ---------------------------------------------------------------------------
+# GNN family: pure data parallelism over nodes/edges
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(shapes) -> Any:
+    """GraphSAGE weights are KB-scale: replicate everywhere."""
+    return jax.tree.map(lambda s: P(), shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def gnn_rows_spec(multi_pod: bool = False) -> P:
+    """Node/edge row arrays: rows sharded over every mesh axis."""
+    axes = ((POD_AXIS,) if multi_pod else ()) + RING_AXES
+    return P(axes)
+
+
+def divisible_rows_spec(n: int, mesh, multi_pod: bool = False) -> P:
+    """Row spec over the largest dp-first axis set whose product divides n.
+
+    Small row counts (e.g. per-graph labels) cannot always use the full
+    ``gnn_rows_spec`` flattening; this keeps the layout divisible instead of
+    relying on GSPMD padding.
+    """
+    axes = ((POD_AXIS,) if multi_pod else ()) + RING_AXES
+    chosen: list = []
+    prod = 1
+    for ax in axes:
+        size = int(mesh.shape[ax])
+        if size > 1 and n % (prod * size) == 0:
+            chosen.append(ax)
+            prod *= size
+    return P(tuple(chosen)) if chosen else P(None)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family: Peacock-style row-sharded tables, replicated dense MLPs
+# ---------------------------------------------------------------------------
+
+def recsys_param_specs(shapes) -> Any:
+    """Embedding tables row-shard over "model" (the Φ vocab-shard story,
+    models/recsys.py); per-row linear terms follow their table; dense MLPs
+    replicate (they are MB-scale)."""
+    def spec(name: str, shape) -> P:
+        if name.endswith("table") or name == "linear_w":
+            return P("model", *([None] * (len(shape) - 1)))
+        return P()
+    return {k: spec(k, v) for k, v in shapes.items()}
+
+
+def recsys_batch_spec(multi_pod: bool = False) -> P:
+    """[B, F] id/dense batches: batch over the data-parallel axes."""
+    return P(dp_axes(multi_pod), None)
+
+
+def table_rows_spec() -> P:
+    """[rows, D] candidate/embedding planes: rows over "model"."""
+    return P("model", None)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+def moe_expert_spec() -> P:
+    """[E, C, d] dispatch buffer under expert parallelism: experts → "model"."""
+    return P("model", None, None)

@@ -1,1 +1,4 @@
 # Pallas TPU kernels for compute hot-spots (validated in interpret mode on CPU).
+from repro import _compat as _compat
+
+_compat.ensure_pallas_aliases()

@@ -112,7 +112,7 @@ def main():
     for ep in range(start_epoch, args.epochs):
         state = tuple(epoch_fn(*state, alpha, beta, jnp.uint32(ep * 131 + 7)))
         if multi_pod and (ep + 1) % args.agg_every == 0:
-            phi, psi = agg_fn(state[0], state[1], phi_ref, psi_ref)
+            phi, psi = agg_fn(state[0], state[1], phi_ref, psi_ref, seed=ep)
             state = (phi, psi) + state[2:]
             phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
         if ep >= args.alpha_opt_from:
@@ -144,8 +144,10 @@ def main():
     phi0 = state[0][0] if multi_pod else state[0]
     psi0 = state[1][0] if multi_pod else state[1]
     phi_full = jnp.asarray(dist.gather_phi(phi0, sc0, K))
-    frac = dedup.duplicate_fraction(phi_full, beta, 0.5)
-    cl, ncl = dedup.cluster_topics(phi_full, beta, l1_threshold=0.3)
+    # one O(K²V) distance pass shared by both dedup consumers
+    d_l1 = dedup.pairwise_l1(phi_full, beta)
+    frac = dedup.duplicate_fraction(phi_full, beta, 0.5, dist=d_l1)
+    cl, ncl = dedup.cluster_topics(phi_full, beta, l1_threshold=0.3, dist=d_l1)
     phi_m, psi_m, alpha_m = dedup.merge_topics(phi_full, psi0, alpha, cl, ncl)
     model = rtlda.build_model(jnp.asarray(phi_m), beta, jnp.asarray(alpha_m))
     print(f"[dedup] duplicate fraction {frac:.2f}; {K} → {ncl} topics")

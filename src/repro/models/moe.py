@@ -23,7 +23,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as shd
 
@@ -89,7 +88,7 @@ def moe_ffn(params, x: jax.Array, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]
     h = buf[: E * C].reshape(E, C, d)
     if cfg.moe_shard == "expert":
         # expert-parallel: tokens all-to-all to their expert's owner device
-        h = shd.constrain(h, P("model", None, None))
+        h = shd.constrain(h, shd.moe_expert_spec())
     # ffn-TP mode: leave placement to GSPMD — the global argsort dispatch is
     # inherently cross-shard; memory is bounded by the microbatch size instead
     # (MoE train cells run micro_per_device=1; §Perf hillclimbs this further)

@@ -100,3 +100,30 @@ def test_duplicate_fraction_detects_duplicates():
     f_dup = dedup.duplicate_fraction(jnp.array(phi_dup), jnp.float32(0.01), 0.05)
     assert f_dup > f_clean
     assert f_dup >= 10 / 15 - 1e-6   # at least the 10 involved columns
+
+
+def test_precomputed_distance_matches_and_conserves_counts():
+    """cluster_topics/duplicate_fraction accept one shared pairwise_l1 pass."""
+    rng = np.random.default_rng(3)
+    phi = rng.integers(0, 30, (40, 9)).astype(np.int32)
+    phi[:, 5] = phi[:, 2]
+    phi[:, 7] = phi[:, 0]
+    d = dedup.pairwise_l1(phi, 0.01)
+
+    cl_pre, n_pre = dedup.cluster_topics(phi, 0.01, 1e-6, dist=d)
+    cl, n = dedup.cluster_topics(phi, 0.01, 1e-6)
+    np.testing.assert_array_equal(cl_pre, cl)
+    assert n_pre == n and n <= 7
+
+    f_pre = dedup.duplicate_fraction(phi, 0.01, 1e-6, dist=d)
+    assert f_pre == dedup.duplicate_fraction(phi, 0.01, 1e-6)
+    # the shared matrix is not mutated by duplicate_fraction's diagonal fill
+    assert np.isfinite(np.diagonal(d)).all()
+
+    psi = phi.sum(axis=0)
+    alpha = np.full(phi.shape[1], 0.4, np.float32)
+    phi_m, psi_m, alpha_m = dedup.merge_topics(phi, psi, alpha, cl_pre, n_pre)
+    assert int(np.asarray(phi_m).sum()) == int(phi.sum())
+    assert int(np.asarray(psi_m).sum()) == int(psi.sum())
+    np.testing.assert_allclose(float(np.asarray(alpha_m).sum()),
+                               float(alpha.sum()), rtol=1e-6)

@@ -74,6 +74,34 @@ print("POD_OK")
 """
 
 
+AGG_COMPRESSED_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import hierarchy
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*3)
+rng = np.random.default_rng(0)
+M, rows, K = 4, 8, 16
+phi_ref = np.broadcast_to(rng.integers(0, 50, (1, M, rows, K)),
+                          (2, M, rows, K)).astype(np.int32).copy()
+psi_ref = np.broadcast_to(rng.integers(0, 50, (1, K)), (2, K)).astype(np.int32).copy()
+dphi = rng.integers(-20, 21, (2, M, rows, K)).astype(np.int32)
+dpsi = rng.integers(-20, 21, (2, K)).astype(np.int32)
+phi, psi = phi_ref + dphi, psi_ref + dpsi
+
+exact = hierarchy.make_aggregate(mesh)
+comp = hierarchy.make_aggregate(mesh, compressed=True)
+pe, se = exact(jnp.array(phi), jnp.array(psi), jnp.array(phi_ref), jnp.array(psi_ref))
+pc, sc = comp(jnp.array(phi), jnp.array(psi), jnp.array(phi_ref), jnp.array(psi_ref))
+# Ψ stays exact; ΔΦ is int8-quantized with shared scale = max|Δ|/127 and
+# stochastic rounding, so total error < 2 pods · 1 ulp = 2·20/127 < 0.5 —
+# after the int round-back the compressed merge must be EXACT here.
+assert (np.asarray(se) == np.asarray(sc)).all()
+assert (np.asarray(pe) == np.asarray(pc)).all(), np.abs(np.asarray(pe) - np.asarray(pc)).max()
+assert (np.asarray(pe)[0] == np.asarray(pe)[1]).all()
+print("AGG_COMPRESSED_OK")
+"""
+
+
 SHARDED_LOOKUP_CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -104,6 +132,11 @@ def test_ring_epoch_distributed(subproc):
 def test_hierarchical_pods(subproc):
     out = subproc(POD_CODE, n_devices=8)
     assert "POD_OK" in out
+
+
+def test_compressed_aggregate_matches_exact(subproc):
+    out = subproc(AGG_COMPRESSED_CODE, n_devices=8)
+    assert "AGG_COMPRESSED_OK" in out
 
 
 def test_sharded_embedding_lookup(subproc):

@@ -1,0 +1,48 @@
+"""BatchingServer: padding, multi-chunk batching, normalization, determinism."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import rtlda
+from repro.serving.server import BatchingServer
+
+K, V = 6, 40
+
+
+def _model(seed=0):
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(rng.integers(0, 20, (V, K)).astype(np.int32))
+    alpha = jnp.full((K,), 0.5, jnp.float32)
+    return rtlda.build_model(phi, jnp.float32(0.01), alpha)
+
+
+def test_variable_length_requests_multi_chunk():
+    srv = BatchingServer(_model(), batch=4, query_len=6, n_trials=2,
+                         n_iters=3, top_n=5)
+    rng = np.random.default_rng(1)
+    # 11 requests > batch → three compiled chunks (4, 4, 3); lengths 1..9
+    # exercise both padding and truncation to query_len
+    requests = [rng.integers(0, V, size=int(n))
+                for n in rng.integers(1, 10, size=11)]
+    out = srv.infer(requests)
+    assert len(out) == len(requests)
+    for r in out:
+        pkd = r["pkd"]
+        assert pkd.shape == (K,)
+        assert np.isfinite(pkd).all() and (pkd >= 0).all()
+        np.testing.assert_allclose(pkd.sum(), 1.0, rtol=1e-5)
+        assert r["feature_ids"].shape == (5,)
+        assert r["feature_weights"].shape == (5,)
+        assert (r["feature_ids"] >= 0).all() and (r["feature_ids"] < V).all()
+        # top-N weights come sorted descending from top_k
+        assert (np.diff(r["feature_weights"]) <= 1e-7).all()
+
+
+def test_deterministic_under_fixed_seed():
+    requests = [np.array([1, 2, 3]), np.array([4, 5]), np.array([7])]
+    a = BatchingServer(_model(), batch=2, query_len=4).infer(requests)
+    b = BatchingServer(_model(), batch=2, query_len=4).infer(requests)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra["feature_ids"], rb["feature_ids"])
+        np.testing.assert_allclose(ra["pkd"], rb["pkd"], rtol=1e-6)
+        np.testing.assert_allclose(ra["feature_weights"],
+                                   rb["feature_weights"], rtol=1e-6)
