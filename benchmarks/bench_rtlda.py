@@ -14,28 +14,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gibbs, lda, rtlda
-from repro.data import corpus as corpus_mod, synthetic
-
-
-def _train(K=24, V=600, n_docs=1500, iters=30):
-    corpus, truth = synthetic.lda_corpus(seed=0, n_docs=n_docs, n_topics=16,
-                                         vocab_size=V, doc_len_mean=9)
-    wi, di = corpus_mod.pad_corpus(corpus.word_ids, corpus.doc_ids, 512)
-    valid = wi >= 0
-    state = lda.init_state(jax.random.key(0), jnp.array(wi[valid]), K, V)
-    z = np.zeros(len(wi), np.int32)
-    z[valid] = np.array(state.z)
-    state = lda.LDAState(state.phi, state.psi, jnp.array(z), state.alpha, state.beta)
-    for it in range(iters):
-        state = gibbs.gibbs_epoch(state, jnp.array(wi), jnp.array(di),
-                                  corpus.n_docs, V, seed=it * 7 + 1,
-                                  block_size=512)
-    return corpus, state
+from repro.data import synthetic
+from repro.data.fixtures import quick_train
 
 
 def run():
     lines = []
-    corpus, state = _train()
+    corpus, state = quick_train(topics=24, vocab=600, train_iters=30,
+                                gen_topics=16)
     V, K = state.vocab_size, state.n_topics
     model = rtlda.build_model(state.phi, state.beta, state.alpha)
 
@@ -98,6 +84,37 @@ def run():
                   round(t_gibbs / t_sparse, 2)))
     lines.append(("rtlda.speedup_sparse_over_dense", 0.0,
                   round(t_dense / t_sparse, 2)))
+
+    # --- shape-bucketed engine vs one fixed wide pad (DESIGN.md §3.5) ---
+    # mixed-length traffic: most queries are short (the paper's SOSO stats),
+    # a fixed 64-wide pad makes every one of them pay Ld=64 compute
+    from repro.serving import TopicEngine
+
+    rng = np.random.default_rng(3)
+    lengths = rng.choice([2, 3, 5, 7, 12, 28, 60], size=512,
+                         p=[.25, .25, .2, .15, .08, .05, .02])
+    traffic = [rng.integers(0, V, size=int(L)).astype(np.int32)
+               for L in lengths]
+
+    def engine_time(buckets):
+        eng = TopicEngine(model, buckets=buckets, max_batch=256,
+                          n_trials=1, n_iters=5, start=False)
+        eng.infer(traffic)                      # compile all shape programs
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = eng.infer(traffic)
+        dt = (time.perf_counter() - t0) / 3
+        assert not any(r.truncated for r in out)
+        return dt
+
+    t_bucketed = engine_time((8, 16, 32, 64))
+    t_flat = engine_time((64,))
+    lines.append(("rtlda.engine_bucketed_qps", t_bucketed / len(traffic) * 1e6,
+                  round(len(traffic) / t_bucketed)))
+    lines.append(("rtlda.engine_flat64_qps", t_flat / len(traffic) * 1e6,
+                  round(len(traffic) / t_flat)))
+    lines.append(("rtlda.engine_bucket_speedup", 0.0,
+                  round(t_flat / t_bucketed, 2)))
     return lines
 
 

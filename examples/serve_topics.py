@@ -1,73 +1,60 @@
-"""Serving example: RT-LDA real-time topic features for incoming queries.
+"""Serving example: async RT-LDA topic features via the TopicEngine.
 
     PYTHONPATH=src python examples/serve_topics.py
 
 Trains a small model, builds the RT-LDA serving model (R cache, Eq. 3), then
-runs a batched serving loop over "incoming" queries, producing P(k|d) and the
-top-30 Eq.-5 topic features per query — the exact payload Peacock injects into
-the Weak-AND posting lists (paper §5.1). Prints latency stats.
+drives the async engine the way a backend would (paper §3.2 / §5.1):
+
+  * ``submit()`` returns a future immediately — the background loop batches
+    queries into shape buckets and flushes on fill or deadline slack;
+  * responses carry P(k|d) + the top-30 Eq.-5 topic features Peacock injects
+    at the head of Weak-AND posting lists, plus serving metadata (bucket,
+    truncation, latency, deadline);
+  * ``swap_model()`` publishes a refreshed Φ mid-traffic, no downtime;
+  * ``stats()`` reports QPS / p50 / p99 / occupancy / deadline-miss rate.
 """
-import time
-
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core import features, gibbs, lda, rtlda
-from repro.data import corpus as corpus_mod, synthetic
-
-
-def train_model(K=24, V=500):
-    corpus, truth = synthetic.lda_corpus(seed=0, n_docs=1500, n_topics=16,
-                                         vocab_size=V, doc_len_mean=9)
-    wi, di = corpus_mod.pad_corpus(corpus.word_ids, corpus.doc_ids, 512)
-    valid = wi >= 0
-    state = lda.init_state(jax.random.key(0), jnp.array(wi[valid]), K, V)
-    z = np.zeros(len(wi), np.int32)
-    z[valid] = np.asarray(state.z)
-    state = lda.LDAState(state.phi, state.psi, jnp.array(z), state.alpha,
-                         state.beta)
-    for it in range(30):
-        state = gibbs.gibbs_epoch(state, jnp.array(wi), jnp.array(di),
-                                  corpus.n_docs, V, seed=it * 13 + 1,
-                                  block_size=512)
-    return state
+from repro.core import rtlda
+from repro.data import synthetic
+from repro.data.fixtures import quick_train
+from repro.serving import TopicEngine
 
 
 def main():
-    state = train_model()
+    _, state = quick_train(topics=24, vocab=500, train_iters=30,
+                           gen_topics=16)
     model = rtlda.build_model(state.phi, state.beta, state.alpha)
-    print(f"serving model: V={state.vocab_size} K={state.n_topics}; "
+    V = state.vocab_size
+    print(f"serving model: V={V} K={state.n_topics}; "
           f"R cache = {model.r_topic.shape[0]} entries (1 per word)")
 
-    # batched serving loop over synthetic query traffic
-    V, Ld, batch = state.vocab_size, 8, 128
-    serve = jax.jit(lambda q, s: features.query_topic_features(
-        model, q, seed=s, n_iters=5, n_trials=2, top_n=30))
-    rng = np.random.default_rng(5)
+    with TopicEngine(model, buckets=(4, 8, 16, 32), max_batch=128,
+                     n_trials=2, max_delay_ms=3.0) as engine:
+        # "incoming" query traffic: variable lengths, submitted async
+        test_c, _ = synthetic.lda_corpus(seed=100, n_docs=256, n_topics=16,
+                                         vocab_size=V, query_like=True)
+        queries = [test_c.word_ids[test_c.doc_ids == d]
+                   for d in range(test_c.n_docs)]
+        futures = [engine.submit(q, deadline_ms=50.0) for q in queries]
 
-    lat = []
-    for step in range(8):
-        test_c, _ = synthetic.lda_corpus(seed=100 + step, n_docs=batch,
-                                         n_topics=16, vocab_size=V,
-                                         query_like=True)
-        qs = np.full((batch, Ld), -1, np.int32)
-        for d in range(batch):
-            toks = test_c.word_ids[test_c.doc_ids == d][:Ld]
-            qs[d, :len(toks)] = toks
-        t0 = time.perf_counter()
-        pkd, ids, w = serve(jnp.array(qs), step)
-        jax.block_until_ready(w)
-        lat.append(time.perf_counter() - t0)
+        # mid-traffic model refresh (what the train→aggregate loop would push)
+        engine.swap_model(rtlda.build_model(state.phi, state.beta,
+                                            state.alpha))
+        responses = [f.result(timeout=60) for f in futures]
 
-    lat_ms = np.array(lat[1:]) * 1e3   # drop compile step
-    print(f"batch={batch}: mean {lat_ms.mean():.1f} ms/batch "
-          f"({batch/ (lat_ms.mean()/1e3):.0f} QPS), p99≈{np.quantile(lat_ms, 0.99):.1f} ms")
-    print("\nsample query → top topic features (word ids, Eq. 5 weights):")
-    for b in range(3):
-        q = [t for t in np.asarray(qs[b]) if t >= 0]
-        print(f"  query {q} → top topics {np.argsort(-np.asarray(pkd[b]))[:3]}"
-              f", features {np.asarray(ids[b])[:6]}")
+        s = engine.stats()
+        print(f"{s.completed} queries | {s.qps:,.0f} QPS | "
+              f"p50 {s.p50_ms:.1f} ms  p99 {s.p99_ms:.1f} ms | "
+              f"occupancy {s.mean_batch_occupancy:.2f} | "
+              f"miss rate {s.deadline_miss_rate:.1%} | "
+              f"per-bucket {s.per_bucket}")
+
+        print("\nsample query → top topic features (word ids, Eq. 5 weights):")
+        for r, q in list(zip(responses, queries))[:3]:
+            print(f"  query {[int(t) for t in q]} [bucket {r.bucket}] → "
+                  f"top topics {np.argsort(-r.pkd)[:3]}, "
+                  f"features {r.feature_ids[:6]}")
 
 
 if __name__ == "__main__":

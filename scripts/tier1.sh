@@ -1,6 +1,13 @@
 #!/usr/bin/env bash
 # Canonical tier-1 entry point (ROADMAP.md): the full suite, fail-fast.
 # pyproject.toml sets pythonpath=["src"], so no PYTHONPATH incantation needed.
+#
+#   scripts/tier1.sh          # full suite
+#   scripts/tier1.sh smoke    # fast serving-engine smoke subset (-m serve)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ "${1:-}" == "smoke" ]]; then
+    shift
+    exec python -m pytest -x -q -m serve "$@"
+fi
 exec python -m pytest -x -q "$@"

@@ -36,6 +36,23 @@ def query_topic_features(model: RTLDAModel, word_ids, seed=0,
     return pkd, ids, w
 
 
+def make_serving_fn(n_iters: int = 5, n_trials: int = 2, top_n: int = 30):
+    """Bucket-shaped jit entry point for the serving engine (DESIGN.md §3.5).
+
+    Returns ``fn(model, word_ids, seed) -> (pkd, ids, weights)`` jitted with
+    the model as a *traced* pytree argument: XLA specializes one executable
+    per ``word_ids`` shape — i.e. per (row-count, bucket-length) pair — and
+    hot-swapping a same-shaped model (``TopicEngine.swap_model``) reuses the
+    compiled programs instead of recompiling.
+    """
+    @jax.jit
+    def fn(model, word_ids, seed):
+        return query_topic_features(model, word_ids, seed=seed,
+                                    n_iters=n_iters, n_trials=n_trials,
+                                    top_n=top_n)
+    return fn
+
+
 def cosine_topic_similarity(pkd_a, pkd_b) -> jax.Array:
     """Query–document cosine similarity in topic space (the retrieval scorer)."""
     a = pkd_a / jnp.linalg.norm(pkd_a, axis=-1, keepdims=True)

@@ -72,6 +72,51 @@ def make_aggregate(mesh, compressed: bool = False):
     return call
 
 
+def make_elastic_aggregate(mesh):
+    """§3.1.4 fault-tolerant ΔΦ/ΔΨ merge: aggregate over the *live* pods only.
+
+    Like :func:`make_aggregate` but the call takes a per-pod liveness vector
+    ``live`` ([n_pods] int32, nonzero = alive): dead pods' deltas are
+    excluded from the psum (their divergence since the last boundary is
+    dropped) and every pod — dead ones included — receives the merged state,
+    which is exactly the "restore and rejoin at the next boundary" recovery
+    the paper describes: the rejoining configuration resumes from the merged
+    model, the live pods never roll back.
+
+    The returned callable matches the ``agg_fn`` contract of
+    :func:`run_hierarchical` (plus the ``live=`` kwarg) and records the
+    number of live pods of the last boundary on ``call.last_n_live`` so the
+    coordinator can rescale or alarm.
+    """
+    from repro.dist.collectives import elastic_aggregate
+
+    def agg(phi, psi, phi_ref, psi_ref, live):
+        merged, n_live = elastic_aggregate(
+            {"phi": phi, "psi": psi}, {"phi": phi_ref, "psi": psi_ref},
+            live[0], axis=POD_AXIS)
+        return merged["phi"], merged["psi"], n_live[None]
+
+    agg_sm = jax.shard_map(
+        agg,
+        mesh=mesh,
+        in_specs=(pod_ring_spec(), pod_spec(), pod_ring_spec(), pod_spec(),
+                  P(POD_AXIS)),
+        out_specs=(pod_ring_spec(), pod_spec(), P(POD_AXIS)),
+        check_vma=False,
+    )
+    jitted = jax.jit(agg_sm)
+
+    def call(phi, psi, phi_ref, psi_ref, live, seed=0):
+        del seed  # uncompressed: nothing stochastic at the boundary
+        phi, psi, n_live = jitted(phi, psi, phi_ref, psi_ref,
+                                  jnp.asarray(live, jnp.int32))
+        call.last_n_live = int(n_live[0])
+        return phi, psi
+
+    call.last_n_live = None
+    return call
+
+
 def _pod_epoch_specs():
     specs_in = (
         pod_ring_spec(),      # phi      [Pods, M, rows, K]
@@ -135,12 +180,20 @@ def init_pod_state(scs, n_topics: int):
 
 
 def run_hierarchical(
-    epoch_fn, agg_fn, state, alpha, beta, n_epochs: int, agg_every: int, seed0: int = 0
+    epoch_fn, agg_fn, state, alpha, beta, n_epochs: int, agg_every: int,
+    seed0: int = 0, liveness=None,
 ):
     """Driver: epochs in each pod, aggregate every ``agg_every`` (coordinator loop).
 
     ``state`` = (phi, psi, wl, dl, uid, z) with pod-leading dims. Returns the
     final state with pods merged at the last boundary.
+
+    ``liveness`` (optional) wires §3.1.4 fault recovery: a callable
+    ``epoch -> [n_pods] liveness flags`` consulted at each aggregation
+    boundary and forwarded to ``agg_fn`` as ``live=`` — pair it with
+    :func:`make_elastic_aggregate`, whose merge excludes dead pods' deltas
+    and hands every pod (rejoining ones included) the merged state. Without
+    it the aggregate assumes all pods live, as before.
     """
     phi, psi, wl, dl, uid, z = state
     # refs must survive the donated epoch buffers
@@ -151,6 +204,10 @@ def run_hierarchical(
         )
         if (ep + 1) % agg_every == 0:
             # boundary index as quantization seed (decorrelated rounding)
-            phi, psi = agg_fn(phi, psi, phi_ref, psi_ref, seed=seed0 + ep)
+            if liveness is not None:
+                phi, psi = agg_fn(phi, psi, phi_ref, psi_ref,
+                                  live=liveness(ep), seed=seed0 + ep)
+            else:
+                phi, psi = agg_fn(phi, psi, phi_ref, psi_ref, seed=seed0 + ep)
             phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
     return phi, psi, wl, dl, uid, z

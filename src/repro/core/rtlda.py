@@ -58,6 +58,25 @@ def build_model(phi, beta, alpha) -> RTLDAModel:
     )
 
 
+# Serving shape buckets (DESIGN.md §3.5): one compiled program per query
+# length, so a 3-token query pays 8-token padding, not 64 — and a 50-token
+# query is no longer truncated to a fixed pad width.
+DEFAULT_BUCKETS = (8, 16, 32, 64)
+
+
+def select_bucket(n_tokens: int, buckets) -> Tuple[int, bool]:
+    """Smallest bucket ≥ ``n_tokens``, else the largest (with truncation flag).
+
+    Returns ``(bucket_len, truncated)``; ``truncated`` is True only when the
+    query exceeds the largest bucket, in which case the caller must drop the
+    tail — and MUST surface that on the response (never silently).
+    """
+    for b in buckets:
+        if n_tokens <= b:
+            return int(b), False
+    return int(max(buckets)), True
+
+
 @functools.partial(jax.jit, static_argnames=("n_iters", "n_trials"))
 def rtlda_infer_batch(
     model: RTLDAModel,

@@ -1,0 +1,40 @@
+"""Shared demo/bench fixtures: quick synthetic trains behind every serving
+surface (``launch/serve.py``, ``examples/serve_topics.py``,
+``benchmarks/bench_rtlda.py``), so the corpus→pad→init→Gibbs recipe exists
+exactly once.
+
+Deliberately sits atop both ``repro.data`` and ``repro.core`` (imports are
+deferred into the function): this is fixture plumbing for drivers and
+examples, not part of either layer's API.
+"""
+from __future__ import annotations
+
+
+def quick_train(topics: int, vocab: int, train_iters: int = 25,
+                n_docs: int = 1500, gen_topics: int = 20,
+                doc_len_mean: int = 9):
+    """Quick synthetic LDA train. Returns ``(corpus, state)``; feed ``state``
+    to ``rtlda.build_model`` for the serving model (R cache, Eq. 3)."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gibbs, lda
+    from repro.data import corpus as corpus_mod, synthetic
+
+    corpus, _ = synthetic.lda_corpus(seed=0, n_docs=n_docs,
+                                     n_topics=gen_topics, vocab_size=vocab,
+                                     doc_len_mean=doc_len_mean)
+    wi, di = corpus_mod.pad_corpus(corpus.word_ids, corpus.doc_ids, 512)
+    valid = wi >= 0
+    state = lda.init_state(jax.random.key(0), jnp.array(wi[valid]),
+                           topics, vocab)
+    z = np.zeros(len(wi), np.int32)
+    z[valid] = np.asarray(state.z)
+    state = lda.LDAState(state.phi, state.psi, jnp.array(z), state.alpha,
+                         state.beta)
+    for it in range(train_iters):
+        state = gibbs.gibbs_epoch(state, jnp.array(wi), jnp.array(di),
+                                  corpus.n_docs, vocab,
+                                  seed=it * 13 + 1, block_size=512)
+    return corpus, state

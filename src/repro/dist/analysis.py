@@ -7,9 +7,11 @@ It is the roofline's compute source: XLA's own ``cost_analysis`` undercounts
 work inside scans, which is exactly where the samplers and layer stacks live.
 
 ``collective_bytes`` parses compiled HLO text for collective ops and sums
-their payload bytes per op kind. Caveat (also noted at the call sites):
-collectives *inside* HLO while-loops appear once, so scan-carried ring
-traffic is undercounted — use the analytic ``model_coll_bytes`` for those.
+their payload bytes per op kind, including tuple-shaped variadic forms
+(several operands riding one collective). Caveat (also noted at the call
+sites): collectives *inside* HLO while-loops appear once, so scan-carried
+ring traffic is undercounted — use the analytic ``model_coll_bytes`` for
+those.
 """
 from __future__ import annotations
 
@@ -142,27 +144,58 @@ _DTYPE_BYTES = {
     "c64": 8, "c128": 16,
 }
 
+_COLLECTIVE_OPS = (
+    r"(all-gather|all-reduce|reduce-scatter|collective-permute|"
+    r"all-to-all|collective-broadcast)"
+)
+
 _COLLECTIVE_RE = re.compile(
     r"=\s*([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+"
-    r"(all-gather|all-reduce|reduce-scatter|collective-permute|"
-    r"all-to-all|collective-broadcast)(?:-start)?\("
+    + _COLLECTIVE_OPS + r"(?:-start)?\("
 )
+
+# variadic form: `%ar = (f32[128]{0}, s32[64]{0}) all-reduce(%a, %b)` —
+# XLA emits these when several operands ride one collective (tuple shape).
+# Async `-start` forms are also tuple-shaped, but their tuple is
+# (operand, result[, context]) — NOT several payloads — so they are counted
+# by their largest element, not the tuple sum (see collective_bytes).
+_VARIADIC_RE = re.compile(
+    r"=\s*\(([^()]*)\)\s+" + _COLLECTIVE_OPS + r"(-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Payload bytes per collective op kind in compiled HLO text.
 
-    ``-start`` forms count once (their ``-done`` halves carry no shape here);
-    tuple-shaped variadic collectives are skipped — see the module caveat.
+    ``-start`` forms count once (their ``-done`` halves carry no shape here).
+    Tuple-shaped variadic collectives — ``(f32[..], s32[..]) all-reduce(..)``
+    — contribute the sum of their element shapes. Tuple-shaped **async**
+    ``-start`` forms are a different animal: their tuple interleaves operand,
+    result and context buffers (e.g. ``(f32[N], f32[N], u32[], u32[])`` for
+    collective-permute-start), so summing would double-count; they
+    contribute their largest element — the transferred buffer — instead.
     """
     out: Dict[str, int] = {}
     for m in _COLLECTIVE_RE.finditer(hlo_text):
         dtype, dims, op = m.groups()
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        out[op] = out.get(op, 0) + n * _DTYPE_BYTES[dtype]
+        b = _shape_bytes(dtype, dims)
+        if b:
+            out[op] = out.get(op, 0) + b
+    for m in _VARIADIC_RE.finditer(hlo_text):
+        shapes, op, is_start = m.groups()
+        sizes = [_shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(shapes)]
+        b = (max(sizes) if is_start else sum(sizes)) if sizes else 0
+        if b:
+            out[op] = out.get(op, 0) + b
     return out

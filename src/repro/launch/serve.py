@@ -1,66 +1,155 @@
-"""Serving driver: batched RT-LDA inference loop (paper §3.2/§5.1).
+"""Open-loop serving load driver: tail latency vs offered load (§3.2, Fig. 5A).
 
-    PYTHONPATH=src python -m repro.launch.serve --batch 256 --steps 10
+    PYTHONPATH=src python -m repro.launch.serve --qps 500 --duration 3 \
+        --bench-out BENCH_serve.json
 
-Trains a quick model (or loads a checkpoint), builds the R cache, then runs a
-continuous batched serving loop with latency/QPS reporting — the structure of
-Peacock's backend inference servers (Fig. 5A's measurement loop).
+Trains a quick model, stands up a :class:`TopicEngine`, then replays a
+**Poisson arrival process** against it at the offered ``--qps``. Open loop
+means arrivals do not wait for completions — the honest way to measure a
+serving system: a closed loop (submit, wait, repeat) caps the offered load at
+the system's own speed and hides queueing collapse, which is exactly the
+regime a tail-latency story must expose.
+
+Mid-run the driver hot-swaps the model (``--swap-mid``, on by default) to
+prove the train→aggregate loop can publish fresh Φ without downtime.
+
+``--bench-out`` writes a machine-readable BENCH_serve.json record
+(p50/p99, achieved QPS, occupancy, deadline-miss rate, per-bucket counts)
+so the bench trajectory tracks serving, not just training throughput.
 """
 import argparse
+import json
 import time
 
 
-def main():
+def build_model(topics: int, vocab: int, train_iters: int = 25):
+    """Quick synthetic train → RT-LDA serving model (R cache, Eq. 3)."""
+    from repro.core import rtlda
+    from repro.data.fixtures import quick_train
+
+    _, state = quick_train(topics, vocab, train_iters)
+    return rtlda.build_model(state.phi, state.beta, state.alpha), state
+
+
+def make_traffic(n: int, vocab: int, buckets, seed: int = 1):
+    """Mixed-length queries spanning every shape bucket (plus over-long
+    tails that must route to the widest bucket with ``truncated`` set)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    max_b = max(buckets)
+    lengths = rng.choice(
+        [2, 4, max(1, min(buckets) - 1)] + [b - 1 for b in buckets]
+        + [max_b + 4],
+        size=n, p=None)
+    return [rng.integers(0, vocab, size=int(L)).astype(np.int32)
+            for L in lengths]
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=256)
-    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--qps", type=float, default=500.0,
+                    help="offered load (Poisson arrival rate)")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="seconds of open-loop traffic")
+    ap.add_argument("--deadline-ms", type=float, default=50.0)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--buckets", type=str, default="8,16,32,64")
     ap.add_argument("--topics", type=int, default=32)
     ap.add_argument("--vocab", type=int, default=600)
     ap.add_argument("--n-trials", type=int, default=2)
-    ap.add_argument("--query-len", type=int, default=8)
-    args = ap.parse_args()
+    ap.add_argument("--train-iters", type=int, default=25)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--swap-mid", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="hot-swap the model halfway through the run")
+    ap.add_argument("--bench-out", type=str, default=None,
+                    help="write a machine-readable JSON record here")
+    args = ap.parse_args(argv)
 
     import numpy as np
-    import jax
-    import jax.numpy as jnp
 
-    from repro.core import gibbs, lda, rtlda, features
-    from repro.data import corpus as corpus_mod, synthetic
-    from repro.serving.server import BatchingServer
+    from repro.core import rtlda
+    from repro.serving import TopicEngine
 
-    corpus, _ = synthetic.lda_corpus(seed=0, n_docs=1500, n_topics=20,
-                                     vocab_size=args.vocab, doc_len_mean=9)
-    wi, di = corpus_mod.pad_corpus(corpus.word_ids, corpus.doc_ids, 512)
-    valid = wi >= 0
-    state = lda.init_state(jax.random.key(0), jnp.array(wi[valid]),
-                           args.topics, args.vocab)
-    z = np.zeros(len(wi), np.int32)
-    z[valid] = np.asarray(state.z)
-    state = lda.LDAState(state.phi, state.psi, jnp.array(z), state.alpha,
-                         state.beta)
-    for it in range(25):
-        state = gibbs.gibbs_epoch(state, jnp.array(wi), jnp.array(di),
-                                  corpus.n_docs, args.vocab,
-                                  seed=it * 13 + 1, block_size=512)
-    model = rtlda.build_model(state.phi, state.beta, state.alpha)
-    server = BatchingServer(model, batch=args.batch,
-                            query_len=args.query_len,
-                            n_trials=args.n_trials)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    model, state = build_model(args.topics, args.vocab, args.train_iters)
+    # the mid-run swap target: same shapes, rebuilt Φ (a later aggregate)
+    model_b = rtlda.build_model(state.phi + 1, state.beta, state.alpha)
 
-    rng = np.random.default_rng(1)
-    lats = []
-    for step in range(args.steps):
-        qc, _ = synthetic.lda_corpus(seed=500 + step, n_docs=args.batch,
-                                     n_topics=20, vocab_size=args.vocab,
-                                     query_like=True)
-        reqs = [qc.word_ids[qc.doc_ids == d] for d in range(qc.n_docs)]
-        t0 = time.perf_counter()
-        out = server.infer(reqs)
-        lats.append(time.perf_counter() - t0)
-    lat = np.array(lats[1:]) * 1e3
-    print(f"batch={args.batch} trials={args.n_trials}: "
-          f"{lat.mean():.1f} ms/batch, {args.batch/(lat.mean()/1e3):,.0f} QPS, "
-          f"p99 {np.quantile(lat, 0.99):.1f} ms")
+    engine = TopicEngine(model, buckets=buckets, max_batch=args.batch,
+                         n_trials=args.n_trials,
+                         max_delay_ms=args.max_delay_ms)
+
+    # warm the whole (row-bucket, length-bucket) program grid so the run
+    # measures serving, not XLA compiles (O(len(buckets)·log batch) programs)
+    for b in buckets:
+        rows = 1
+        while rows < args.batch:
+            engine.infer([np.zeros((b,), np.int32)] * rows)
+            rows *= 2
+        # full batches run at rows=args.batch even when it isn't a power of
+        # two (_row_bucket caps there) — warm that shape too
+        engine.infer([np.zeros((b,), np.int32)] * args.batch)
+    engine.reset_stats()
+
+    n = max(1, int(args.qps * args.duration))
+    traffic = make_traffic(n, args.vocab, buckets)
+    rng = np.random.default_rng(7)
+    gaps = rng.exponential(1.0 / args.qps, size=n)
+    arrivals = np.cumsum(gaps)
+
+    futs = []
+    swapped_at = None
+    t0 = time.monotonic()
+    for i, (req, at) in enumerate(zip(traffic, arrivals)):
+        lag = t0 + at - time.monotonic()
+        if lag > 0:
+            time.sleep(lag)          # open loop: schedule is the clock's, not ours
+        if args.swap_mid and swapped_at is None and i >= n // 2:
+            engine.swap_model(model_b)
+            swapped_at = i
+        futs.append(engine.submit(req, deadline_ms=args.deadline_ms))
+    responses = [f.result(timeout=60) for f in futs]
+    wall = time.monotonic() - t0
+    engine.close()
+
+    lat = np.array([r.latency_ms for r in responses])
+    stats = engine.stats()
+    assert all(np.isfinite(r.pkd).all() for r in responses)
+    n_trunc = sum(r.truncated for r in responses)
+    record = {
+        "bench": "serve_open_loop",
+        "offered_qps": args.qps,
+        "achieved_qps": len(responses) / wall,
+        "duration_s": wall,
+        "n_requests": len(responses),
+        "p50_ms": float(np.quantile(lat, 0.5)),
+        "p99_ms": float(np.quantile(lat, 0.99)),
+        "mean_ms": float(lat.mean()),
+        "deadline_ms": args.deadline_ms,
+        "deadline_miss_rate": stats.deadline_miss_rate,
+        "mean_batch_occupancy": stats.mean_batch_occupancy,
+        "buckets": list(buckets),
+        "per_bucket": {str(k): v for k, v in stats.per_bucket.items()},
+        "truncated": n_trunc,
+        "swap_mid": swapped_at is not None,
+        "n_trials": args.n_trials,
+        "topics": args.topics,
+    }
+    print(f"offered {args.qps:,.0f} QPS → achieved "
+          f"{record['achieved_qps']:,.0f} QPS over {wall:.1f}s | "
+          f"p50 {record['p50_ms']:.1f} ms  p99 {record['p99_ms']:.1f} ms | "
+          f"miss rate {stats.deadline_miss_rate:.1%} @ "
+          f"{args.deadline_ms:.0f} ms | occupancy "
+          f"{stats.mean_batch_occupancy:.2f} | buckets {record['per_bucket']}"
+          + (f" | hot-swap at req {swapped_at}" if swapped_at is not None
+             else ""))
+    if args.bench_out:
+        with open(args.bench_out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"[bench] wrote {args.bench_out}")
+    return record
 
 
 if __name__ == "__main__":

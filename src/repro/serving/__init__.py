@@ -1,0 +1,10 @@
+"""RT-LDA serving: async deadline-aware engine + legacy sync facade.
+
+DESIGN.md §3.5: queue → bucketer → compiled programs → futures.
+"""
+from repro.serving.engine import TopicEngine
+from repro.serving.protocol import EngineStats, Request, Response
+from repro.serving.server import BatchingServer
+
+__all__ = ["TopicEngine", "EngineStats", "Request", "Response",
+           "BatchingServer"]

@@ -1,0 +1,315 @@
+"""``TopicEngine`` — the async, deadline-aware RT-LDA serving front.
+
+Peacock answers unseen queries "in milliseconds" from backend inference
+servers (§3.2, Fig. 5A). The tail-latency story has three parts, and each is
+a concrete mechanism here:
+
+  queue → bucketer → compiled programs → futures
+
+* **submit() → Future** — callers enqueue and move on; a background batching
+  loop owns the device. One Python thread is enough: the GIL is released
+  inside XLA execution, so submission and inference overlap.
+* **Deadline-aware flushing** — a batch launches when it *fills*, or when the
+  oldest queued request's slack expires: ``arrival + (deadline − service
+  estimate)`` for deadlined requests (the service estimate is a per-bucket
+  EWMA of measured batch latency), ``arrival + max_delay_ms`` for
+  best-effort ones. Waiting longer than that can only convert met deadlines
+  into missed ones.
+* **Shape buckets** — one compiled program per (row-bucket, length-bucket)
+  shape. A 3-token query pays 8-token padding instead of 64, long queries
+  route to wider buckets instead of being silently truncated, and partial
+  flushes pad rows to the next power of two so the executable count stays
+  O(len(buckets) · log max_batch), not O(traffic).
+* **Lock-free model hot-swap** — ``swap_model`` publishes a new
+  :class:`RTLDAModel` with one reference assignment; each flush reads the
+  reference once, so every batch runs against exactly one model (no torn
+  batches) and the train→aggregate loop can push fresh Φ mid-traffic.
+* **stats()** — QPS, p50/p99 latency, batch occupancy, deadline-miss rate.
+
+The clock is injectable (``clock=...``) and the loop can be driven manually
+(``start=False`` + ``pump()``), which is how the deadline logic is unit
+tested without sleeping.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import features
+from repro.core.rtlda import DEFAULT_BUCKETS, RTLDAModel, select_bucket
+from repro.serving.protocol import EngineStats, Request, Response, percentiles
+
+_LAT_WINDOW = 4096   # recent completions kept for p50/p99
+_OCC_WINDOW = 512    # recent flushes kept for occupancy
+
+
+def _row_bucket(n: int, max_batch: int) -> int:
+    """Next power of two ≥ n, capped at max_batch (bounded executable count)."""
+    b = 1
+    while b < n and b < max_batch:
+        b <<= 1
+    return min(b, max_batch)
+
+
+class TopicEngine:
+    """Async batched RT-LDA inference with deadlines, buckets and hot-swap."""
+
+    def __init__(self, model: RTLDAModel, *,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_batch: int = 256,
+                 n_iters: int = 5, n_trials: int = 2, top_n: int = 30,
+                 max_delay_ms: float = 5.0,
+                 service_estimate_ms: float = 2.0,
+                 clock=time.monotonic,
+                 start: bool = True):
+        if not buckets:
+            raise ValueError("need at least one shape bucket")
+        self.buckets: Tuple[int, ...] = tuple(sorted(int(b) for b in buckets))
+        self.max_batch = int(max_batch)
+        self.max_delay_ms = float(max_delay_ms)
+        self._model = model
+        self._infer = features.make_serving_fn(
+            n_iters=n_iters, n_trials=n_trials, top_n=top_n)
+        self._clock = clock
+
+        self._cv = threading.Condition()
+        # per-bucket FIFO of (Request, Future, flush_by_s, truncated)
+        self._pending: Dict[int, collections.deque] = {
+            b: collections.deque() for b in self.buckets}
+        self._est_ms: Dict[int, float] = {
+            b: float(service_estimate_ms) for b in self.buckets}
+        self._next_id = 0
+        self._seed = 0
+        self._stop = False
+
+        self._t0 = clock()
+        self._n_submitted = 0
+        self._n_completed = 0
+        self._n_truncated = 0
+        self._n_missed = 0
+        self._n_deadlined = 0
+        self._per_bucket: Dict[int, int] = {b: 0 for b in self.buckets}
+        self._lat_ms = collections.deque(maxlen=_LAT_WINDOW)
+        self._occupancy = collections.deque(maxlen=_OCC_WINDOW)
+
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self._thread = threading.Thread(
+                target=self._run, name="topic-engine", daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, tokens, deadline_ms: Optional[float] = None) -> Future:
+        """Enqueue one query; resolves to a :class:`Response`."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        now = self._clock()
+        bucket, truncated = select_bucket(len(toks), self.buckets)
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("TopicEngine is closed")
+            req = Request(tokens=toks, request_id=self._next_id,
+                          arrival_s=now, deadline_ms=deadline_ms)
+            self._next_id += 1
+            self._n_submitted += 1
+            if deadline_ms is None:
+                slack_ms = self.max_delay_ms
+            else:
+                slack_ms = max(0.0, deadline_ms - self._est_ms[bucket])
+            fut: Future = Future()
+            self._pending[bucket].append(
+                (req, fut, now + slack_ms / 1e3, truncated))
+            self._cv.notify()
+        return fut
+
+    def infer(self, requests: Sequence, deadline_ms: Optional[float] = None
+              ) -> List[Response]:
+        """Sync convenience: submit all, force a drain, return in order."""
+        futs = [self.submit(r, deadline_ms) for r in requests]
+        self.flush_all()
+        return [f.result() for f in futs]
+
+    def swap_model(self, model: RTLDAModel) -> None:
+        """Atomically publish a new serving model (one reference store; each
+        flush reads it once, so no batch ever sees a half-swapped model).
+        Same-shaped models reuse the compiled programs — no recompile."""
+        self._model = model
+
+    def stats(self) -> EngineStats:
+        with self._cv:
+            now = self._clock()
+            p50, p99 = percentiles(self._lat_ms)
+            elapsed = max(now - self._t0, 1e-9)
+            occ = (float(np.mean(self._occupancy))
+                   if self._occupancy else 0.0)
+            miss_rate = (self._n_missed / self._n_deadlined
+                         if self._n_deadlined else 0.0)
+            return EngineStats(
+                submitted=self._n_submitted,
+                completed=self._n_completed,
+                truncated=self._n_truncated,
+                deadline_missed=self._n_missed,
+                qps=self._n_completed / elapsed,
+                p50_ms=p50, p99_ms=p99,
+                mean_batch_occupancy=occ,
+                deadline_miss_rate=miss_rate,
+                per_bucket=dict(self._per_bucket),
+            )
+
+    def reset_stats(self) -> None:
+        """Zero the counters/windows (e.g. after a compile-warming pass).
+        The EWMA service estimates are kept — they are scheduling state."""
+        with self._cv:
+            self._t0 = self._clock()
+            self._n_submitted = self._n_completed = 0
+            self._n_truncated = self._n_missed = self._n_deadlined = 0
+            self._per_bucket = {b: 0 for b in self.buckets}
+            self._lat_ms.clear()
+            self._occupancy.clear()
+
+    def close(self) -> None:
+        """Stop the loop; drains anything still queued first."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        self.flush_all()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------ batching loop
+
+    def pump(self, force: bool = False) -> int:
+        """Flush every due bucket (all non-empty ones when ``force``).
+
+        The background thread calls this on wakeup; tests and the sync
+        adapter call it directly — with an injected fake clock this is the
+        whole deadline path, no sleeping. Returns batches flushed.
+        """
+        flushed = 0
+        while True:
+            now = self._clock()
+            batch = self._pop_batch(now, force)
+            if batch is None:
+                return flushed
+            self._run_batch(*batch)
+            flushed += 1
+
+    def flush_all(self) -> int:
+        return self.pump(force=True)
+
+    def _pop_batch(self, now: float, force: bool):
+        """Under the lock, pop the most urgent due batch (or None)."""
+        with self._cv:
+            due: List[Tuple[float, int]] = []
+            for b, q in self._pending.items():
+                if not q:
+                    continue
+                # min over the queue, not the head: a tight-deadline request
+                # queued behind a best-effort one must still flush on time
+                flush_by = min(e[2] for e in q)
+                if force or len(q) >= self.max_batch or now >= flush_by:
+                    due.append((flush_by, b))
+            if not due:
+                return None
+            _, bucket = min(due)   # oldest slack first
+            q = self._pending[bucket]
+            entries = [q.popleft() for _ in range(min(len(q), self.max_batch))]
+            self._seed += 1
+            return bucket, entries, self._seed
+
+    def _run_batch(self, bucket: int, entries, seed: int) -> None:
+        """Pad, run the bucket's compiled program, resolve futures.
+
+        Never raises: an inference failure (e.g. a hot-swapped model with
+        incompatible shapes) resolves every popped future with the exception
+        instead of killing the batching thread with futures stranded, and
+        futures the caller already cancelled are dropped, not re-resolved.
+        """
+        # claim each future; drop the ones cancelled while they were queued
+        entries = [e for e in entries if e[1].set_running_or_notify_cancel()]
+        if not entries:
+            return
+        model = self._model          # ONE read: the hot-swap atomicity point
+        rows = _row_bucket(len(entries), self.max_batch)
+        q = np.full((rows, bucket), -1, np.int32)
+        for i, (req, _, _, _) in enumerate(entries):
+            toks = req.tokens[:bucket]
+            q[i, :len(toks)] = toks
+        t_launch = self._clock()
+        try:
+            pkd, ids, w = self._infer(model, q, seed)
+            pkd, ids, w = map(np.asarray, (pkd, ids, w))
+        except Exception as exc:     # noqa: BLE001 — forwarded to callers
+            for _, fut, _, _ in entries:
+                fut.set_exception(exc)
+            return
+        now = self._clock()
+        service_ms = (now - t_launch) * 1e3
+
+        responses = []
+        for i, (req, fut, _, truncated) in enumerate(entries):
+            latency_ms = (now - req.arrival_s) * 1e3
+            missed = (req.deadline_ms is not None
+                      and latency_ms > req.deadline_ms)
+            responses.append((fut, req.deadline_ms is not None, Response(
+                request_id=req.request_id,
+                pkd=pkd[i], feature_ids=ids[i], feature_weights=w[i],
+                bucket=bucket, truncated=truncated,
+                latency_ms=latency_ms, deadline_missed=missed)))
+
+        with self._cv:
+            # EWMA service estimate drives future requests' flush slack
+            self._est_ms[bucket] = 0.8 * self._est_ms[bucket] + 0.2 * service_ms
+            self._occupancy.append(len(entries) / rows)
+            for _, had_deadline, resp in responses:
+                self._n_completed += 1
+                self._per_bucket[bucket] += 1
+                self._lat_ms.append(resp.latency_ms)
+                if resp.truncated:
+                    self._n_truncated += 1
+                if had_deadline:
+                    self._n_deadlined += 1
+                    if resp.deadline_missed:
+                        self._n_missed += 1
+        for fut, _, resp in responses:
+            fut.set_result(resp)
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                if self._stop:
+                    return
+                timeout = self._wait_timeout(self._clock())
+                if timeout is None or timeout > 0:
+                    self._cv.wait(timeout if timeout is not None else 0.05)
+                if self._stop:
+                    return
+            self.pump()
+
+    def _wait_timeout(self, now: float) -> Optional[float]:
+        """Seconds until the next flush deadline; 0 if a flush is already
+        due; None when nothing is queued (idle — poll slowly)."""
+        soonest = None
+        for q in self._pending.values():
+            if not q:
+                continue
+            if len(q) >= self.max_batch:
+                return 0.0
+            flush_by = min(e[2] for e in q)
+            soonest = flush_by if soonest is None else min(soonest, flush_by)
+        if soonest is None:
+            return None
+        return max(0.0, soonest - now)

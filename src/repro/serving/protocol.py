@@ -1,0 +1,102 @@
+"""Typed serving protocol: ``Request`` in, ``Response`` out, ``EngineStats`` aside.
+
+Peacock's backend inference servers (§3.2, Fig. 5A) sit between a query
+front-end and the RT-LDA programs; the contract at that boundary is small and
+worth making explicit instead of the ad-hoc result dicts the first
+``BatchingServer`` returned:
+
+  * ``Request`` — the token ids plus the two things the batcher needs to
+    schedule it: when it arrived (engine clock) and how much deadline it has.
+  * ``Response`` — P(k|d), the Eq.-5 topic features, and the *serving
+    metadata* industrial callers act on: which shape bucket ran it, whether
+    the tail of an over-long query was dropped (``truncated`` — never silent),
+    measured latency, and whether its deadline was missed.
+  * ``EngineStats`` — the counters a load balancer or autoscaler reads:
+    QPS, p50/p99 latency, mean batch occupancy, deadline-miss rate.
+
+Everything here is plain data (numpy, not jax arrays) so responses can cross
+thread/process boundaries without touching the device runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One query as the engine queues it.
+
+    ``deadline_ms`` is total latency budget from arrival; ``None`` means
+    best-effort (the engine still caps batching delay at its configured
+    ``max_delay_ms``). ``arrival_s`` is on the engine's injectable clock.
+    """
+
+    tokens: np.ndarray          # [n] int32 word ids
+    request_id: int
+    arrival_s: float
+    deadline_ms: Optional[float] = None
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.tokens.shape[0])
+
+    def deadline_s(self) -> Optional[float]:
+        """Absolute completion deadline on the engine clock, if any."""
+        if self.deadline_ms is None:
+            return None
+        return self.arrival_s + self.deadline_ms / 1e3
+
+
+@dataclasses.dataclass
+class Response:
+    """Inference result + serving metadata for one request."""
+
+    request_id: int
+    pkd: np.ndarray             # [K] f32 — P(k|d), normalized
+    feature_ids: np.ndarray     # [top_n] int32 — Eq.-5 word ids
+    feature_weights: np.ndarray  # [top_n] f32 — Eq.-5 weights, descending
+    bucket: int                 # padded query length the request ran at
+    truncated: bool             # tokens beyond the largest bucket were dropped
+    latency_ms: float           # arrival → completion, engine clock
+    deadline_missed: bool       # latency_ms > deadline_ms (False if no deadline)
+
+    def as_dict(self) -> dict:
+        """Legacy ``BatchingServer.infer`` result-dict view."""
+        return {
+            "pkd": self.pkd,
+            "feature_ids": self.feature_ids,
+            "feature_weights": self.feature_weights,
+            "truncated": self.truncated,
+        }
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate serving counters since engine start (windowed percentiles)."""
+
+    submitted: int
+    completed: int
+    truncated: int
+    deadline_missed: int
+    qps: float                  # completed / wall seconds since start
+    p50_ms: float               # over the recent-latency window
+    p99_ms: float
+    mean_batch_occupancy: float  # real rows / padded rows, recent flushes
+    deadline_miss_rate: float   # missed / completed-with-deadline
+    per_bucket: Dict[int, int]  # completed requests per shape bucket
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["per_bucket"] = {str(k): v for k, v in self.per_bucket.items()}
+        return d
+
+
+def percentiles(lat_ms, qs: Tuple[float, ...] = (0.5, 0.99)):
+    """(p50, p99, ...) of a latency window; zeros when the window is empty."""
+    if len(lat_ms) == 0:
+        return tuple(0.0 for _ in qs)
+    arr = np.asarray(lat_ms, np.float64)
+    return tuple(float(np.quantile(arr, q)) for q in qs)

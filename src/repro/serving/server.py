@@ -1,52 +1,47 @@
-"""Batched RT-LDA serving loop.
+"""``BatchingServer`` — the legacy sync facade over :class:`TopicEngine`.
 
-Peacock's backend inference servers accept variable-length queries and answer
-in milliseconds (§3.2). ``BatchingServer`` pads/queues requests into fixed
-[batch, query_len] tensors (one compiled program), runs RT-LDA with parallel
-trials, and returns per-request P(k|d) + Eq.-5 topic features.
+Kept for backward compatibility: existing call sites construct it with
+``(model, batch, query_len, ...)`` and call ``infer(list) -> list of dicts``.
+Internally every request now routes through the engine's shape buckets, so
+the old failure mode — requests longer than ``query_len`` silently losing
+their tail — is gone: long queries go to a wider bucket, and only queries
+exceeding the *largest* bucket are truncated, flagged via ``truncated`` in
+the result dict (and on the underlying :class:`Response`).
+
+New code should use :class:`repro.serving.TopicEngine` directly (async
+futures, deadlines, hot-swap, stats).
 """
 from __future__ import annotations
 
 from typing import List, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.rtlda import RTLDAModel
+from repro.serving.engine import TopicEngine
 
-from repro.core import features
-from repro.core.rtlda import RTLDAModel, rtlda_infer_batch
+# how far the compatibility bucket ladder extends past query_len before
+# truncation kicks in (query_len, 2q, 4q, 8q)
+_LADDER = (1, 2, 4, 8)
 
 
 class BatchingServer:
     def __init__(self, model: RTLDAModel, batch: int = 256,
                  query_len: int = 12, n_trials: int = 2, n_iters: int = 5,
                  top_n: int = 30):
-        self.model = model
         self.batch = batch
         self.query_len = query_len
-        self._seed = 0
-        self._infer = jax.jit(
-            lambda q, s: features.query_topic_features(
-                model, q, seed=s, n_iters=n_iters, n_trials=n_trials,
-                top_n=top_n))
+        # engine in manual-pump mode: the sync path is deterministic (no
+        # background timer can split a batch between two infer() calls)
+        self.engine = TopicEngine(
+            model,
+            buckets=tuple(query_len * m for m in _LADDER),
+            max_batch=batch, n_trials=n_trials, n_iters=n_iters, top_n=top_n,
+            start=False)
 
-    def _pad(self, requests: Sequence[np.ndarray]) -> np.ndarray:
-        q = np.full((self.batch, self.query_len), -1, np.int32)
-        for i, r in enumerate(requests[: self.batch]):
-            toks = np.asarray(r, np.int32)[: self.query_len]
-            q[i, : len(toks)] = toks
-        return q
+    @property
+    def model(self) -> RTLDAModel:
+        return self.engine._model
 
-    def infer(self, requests: Sequence[np.ndarray]):
-        """Process up to ``batch`` requests; returns list of result dicts."""
-        out: List[dict] = []
-        for lo in range(0, len(requests), self.batch):
-            chunk = requests[lo: lo + self.batch]
-            q = self._pad(chunk)
-            self._seed += 1
-            pkd, ids, w = self._infer(jnp.array(q), self._seed)
-            pkd, ids, w = map(np.asarray, (pkd, ids, w))
-            for i in range(len(chunk)):
-                out.append({"pkd": pkd[i], "feature_ids": ids[i],
-                            "feature_weights": w[i]})
-        return out
+    def infer(self, requests: Sequence) -> List[dict]:
+        """Process all requests synchronously; returns result dicts in order
+        (``pkd``, ``feature_ids``, ``feature_weights``, ``truncated``)."""
+        return [r.as_dict() for r in self.engine.infer(requests)]

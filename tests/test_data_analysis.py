@@ -128,3 +128,21 @@ def test_collective_parse():
     assert out["all-gather"] == 8 * 128 * 4
     assert out["all-reduce"] == 1024 * 2
     assert out["collective-permute"] == 16 * 4
+
+
+def test_collective_parse_variadic_tuple():
+    # tuple-shaped variadic collectives (several operands on one op) used to
+    # be skipped entirely — the ROADMAP parser gap. Async -start tuples
+    # interleave (operand, result, context) and count their largest element,
+    # not the sum (summing would double-count payload+result).
+    hlo = """
+  %ar = (f32[128]{0}, s32[64]{0}) all-reduce(%a, %b), replica_groups={}
+  %ag = (u8[256]{0}) all-gather(%e), replica_groups={}
+  %ags = (f32[8]{0}, f32[16]{0}) all-gather-start(%g), replica_groups={}
+  %cps = (f32[100]{0}, f32[100]{0}, u32[], u32[]) collective-permute-start(%h)
+  %plain = f32[100]{0} all-reduce(%f), to_apply=%add
+    """
+    out = analysis.collective_bytes(hlo)
+    assert out["all-reduce"] == (128 * 4 + 64 * 4) + 100 * 4
+    assert out["all-gather"] == 256 * 1 + 16 * 4   # -start: result, not op+result
+    assert out["collective-permute"] == 100 * 4    # not 2× the buffer

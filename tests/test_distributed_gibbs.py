@@ -102,6 +102,47 @@ print("AGG_COMPRESSED_OK")
 """
 
 
+ELASTIC_HIERARCHY_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import hierarchy
+
+# Fault injection for run_hierarchical + elastic aggregation (§3.1.4): pod 1
+# dies for the first boundary (its delta must be excluded) and rejoins at the
+# next (its fresh delta counts again). A deterministic stub epoch — pod p adds
+# (p+1) everywhere — makes the expected merges exact integers.
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*3)
+P_, M, rows, K = 2, 4, 8, 6
+phi0 = jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32), (P_, M, rows, K)).copy()
+psi0 = jnp.zeros((P_, K), jnp.int32)
+wl = dl = uid = z = jnp.zeros((P_, 1), jnp.int32)   # untouched by the stub
+inc = (jnp.arange(P_, dtype=jnp.int32) + 1)[:, None, None, None]
+
+def epoch(phi, psi, wl, dl, uid, z, alpha, beta, seed):
+    return phi + inc, psi + inc[:, :, 0, 0], wl, dl, uid, z
+
+agg = hierarchy.make_elastic_aggregate(mesh)
+schedule = {1: np.array([1, 0]), 3: np.array([1, 1])}   # boundaries at ep 1, 3
+out = hierarchy.run_hierarchical(
+    epoch, agg, (phi0, psi0, wl, dl, uid, z), alpha=None, beta=None,
+    n_epochs=4, agg_every=2, seed0=0, liveness=lambda ep: schedule[ep])
+phi, psi = out[0], out[1]
+assert agg.last_n_live == 2                     # pod 1 rejoined by boundary 2
+# boundary 1 (live=[1,0]): merged = ref + 2·1  → pod 1's 2·2 dropped
+# boundary 2 (live=[1,1]): merged += 2·1 + 2·2 → total ref + 8
+expect_phi = np.asarray(phi0) + 8
+assert (np.asarray(phi) == expect_phi).all(), np.asarray(phi)[:, 0, 0]
+assert (np.asarray(phi)[0] == np.asarray(phi)[1]).all()   # rejoin: pods agree
+assert (np.asarray(psi)[0] == np.asarray(psi)[1]).all()
+
+# same run with both pods live at every boundary picks up the extra 2·2
+out_all = hierarchy.run_hierarchical(
+    epoch, agg, (phi0, psi0, wl, dl, uid, z), alpha=None, beta=None,
+    n_epochs=4, agg_every=2, seed0=0, liveness=lambda ep: np.array([1, 1]))
+assert (np.asarray(out_all[0]) == np.asarray(phi0) + 12).all()
+print("ELASTIC_HIERARCHY_OK")
+"""
+
+
 SHARDED_LOOKUP_CODE = r"""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -137,6 +178,11 @@ def test_hierarchical_pods(subproc):
 def test_compressed_aggregate_matches_exact(subproc):
     out = subproc(AGG_COMPRESSED_CODE, n_devices=8)
     assert "AGG_COMPRESSED_OK" in out
+
+
+def test_elastic_hierarchy_fault_injection(subproc):
+    out = subproc(ELASTIC_HIERARCHY_CODE, n_devices=8)
+    assert "ELASTIC_HIERARCHY_OK" in out
 
 
 def test_sharded_embedding_lookup(subproc):

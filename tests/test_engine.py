@@ -1,0 +1,245 @@
+"""TopicEngine: deadline-aware flushing (fake clock), buckets, hot-swap, stats.
+
+The engine's clock is injectable and its loop can be driven manually
+(``start=False`` + ``pump()``), so every deadline path is tested without a
+single ``sleep``.
+"""
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import rtlda
+from repro.serving import BatchingServer, TopicEngine
+
+pytestmark = pytest.mark.serve
+
+K, V = 6, 40
+
+
+def _model(seed=0):
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(rng.integers(0, 20, (V, K)).astype(np.int32))
+    alpha = jnp.full((K,), 0.5, jnp.float32)
+    return rtlda.build_model(phi, jnp.float32(0.01), alpha)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _engine(clock=None, **kw):
+    kw.setdefault("buckets", (4, 8, 16))
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("n_iters", 2)
+    kw.setdefault("n_trials", 1)
+    kw.setdefault("top_n", 3)
+    return TopicEngine(_model(), clock=clock or FakeClock(), start=False, **kw)
+
+
+# ------------------------------------------------------- bucket selection
+
+def test_bucket_selection_no_silent_truncation():
+    assert rtlda.select_bucket(3, (4, 8, 16)) == (4, False)
+    assert rtlda.select_bucket(4, (4, 8, 16)) == (4, False)
+    assert rtlda.select_bucket(5, (4, 8, 16)) == (8, False)
+    assert rtlda.select_bucket(16, (4, 8, 16)) == (16, False)
+    assert rtlda.select_bucket(17, (4, 8, 16)) == (16, True)
+
+    eng = _engine()
+    rng = np.random.default_rng(0)
+    lengths = [1, 4, 5, 9, 16, 30]
+    out = eng.infer([rng.integers(0, V, size=n) for n in lengths])
+    assert [r.bucket for r in out] == [4, 4, 8, 16, 16, 16]
+    # zero silent truncation: only the over-largest-bucket query is flagged
+    assert [r.truncated for r in out] == [False] * 5 + [True]
+    assert len({r.bucket for r in out}) == 3       # ≥3 shape buckets served
+    for r in out:
+        assert np.isfinite(r.pkd).all()
+        np.testing.assert_allclose(r.pkd.sum(), 1.0, rtol=1e-5)
+
+
+# ------------------------------------------------- deadline-aware flushing
+
+def test_partial_batch_flush_on_slack_expiry():
+    clock = FakeClock()
+    eng = _engine(clock, max_delay_ms=5.0)
+    f1 = eng.submit([1, 2])                  # best-effort → slack = max_delay
+    f2 = eng.submit([3])
+    assert eng.pump() == 0                   # t=0: batch not full, slack left
+    clock.advance_ms(4.9)
+    assert eng.pump() == 0                   # still inside the delay budget
+    clock.advance_ms(0.2)                    # oldest request's slack expires
+    assert eng.pump() == 1                   # → partial batch (2/4) flushes
+    assert f1.done() and f2.done()
+    assert f1.result().bucket == 4
+    stats = eng.stats()
+    assert stats.completed == 2
+    assert 0 < stats.mean_batch_occupancy <= 1.0
+
+
+def test_full_batch_flushes_without_waiting():
+    clock = FakeClock()
+    eng = _engine(clock, max_delay_ms=1e6)   # slack effectively infinite
+    futs = [eng.submit([i]) for i in range(4)]   # max_batch = 4
+    assert eng.pump() == 1                   # full batch goes immediately
+    assert all(f.done() for f in futs)
+
+
+def test_deadline_slack_uses_service_estimate():
+    clock = FakeClock()
+    eng = _engine(clock, service_estimate_ms=2.0)
+    eng.submit([1, 2, 3], deadline_ms=10.0)  # flush_by = arrival + (10 − 2)
+    clock.advance_ms(7.5)
+    assert eng.pump() == 0                   # inside the slack
+    clock.advance_ms(1.0)                    # 8.5 > 8 → due
+    assert eng.pump() == 1
+
+
+def test_deadline_miss_accounting():
+    clock = FakeClock()
+    eng = _engine(clock)
+    f_late = eng.submit([1, 2], deadline_ms=10.0)
+    clock.advance_ms(50.0)                   # scheduler was stalled way past it
+    f_fresh = eng.submit([3, 4], deadline_ms=1000.0)   # same bucket, rides along
+    assert eng.pump() == 1
+    assert f_late.result().deadline_missed
+    assert f_late.result().latency_ms == pytest.approx(50.0)
+    assert not f_fresh.result().deadline_missed
+    s = eng.stats()
+    assert s.deadline_missed == 1
+    assert s.deadline_miss_rate == pytest.approx(0.5)  # 1 of 2 deadlined
+
+
+def test_tight_deadline_behind_best_effort_flushes_on_time():
+    clock = FakeClock()
+    eng = _engine(clock, max_delay_ms=50.0, service_estimate_ms=1.0)
+    f_slow = eng.submit([1, 2])                  # best-effort: flush_by = 50ms
+    clock.advance_ms(1.0)
+    f_tight = eng.submit([3], deadline_ms=5.0)   # flush_by = 1 + (5−1) = 5ms
+    clock.advance_ms(3.0)
+    assert eng.pump() == 0                       # t=4ms: neither due
+    clock.advance_ms(1.5)                        # t=5.5ms: tight one is due —
+    assert eng.pump() == 1                       # min over queue, not the head
+    assert f_slow.done() and f_tight.done()
+    assert not f_tight.result().deadline_missed  # 4.5ms < its 5ms deadline
+
+
+def test_cancelled_future_does_not_strand_batchmates():
+    eng = _engine(FakeClock())
+    f_cancel = eng.submit([1, 2])
+    f_keep = eng.submit([3, 4])
+    assert f_cancel.cancel()
+    eng.flush_all()                              # must not raise InvalidStateError
+    assert f_cancel.cancelled()
+    assert np.isfinite(f_keep.result(timeout=5).pkd).all()
+
+
+def test_submit_after_close_raises():
+    eng = TopicEngine(_model(), buckets=(4,), max_batch=2, n_iters=1,
+                      n_trials=1, top_n=3)
+    eng.infer([[1, 2]])
+    eng.close()
+    with pytest.raises(RuntimeError):
+        eng.submit([1])
+
+
+def test_inference_error_resolves_futures_with_exception():
+    eng = _engine(FakeClock())
+    f = eng.submit([1, 2])
+    eng.swap_model("not a model")                # poison: next flush raises
+    eng.flush_all()
+    with pytest.raises(Exception):
+        f.result(timeout=5)                      # surfaced, not stranded
+    eng.swap_model(_model())                     # engine survives and recovers
+    out = eng.infer([[1, 2, 3]])
+    assert np.isfinite(out[0].pkd).all()
+
+
+# ------------------------------------------------------------- hot swap
+
+def test_hot_swap_is_atomic_per_batch():
+    clock = FakeClock()
+    model_b = _model(seed=9)
+    eng = _engine(clock)
+    futs = [eng.submit([1, 2, 3]), eng.submit([4, 5])]
+    eng.swap_model(model_b)                  # published before the flush
+    eng.flush_all()
+
+    # a fresh engine that always had model B issues the same seed (1) for its
+    # first flush → bitwise-identical results prove the whole batch ran on B
+    ref = _engine(clock).infer([[1, 2, 3], [4, 5]])
+    ref_eng_b = _engine(clock)
+    ref_eng_b.swap_model(model_b)
+    ref_b = ref_eng_b.infer([[1, 2, 3], [4, 5]])
+    for f, rb, ra in zip(futs, ref_b, ref):
+        np.testing.assert_array_equal(f.result().pkd, rb.pkd)
+        assert not np.allclose(f.result().pkd, ra.pkd)   # and not on A
+
+
+def test_hot_swap_under_concurrent_submits():
+    model_a, model_b = _model(0), _model(9)
+    eng = TopicEngine(model_a, buckets=(4, 8), max_batch=8, n_iters=2,
+                      n_trials=1, top_n=3, max_delay_ms=1.0)
+    rng = np.random.default_rng(2)
+    futs, stop = [], threading.Event()
+
+    def swapper():
+        flip = False
+        while not stop.is_set():
+            eng.swap_model(model_b if flip else model_a)
+            flip = not flip
+
+    th = threading.Thread(target=swapper)
+    th.start()
+    try:
+        for _ in range(200):
+            futs.append(eng.submit(rng.integers(0, V, size=int(rng.integers(1, 8)))))
+        results = [f.result(timeout=60) for f in futs]
+    finally:
+        stop.set()
+        th.join()
+        eng.close()
+    assert len(results) == 200
+    for r in results:
+        assert np.isfinite(r.pkd).all()
+        np.testing.assert_allclose(r.pkd.sum(), 1.0, rtol=1e-5)
+        assert (np.diff(r.feature_weights) <= 1e-7).all()
+
+
+# ---------------------------------------------------------------- stats
+
+def test_stats_counters_and_reset():
+    clock = FakeClock()
+    eng = _engine(clock)
+    rng = np.random.default_rng(1)
+    eng.infer([rng.integers(0, V, size=n) for n in (2, 6, 30, 3)])
+    s = eng.stats()
+    assert s.submitted == s.completed == 4
+    assert s.truncated == 1
+    assert s.per_bucket[4] == 2 and s.per_bucket[8] == 1 and s.per_bucket[16] == 1
+    assert s.p50_ms >= 0 and s.p99_ms >= s.p50_ms
+    eng.reset_stats()
+    s2 = eng.stats()
+    assert s2.submitted == s2.completed == 0 and s2.per_bucket[4] == 0
+
+
+# ------------------------------------------------- legacy adapter contract
+
+def test_batching_server_routes_long_queries_instead_of_truncating():
+    srv = BatchingServer(_model(), batch=4, query_len=4, n_trials=1,
+                         n_iters=2, top_n=3)
+    rng = np.random.default_rng(3)
+    # ladder: 4, 8, 16, 32 — length 20 routes to 32, only length 40 truncates
+    out = srv.infer([rng.integers(0, V, size=n) for n in (3, 20, 40)])
+    assert [d["truncated"] for d in out] == [False, False, True]
+    for d in out:
+        np.testing.assert_allclose(d["pkd"].sum(), 1.0, rtol=1e-5)

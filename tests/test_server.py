@@ -19,12 +19,13 @@ def test_variable_length_requests_multi_chunk():
     srv = BatchingServer(_model(), batch=4, query_len=6, n_trials=2,
                          n_iters=3, top_n=5)
     rng = np.random.default_rng(1)
-    # 11 requests > batch → three compiled chunks (4, 4, 3); lengths 1..9
-    # exercise both padding and truncation to query_len
+    # 11 requests > batch → multiple flushes; lengths 1..9 exercise padding
+    # and the bucket ladder (6, 12, ...) — nothing here is ever truncated
     requests = [rng.integers(0, V, size=int(n))
                 for n in rng.integers(1, 10, size=11)]
     out = srv.infer(requests)
     assert len(out) == len(requests)
+    assert not any(r["truncated"] for r in out)
     for r in out:
         pkd = r["pkd"]
         assert pkd.shape == (K,)
