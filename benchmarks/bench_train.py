@@ -1,0 +1,50 @@
+"""Training-driver bench — the `repro.training` line of the perf trajectory.
+
+One tiny Trainer session on host devices, timed through the Trainer's own
+metrics (the same numbers a production run writes to BENCH_train.json):
+epoch wall time, tokens/s through the ring sampler, and publish latency for
+the dedup→merge→RT-LDA export the ModelPublisher ships to serving.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+
+def trainer_session():
+    from repro.checkpoint import snapshots
+    from repro.training import Metrics, ModelPublisher, Trainer, TrainerConfig
+
+    snap_dir = tempfile.mkdtemp(prefix="bench_train_snap_")
+    cfg = TrainerConfig(n_docs=600, vocab_size=400, n_topics=16,
+                        true_topics=12, doc_len_mean=12, n_epochs=4,
+                        alpha_opt_from=2)
+    trainer = Trainer(cfg, callbacks=[
+        ModelPublisher(snap_dir, every=2),
+        Metrics(printer=lambda msg: None),   # record LL, skip the printing
+    ])
+    trainer.log = lambda msg: None           # keep the CSV stream clean
+    result = trainer.fit()
+    record = trainer.bench_record()
+    n_versions = len(snapshots.snapshot_versions(snap_dir))
+    return result, record, n_versions
+
+
+def run():
+    t0 = time.perf_counter()
+    result, record, n_versions = trainer_session()
+    total_us = (time.perf_counter() - t0) * 1e6
+    lines = [
+        ("train.epoch", (record["epoch_s_mean"] or 0.0) * 1e6,
+         f"tokens_per_s={record['tokens_per_s']:.0f}"),
+        ("train.publish", (record["publish_s_mean"] or 0.0) * 1e6,
+         f"versions={n_versions}"),
+        ("train.session", total_us,
+         f"epochs={result.epochs_run}|ll={record['ll_final']:.0f}"),
+    ]
+    return lines
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -12,13 +12,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_pipeline, bench_quality, bench_rtlda, bench_scaling
+    from benchmarks import (bench_pipeline, bench_quality, bench_rtlda,
+                            bench_scaling, bench_train)
 
     modules = [
         ("pipeline(Table1)", bench_pipeline),
         ("rtlda(Fig5)", bench_rtlda),
         ("scaling(Fig6)", bench_scaling),
         ("quality(Fig1/7/8)", bench_quality),
+        ("train(Trainer)", bench_train),
     ]
     failures = 0
     for label, mod in modules:

@@ -4,10 +4,15 @@
 #
 #   scripts/tier1.sh          # full suite
 #   scripts/tier1.sh smoke    # fast serving-engine smoke subset (-m serve)
+#   scripts/tier1.sh train    # training-driver smoke subset (-m trainer)
 set -euo pipefail
 cd "$(dirname "$0")/.."
-if [[ "${1:-}" == "smoke" ]]; then
-    shift
-    exec python -m pytest -x -q -m serve "$@"
-fi
+case "${1:-}" in
+    smoke)
+        shift
+        exec python -m pytest -x -q -m serve "$@";;
+    train)
+        shift
+        exec python -m pytest -x -q -m trainer "$@";;
+esac
 exec python -m pytest -x -q "$@"

@@ -32,7 +32,8 @@ class CheckpointManager:
         os.makedirs(root, exist_ok=True)
 
     # ------------------------------------------------------------- paths ----
-    def _step_dir(self, step: int, pod: Optional[int] = None) -> str:
+    def step_dir(self, step: int, pod: Optional[int] = None) -> str:
+        """Directory a given (step, pod) checkpoint lives in."""
         base = self.root if pod is None else os.path.join(self.root, f"pod_{pod}")
         return os.path.join(base, f"step_{step:08d}")
 
@@ -52,7 +53,7 @@ class CheckpointManager:
              pod: Optional[int] = None) -> None:
         meta = dict(meta or {})
         meta["step"] = step
-        path = self._step_dir(step, pod)
+        path = self.step_dir(step, pod)
 
         def _do():
             io.save(path, tree, meta)
@@ -60,11 +61,14 @@ class CheckpointManager:
 
         if self.async_save:
             self.wait()
-            # snapshot to host before handing to the writer thread
+            # snapshot to host before handing to the writer thread — a COPY,
+            # not np.asarray: numpy leaves would alias the caller's buffer
+            # and the epoch loop mutating (or donating) it would race the
+            # writer
             import jax
             import numpy as np
 
-            host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+            host_tree = jax.tree.map(lambda x: np.array(x), tree)
 
             def _async():
                 io.save(path, host_tree, meta)
@@ -83,14 +87,14 @@ class CheckpointManager:
     def _rotate(self, pod: Optional[int]) -> None:
         steps = self.steps(pod)
         for s in steps[: max(0, len(steps) - self.keep)]:
-            shutil.rmtree(self._step_dir(s, pod), ignore_errors=True)
+            shutil.rmtree(self.step_dir(s, pod), ignore_errors=True)
 
     # ------------------------------------------------------------ restore ---
     def restore_latest(self, like, pod: Optional[int] = None) -> Tuple[Any, dict] | None:
         steps = self.steps(pod)
         if not steps:
             return None
-        return io.load(self._step_dir(steps[-1], pod), like)
+        return io.load(self.step_dir(steps[-1], pod), like)
 
     def restart_pod(self, pod: int, like) -> Tuple[Any, dict] | None:
         """Peacock §3.1.4: restore ONE failed configuration from its own latest

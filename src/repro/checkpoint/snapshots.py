@@ -1,0 +1,97 @@
+"""Versioned RT-LDA serving snapshots — the artifact the publish pipeline ships.
+
+Layout (one directory per published model version):
+
+    <root>/v_<n>/arrays.npz      — pvk / alpha / r_topic / r_value payload
+    <root>/v_<n>/manifest.json   — version, source epoch, dedup stats
+
+Writers (``repro.training.ModelPublisher``) call :func:`save_snapshot`;
+readers (``repro.serving.SnapshotWatcher``) poll :func:`snapshot_versions`
+and :func:`load_snapshot`. Both sides get the checkpoint I/O guarantees for
+free: ``io.save`` writes to a tmp dir and renames, so a version directory is
+either complete (manifest + payload present — :func:`io.is_complete` is the
+completeness marker) or invisible; a crash mid-publish never strands a
+half-written model in front of a serving fleet.
+
+This module sits in ``repro.checkpoint`` — not training, not serving — so
+the training side can write and the serving side can read without either
+importing the other.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+from typing import List, Optional, Tuple
+
+from repro.checkpoint import io
+
+_SNAP_RE = re.compile(r"v_(\d+)")
+# dict payload (not the RTLDAModel dataclass) so readers can build the
+# ``like`` tree without knowing leaf shapes up front
+_LIKE = {"pvk": 0, "alpha": 0, "r_topic": 0, "r_value": 0}
+
+
+def snapshot_path(root: str, version: int) -> str:
+    return os.path.join(root, f"v_{version:06d}")
+
+
+def snapshot_versions(root: str) -> List[int]:
+    """Sorted complete snapshot versions under ``root`` (incomplete/foreign
+    directories are invisible, exactly like partial checkpoints)."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        m = _SNAP_RE.fullmatch(name)
+        if m and io.is_complete(os.path.join(root, name)):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_version(root: str) -> Optional[int]:
+    versions = snapshot_versions(root)
+    return versions[-1] if versions else None
+
+
+def save_snapshot(root: str, version: int, model, meta: dict | None = None
+                  ) -> str:
+    """Atomically publish ``model`` (an ``RTLDAModel``) as version ``version``.
+    Returns the snapshot directory path."""
+    meta = dict(meta or {})
+    meta["version"] = int(version)
+    tree = {"pvk": model.pvk, "alpha": model.alpha,
+            "r_topic": model.r_topic, "r_value": model.r_value}
+    path = snapshot_path(root, version)
+    io.save(path, tree, meta)
+    return path
+
+
+def load_snapshot(root: str, version: Optional[int] = None):
+    """Load one published model. Returns ``(RTLDAModel, meta)``; ``version``
+    defaults to the latest complete snapshot."""
+    import jax.numpy as jnp
+
+    from repro.core.rtlda import RTLDAModel
+
+    if version is None:
+        version = latest_version(root)
+        if version is None:
+            raise FileNotFoundError(f"no complete snapshots under {root}")
+    tree, meta = io.load(snapshot_path(root, version), _LIKE)
+    model = RTLDAModel(
+        pvk=jnp.asarray(tree["pvk"]), alpha=jnp.asarray(tree["alpha"]),
+        r_topic=jnp.asarray(tree["r_topic"]),
+        r_value=jnp.asarray(tree["r_value"]))
+    return model, meta
+
+
+def rotate_snapshots(root: str, keep: int) -> List[int]:
+    """Delete all but the newest ``keep`` versions; returns deleted versions.
+    Readers tolerate this: a version vanishing mid-poll just re-resolves to
+    the (newer) latest."""
+    versions = snapshot_versions(root)
+    drop = versions[: max(0, len(versions) - keep)] if keep > 0 else []
+    for v in drop:
+        shutil.rmtree(snapshot_path(root, v), ignore_errors=True)
+    return drop

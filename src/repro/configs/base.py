@@ -236,7 +236,7 @@ def build_lm_cell(cfg, shape_name: str, mesh, multi_pod: bool,
 def make_lm_arch(cfg, skip_long: bool = True) -> ArchSpec:
     skip = {}
     if skip_long:
-        skip["long_500k"] = "pure full-attention arch — sub-quadratic required (DESIGN.md §4)"
+        skip["long_500k"] = "pure full-attention arch — sub-quadratic required (DESIGN.md §5)"
     # MoE dispatch buffers scale with the global microbatch → smaller micros
     mpd = 1 if cfg.moe is not None else 2
     return ArchSpec(

@@ -33,6 +33,13 @@ VOCAB = 210_000
 DOCS_PER_SHARD = 4096
 TOKENS_PER_DOC = 4.5
 
+# Coordinator-schedule defaults for a production session (§3.1/§4.1):
+# aggregation every 3 epochs, Minka α optimization once the sampler has
+# burned in, checkpoints at boundary cadence. ``TrainerConfig.from_peacock_lda``
+# folds these into the typed session config.
+TRAIN_DEFAULTS = dict(agg_every=3, alpha_opt_from=10, alpha_opt_iters=3,
+                      ckpt_every=5, alpha0=50.0, beta=0.01)
+
 LDA_SHAPES = {
     "train_segment": dict(n_topics=K_TOPICS, vocab=VOCAB,
                           docs_per_shard=DOCS_PER_SHARD, kind="train"),

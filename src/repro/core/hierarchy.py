@@ -181,12 +181,17 @@ def init_pod_state(scs, n_topics: int):
 
 def run_hierarchical(
     epoch_fn, agg_fn, state, alpha, beta, n_epochs: int, agg_every: int,
-    seed0: int = 0, liveness=None,
+    seed0: int = 0, liveness=None, start_epoch: int = 0,
+    on_epoch_end=None, on_aggregate=None, refs=None,
 ):
-    """Driver: epochs in each pod, aggregate every ``agg_every`` (coordinator loop).
+    """Coordinator loop: epochs in each pod, aggregate every ``agg_every``.
 
     ``state`` = (phi, psi, wl, dl, uid, z) with pod-leading dims. Returns the
-    final state with pods merged at the last boundary.
+    final state with pods merged at the last boundary. ``agg_fn=None`` runs
+    the degenerate single-configuration schedule (no boundaries) — the same
+    loop then drives the single-pod ring sampler, so there is exactly one
+    epoch/boundary loop in the codebase (``repro.training.Trainer`` layers
+    its callback protocol on the two hooks below).
 
     ``liveness`` (optional) wires §3.1.4 fault recovery: a callable
     ``epoch -> [n_pods] liveness flags`` consulted at each aggregation
@@ -194,15 +199,33 @@ def run_hierarchical(
     :func:`make_elastic_aggregate`, whose merge excludes dead pods' deltas
     and hands every pod (rejoining ones included) the merged state. Without
     it the aggregate assumes all pods live, as before.
+
+    ``start_epoch`` resumes mid-run. When resuming a multi-pod run at an
+    epoch that is NOT an aggregation boundary, pass ``refs`` = the
+    (phi_ref, psi_ref) of the last boundary *before* the checkpoint: the
+    ΔΦ merge computes ``ref + psum(state − ref)`` and the per-pod states
+    have diverged since that boundary, so re-deriving refs from the
+    restored state would hand each pod a different ref and break the
+    pods-agree invariant at the next merge. Without ``refs`` the restored
+    state itself becomes the ref (correct only at boundaries).
+    ``on_aggregate(ep, state)`` fires after each boundary merge;
+    ``on_epoch_end(ep, state, alpha)`` fires after every epoch (post-merge
+    at boundaries) and may return a replacement ``alpha`` for the next
+    epoch — the coordinator's hyperparameter-redistribution point (Fig. 3
+    line 4).
     """
     phi, psi, wl, dl, uid, z = state
-    # refs must survive the donated epoch buffers
-    phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
-    for ep in range(n_epochs):
+    if agg_fn is not None:
+        if refs is not None:
+            phi_ref, psi_ref = refs
+        else:
+            # refs must survive the donated epoch buffers
+            phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
+    for ep in range(start_epoch, n_epochs):
         phi, psi, wl, dl, uid, z = epoch_fn(
             phi, psi, wl, dl, uid, z, alpha, beta, jnp.uint32(seed0 + ep)
         )
-        if (ep + 1) % agg_every == 0:
+        if agg_fn is not None and (ep + 1) % agg_every == 0:
             # boundary index as quantization seed (decorrelated rounding)
             if liveness is not None:
                 phi, psi = agg_fn(phi, psi, phi_ref, psi_ref,
@@ -210,4 +233,10 @@ def run_hierarchical(
             else:
                 phi, psi = agg_fn(phi, psi, phi_ref, psi_ref, seed=seed0 + ep)
             phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
+            if on_aggregate is not None:
+                on_aggregate(ep, (phi, psi, wl, dl, uid, z))
+        if on_epoch_end is not None:
+            new_alpha = on_epoch_end(ep, (phi, psi, wl, dl, uid, z), alpha)
+            if new_alpha is not None:
+                alpha = new_alpha
     return phi, psi, wl, dl, uid, z

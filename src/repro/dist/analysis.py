@@ -8,10 +8,11 @@ work inside scans, which is exactly where the samplers and layer stacks live.
 
 ``collective_bytes`` parses compiled HLO text for collective ops and sums
 their payload bytes per op kind, including tuple-shaped variadic forms
-(several operands riding one collective). Caveat (also noted at the call
-sites): collectives *inside* HLO while-loops appear once, so scan-carried
-ring traffic is undercounted — use the analytic ``model_coll_bytes`` for
-those.
+(several operands riding one collective). Collectives *inside* HLO
+while-loop bodies appear once in the text; pass ``while_trips`` (a scalar,
+or the jaxpr walker's scan-aware counts via ``hlo_collective_counts``) to
+fold loop trip counts into the accounting — without it, scan-carried ring
+traffic is undercounted exactly as before.
 """
 from __future__ import annotations
 
@@ -175,7 +176,91 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES[dtype]
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
+def _iter_collectives(text: str):
+    """Yield ``(op_kind, payload_bytes)`` for every collective in ``text``
+    (plain + tuple-shaped variadic forms, with the -start tuple rule)."""
+    for m in _COLLECTIVE_RE.finditer(text):
+        dtype, dims, op = m.groups()
+        b = _shape_bytes(dtype, dims)
+        if b:
+            yield op, b
+    for m in _VARIADIC_RE.finditer(text):
+        shapes, op, is_start = m.groups()
+        sizes = [_shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(shapes)]
+        b = (max(sizes) if is_start else sum(sizes)) if sizes else 0
+        if b:
+            yield op, b
+
+
+# computation header: `%region_0.24 (args...) -> shape {` / `ENTRY %main ... {`
+_COMP_HEADER_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+# computation references an HLO while/call/fusion makes to another computation
+_CALLEE_RE = re.compile(r"(?:body|condition|to_apply|calls)=\s*%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branches=\{([^}]*)\}")
+_NAME_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def _computation_blocks(hlo_text: str) -> Dict[str, str]:
+    """Split HLO module text into per-computation blocks. Text outside any
+    computation (raw op snippets, as the tests feed) lands under ``""``."""
+    blocks: Dict[str, list] = {"": []}
+    name = ""
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m:
+            name = m.group(1)
+        blocks.setdefault(name, []).append(line)
+        if name and line.strip() == "}":
+            name = ""
+    return {k: "\n".join(v) for k, v in blocks.items()}
+
+
+def _while_computations(blocks: Dict[str, str]) -> set:
+    """Computations executed per while-loop iteration: every ``body=`` /
+    ``condition=`` target of a ``while(...)`` op, plus everything those
+    computations call (fusions, to_apply reducers, nested whiles)."""
+    edges: Dict[str, set] = {}
+    roots: set = set()
+    for name, text in blocks.items():
+        callees = set(_CALLEE_RE.findall(text))
+        for m in _BRANCHES_RE.finditer(text):
+            callees.update(_NAME_RE.findall(m.group(1)))
+        edges[name] = callees
+        for line in text.splitlines():
+            if " while(" in line or line.lstrip().startswith("while("):
+                roots.update(_CALLEE_RE.findall(line))
+    seen: set = set()
+    todo = list(roots)
+    while todo:
+        n = todo.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        todo.extend(edges.get(n, ()))
+    return seen
+
+
+def hlo_collective_counts(cost: Cost) -> Dict[str, float]:
+    """The jaxpr walker's collective invocation counts keyed by HLO op name
+    (scan-aware: a psum inside a length-M scan counts M times). Feed this to
+    ``collective_bytes(..., while_trips=...)`` to fold trip counts in."""
+    prim_to_op = {
+        "psum": "all-reduce", "pmax": "all-reduce", "pmin": "all-reduce",
+        "ppermute": "collective-permute", "pshuffle": "collective-permute",
+        "all_gather": "all-gather", "all_to_all": "all-to-all",
+        "reduce_scatter": "reduce-scatter", "psum_scatter": "reduce-scatter",
+        "pbroadcast": "collective-broadcast",
+    }
+    out: Dict[str, float] = {}
+    for prim, n in cost.collectives.items():
+        op = prim_to_op.get(prim)
+        if op:
+            out[op] = out.get(op, 0.0) + n
+    return out
+
+
+def collective_bytes(hlo_text: str, while_trips=None) -> Dict[str, int]:
     """Payload bytes per collective op kind in compiled HLO text.
 
     ``-start`` forms count once (their ``-done`` halves carry no shape here).
@@ -185,17 +270,48 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     result and context buffers (e.g. ``(f32[N], f32[N], u32[], u32[])`` for
     collective-permute-start), so summing would double-count; they
     contribute their largest element — the transferred buffer — instead.
+
+    Collectives inside HLO while-loop bodies appear once in the text but run
+    once per iteration. ``while_trips`` folds that in:
+
+      * ``None`` — legacy behavior, loop bodies count once;
+      * a number — every while-body collective is multiplied by it;
+      * a mapping of op kind → total expected invocations (the jaxpr
+        walker's scan-aware counts, ``hlo_collective_counts(trace_cost(f,
+        *args))``): per kind, the body multiplier is derived as
+        ``(expected − outside occurrences) / inside occurrences``, so ops
+        the compiler hoisted out of the loop are not double-scaled.
+
+    The derived multiplier is per op *kind*, not per loop: when two while
+    loops with different trip counts both carry the same kind, their bytes
+    are scaled by one blended factor (total invocations are preserved, the
+    split across loops is approximate). Matching individual HLO loops to
+    individual jaxpr scans would need name correlation the compiled text
+    does not guarantee — treat multi-loop results as an estimate, like the
+    rest of the roofline inputs.
     """
-    out: Dict[str, int] = {}
-    for m in _COLLECTIVE_RE.finditer(hlo_text):
-        dtype, dims, op = m.groups()
-        b = _shape_bytes(dtype, dims)
-        if b:
-            out[op] = out.get(op, 0) + b
-    for m in _VARIADIC_RE.finditer(hlo_text):
-        shapes, op, is_start = m.groups()
-        sizes = [_shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(shapes)]
-        b = (max(sizes) if is_start else sum(sizes)) if sizes else 0
-        if b:
-            out[op] = out.get(op, 0) + b
-    return out
+    blocks = _computation_blocks(hlo_text)
+    in_loop = _while_computations(blocks)
+    out_bytes: Dict[str, int] = {}
+    out_n: Dict[str, int] = {}
+    loop_bytes: Dict[str, int] = {}
+    loop_n: Dict[str, int] = {}
+    for name, text in blocks.items():
+        b_acc, n_acc = ((loop_bytes, loop_n) if name in in_loop
+                        else (out_bytes, out_n))
+        for op, b in _iter_collectives(text):
+            b_acc[op] = b_acc.get(op, 0) + b
+            n_acc[op] = n_acc.get(op, 0) + 1
+    result: Dict[str, int] = {}
+    for op in set(out_bytes) | set(loop_bytes):
+        trips = 1.0
+        if isinstance(while_trips, dict):
+            expected = while_trips.get(op)
+            if expected is not None and loop_n.get(op, 0):
+                trips = max(1.0, (expected - out_n.get(op, 0))
+                            / loop_n[op])
+        elif while_trips is not None:
+            trips = float(while_trips)
+        result[op] = int(round(out_bytes.get(op, 0)
+                               + loop_bytes.get(op, 0) * trips))
+    return result

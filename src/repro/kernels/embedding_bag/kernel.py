@@ -13,7 +13,7 @@ is being accumulated in the VPU, the copy of row f+1 is already in flight.
 The Gibbs kernel streams K tiles; this one streams table rows — together they
 cover the two memory-access regimes (dense tile scan / random gather) of the
 paper's two hot loops (sampling ↔ big-Φ lookup, recsys embedding ≙ Φ row fetch,
-cf. DESIGN.md §4).
+cf. DESIGN.md §5).
 """
 from __future__ import annotations
 

@@ -79,21 +79,27 @@ def run_cell(spec, shape: str, multi_pod: bool, skip_jaxpr: bool = False) -> dic
         rec["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
                            "bytes": float(ca.get("bytes accessed", 0.0))}
 
-        rec["collectives_hlo"] = analysis.collective_bytes(compiled.as_text())
+        hlo_text = compiled.as_text()
+        rec["collectives_hlo"] = analysis.collective_bytes(hlo_text)
 
         if not skip_jaxpr:
             t0 = time.time()
             cost = analysis.trace_cost(cell.fn, *cell.args)
             rec["jaxpr_cost"] = {"flops": cost.flops, "bytes": cost.bytes,
                                  "trace_s": round(time.time() - t0, 1)}
+            # fold scan trip counts into the HLO while-body accounting —
+            # without this, scan-carried ring traffic counts once per loop
+            rec["collectives_hlo_folded"] = analysis.collective_bytes(
+                hlo_text, while_trips=analysis.hlo_collective_counts(cost))
         rec["model_flops"] = cell.model_flops
         rec["model_coll_bytes"] = cell.model_coll_bytes
 
         # roofline terms (global work / aggregate machine rate)
         flops = rec.get("jaxpr_cost", {}).get("flops", cell.model_flops)
         mem_bytes = rec.get("jaxpr_cost", {}).get("bytes", 0.0)
+        coll_parsed = rec.get("collectives_hlo_folded", rec["collectives_hlo"])
         coll = max(cell.model_coll_bytes,
-                   sum(rec["collectives_hlo"].values()) * chips)
+                   sum(coll_parsed.values()) * chips)
         terms = {
             "compute_s": flops / (chips * PEAK_FLOPS),
             "memory_s": mem_bytes / (chips * HBM_BW),

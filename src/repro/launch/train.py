@@ -3,12 +3,20 @@
     PYTHONPATH=src python -m repro.launch.train --docs 3000 --topics 32 \
         --epochs 20 --data-shards 2 --model-shards 2 --pods 1
 
-Drives the full stack end to end: corpus preprocessing → vocab placement →
-ring-sharded segments → distributed Gibbs epochs (hierarchical across pods if
---pods > 1) → asymmetric-α optimization → periodic checkpoints (per pod) →
-final topic de-duplication → RT-LDA model export. Supports --resume (restores
-the latest complete checkpoint, fault-recovery path §3.1.4) and --kill-at
-(simulates a mid-run failure for the recovery demo).
+Thin adapter: argparse → :class:`repro.training.TrainerConfig` → a
+:class:`repro.training.Trainer` with the standard callback stack
+(α optimization, checkpoints, failure simulation, metrics). All the driver
+logic that used to live inline here — sharding, state init, the epoch loop,
+aggregation, recovery — is the ``repro.training`` API now; this module only
+parses flags and composes callbacks.
+
+Supports --resume (restores the latest complete checkpoint, fault-recovery
+path §3.1.4) and --kill-at (simulates a mid-run failure for the recovery
+demo, exit 17). ``--publish-dir`` adds a :class:`ModelPublisher` so the run
+feeds versioned RT-LDA snapshots to a serving fleet
+(``examples/live_refresh.py`` shows the full train→publish→serve loop), and
+``--bench-out`` writes the machine-readable BENCH_train.json record (epoch
+time, tokens/s, aggregate time, publish latency).
 
 On this CPU container device counts come from XLA host devices; on a real
 cluster the same code runs under jax.distributed with the production mesh
@@ -16,10 +24,9 @@ cluster the same code runs under jax.distributed with the production mesh
 """
 import argparse
 import os
-import time
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=3000)
     ap.add_argument("--vocab", type=int, default=800)
@@ -38,121 +45,67 @@ def main():
     ap.add_argument("--kill-at", type=int, default=-1,
                     help="simulate a failure after this epoch (exit 17)")
     ap.add_argument("--package-len", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--publish-dir", default=None,
+                    help="publish versioned RT-LDA snapshots here")
+    ap.add_argument("--publish-every", type=int, default=1,
+                    help="publish every N boundaries (needs --publish-dir)")
+    ap.add_argument("--bench-out", default="BENCH_train.json",
+                    help="machine-readable bench record ('' disables)")
+    return ap
+
+
+def config_from_args(args) -> "TrainerConfig":
+    """The argparse→TrainerConfig mapping (exactly the old flag semantics)."""
+    from repro.training import TrainerConfig
+
+    return TrainerConfig(
+        n_docs=args.docs, vocab_size=args.vocab, n_topics=args.topics,
+        true_topics=args.true_topics, doc_len_mean=8,
+        n_pods=args.pods, data_shards=args.data_shards,
+        model_shards=args.model_shards,
+        n_epochs=args.epochs, agg_every=args.agg_every,
+        alpha_opt_from=args.alpha_opt_from, package_len=args.package_len,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=args.resume,
+        bench_out=args.bench_out or None,
+    )
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     n_dev_needed = args.pods * args.data_shards * args.model_shards
     if "XLA_FLAGS" not in os.environ and n_dev_needed > 1:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={n_dev_needed}")
 
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
+    from repro.training import (AlphaOptimizer, Checkpointing, KillSwitch,
+                                Metrics, ModelPublisher, Trainer)
 
-    from repro.checkpoint.manager import CheckpointManager
-    from repro.core import dedup, distributed as dist, hierarchy, lda, rtlda
-    from repro.data import corpus as corpus_mod, synthetic
+    cfg = config_from_args(args)
+    # old inline-block order: agg → α-opt → checkpoint → kill → epoch print
+    callbacks = [AlphaOptimizer(), Checkpointing()]
+    if args.kill_at > 0:
+        callbacks.append(KillSwitch(args.kill_at))
+    if args.publish_dir:
+        callbacks.append(ModelPublisher(args.publish_dir,
+                                        every=args.publish_every))
+    callbacks.append(Metrics())
 
-    # ------------------------------ data ------------------------------------
-    corpus, truth = synthetic.lda_corpus(
-        seed=0, n_docs=args.docs, n_topics=args.true_topics,
-        vocab_size=args.vocab, doc_len_mean=8)
-    print(f"[data] {corpus.n_docs} docs / {corpus.n_tokens} tokens / "
-          f"V={corpus.vocab_size}")
+    trainer = Trainer(cfg, callbacks=callbacks).setup()
+    c = trainer.corpus
+    print(f"[data] {c.n_docs} docs / {c.n_tokens} tokens / "
+          f"V={c.vocab_size}")
 
-    K = args.topics
-    M = args.data_shards * args.model_shards
-    multi_pod = args.pods > 1
-    if multi_pod:
-        mesh = jax.make_mesh((args.pods, args.data_shards, args.model_shards),
-                             ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-        scs = corpus_mod.shard_corpus_pods(corpus, args.pods, M, M, K, seed=1)
-        state = hierarchy.init_pod_state(scs, K)
-        sc0 = scs[0]
-    else:
-        mesh = jax.make_mesh((args.data_shards, args.model_shards),
-                             ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        sc0 = corpus_mod.shard_corpus(corpus, M, M, K, seed=1)
-        state = dist.device_arrays(sc0, K)
-
-    cap = sc0.word_local.shape[2]
-    cfg = dist.RingConfig(
-        n_topics=K, vocab_size=corpus.vocab_size,
-        rows_per_shard=sc0.rows_per_shard, docs_per_shard=sc0.docs_per_shard,
-        cap=cap, package_len=args.package_len or cap, n_rounds=M)
-    if multi_pod:
-        epoch_fn = hierarchy.make_pod_ring_epoch(mesh, cfg)
-        agg_fn = hierarchy.make_aggregate(mesh)
-    else:
-        epoch_fn = dist.make_ring_epoch(mesh, cfg)
-
-    alpha = jnp.full((K,), 50.0 / K, jnp.float32)
-    beta = jnp.float32(0.01)
-    mgr = CheckpointManager(args.ckpt_dir, keep=3)
-
-    start_epoch = 0
-    ckpt_like = {"state": tuple(state), "alpha": alpha}
-    if args.resume:
-        restored = mgr.restore_latest(ckpt_like)
-        if restored is not None:
-            tree, meta = restored
-            state = tuple(jnp.asarray(x) for x in tree["state"])
-            alpha = jnp.asarray(tree["alpha"])
-            start_epoch = meta["step"]
-            print(f"[recovery] resumed from epoch {start_epoch} "
-                  f"(deterministic replay covers the gap)")
-
-    # --------------------------- training loop ------------------------------
-    phi_ref = psi_ref = None
-    if multi_pod:
-        phi_ref, psi_ref = jnp.copy(state[0]), jnp.copy(state[1])
-    t0 = time.time()
-    for ep in range(start_epoch, args.epochs):
-        state = tuple(epoch_fn(*state, alpha, beta, jnp.uint32(ep * 131 + 7)))
-        if multi_pod and (ep + 1) % args.agg_every == 0:
-            phi, psi = agg_fn(state[0], state[1], phi_ref, psi_ref, seed=ep)
-            state = (phi, psi) + state[2:]
-            phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
-        if ep >= args.alpha_opt_from:
-            # coordinator: Ω_kn + doc-length histograms → Minka fixed point
-            z = state[5][0] if multi_pod else state[5]
-            dl_ = state[3][0] if multi_pod else state[3]
-            wl_ = state[2][0] if multi_pod else state[2]
-            omega = dedup.topic_count_histogram(
-                dl_.reshape(-1), z.reshape(-1),
-                (wl_ >= 0).reshape(-1), cfg.docs_per_shard * M, K)
-            hist = dedup.doc_length_histogram(jnp.array(corpus.doc_lengths()))
-            alpha = dedup.optimize_alpha(alpha, omega, hist, n_iters=3)
-        if (ep + 1) % args.ckpt_every == 0:
-            mgr.save(ep + 1, {"state": tuple(state), "alpha": alpha},
-                     pod=None)
-            print(f"[ckpt] epoch {ep+1} saved")
-        if ep + 1 == args.kill_at:
-            print(f"[failure-sim] killing run after epoch {ep+1}; "
-                  f"restart with --resume")
-            raise SystemExit(17)
-        phi0 = state[0][0] if multi_pod else state[0]
-        psi0 = state[1][0] if multi_pod else state[1]
-        ll = float(lda.word_log_likelihood(
-            jnp.asarray(dist.gather_phi(phi0, sc0, K)), psi0, beta))
-        print(f"epoch {ep+1:3d}/{args.epochs}  LL {ll:,.0f}  "
-              f"({time.time()-t0:.1f}s)")
+    trainer.fit()
 
     # ----------------------- dedup + serving export -------------------------
-    phi0 = state[0][0] if multi_pod else state[0]
-    psi0 = state[1][0] if multi_pod else state[1]
-    phi_full = jnp.asarray(dist.gather_phi(phi0, sc0, K))
-    # one O(K²V) distance pass shared by both dedup consumers
-    d_l1 = dedup.pairwise_l1(phi_full, beta)
-    frac = dedup.duplicate_fraction(phi_full, beta, 0.5, dist=d_l1)
-    cl, ncl = dedup.cluster_topics(phi_full, beta, l1_threshold=0.3, dist=d_l1)
-    phi_m, psi_m, alpha_m = dedup.merge_topics(phi_full, psi0, alpha, cl, ncl)
-    model = rtlda.build_model(jnp.asarray(phi_m), beta, jnp.asarray(alpha_m))
-    print(f"[dedup] duplicate fraction {frac:.2f}; {K} → {ncl} topics")
+    model, info = trainer.export_model()
+    print(f"[dedup] duplicate fraction {info['duplicate_fraction']:.2f}; "
+          f"{info['n_topics_raw']} → {info['n_topics']} topics")
     print(f"[export] RT-LDA model ready: V={model.pvk.shape[0]} "
           f"K={model.pvk.shape[1]}")
+    return trainer
 
 
 if __name__ == "__main__":

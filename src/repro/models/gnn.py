@@ -8,7 +8,7 @@ training uses padded neighbor matrices from ``repro.data.sampler`` (real
 uniform fanout sampling, the paper's 25-10 scheme).
 
 Peacock applicability: none at the core (no huge sharded parameter matrix) —
-see DESIGN.md §4. Distribution = data parallelism over nodes/edges.
+see DESIGN.md §5. Distribution = data parallelism over nodes/edges.
 """
 from __future__ import annotations
 

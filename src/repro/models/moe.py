@@ -11,7 +11,7 @@ E=60; sort-based is O(T·k) bookkeeping.)
 Sharding: expert weights are [E, d, f]; with E divisible by the model axis we
 shard dim 0 (expert parallelism — phi3.5's 16 experts on 16 devices), otherwise
 dim 2 (per-expert tensor parallelism — qwen2-moe's 60×1408). Chosen per config
-(``moe_shard``), cf. DESIGN.md §5.
+(``moe_shard``), cf. DESIGN.md §6.
 
 Shared experts (qwen2-moe): a dense SwiGLU over all tokens, summed with the
 routed output.

@@ -1,6 +1,6 @@
 """RecSys models: DLRM, xDeepFM, DIN, AutoInt — plus the sharded embedding path.
 
-This family is where Peacock's core idea transfers directly (DESIGN.md §4):
+This family is where Peacock's core idea transfers directly (DESIGN.md §5):
 the embedding tables are the Φ matrix — huge, sparse-accessed, keyed by ids —
 row-sharded over the ``"model"`` axis while the batch is sharded over
 ``"data"``; a lookup is "rotate the query to the parameter shard", here one

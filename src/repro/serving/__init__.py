@@ -1,10 +1,13 @@
 """RT-LDA serving: async deadline-aware engine + legacy sync facade.
 
 DESIGN.md §3.5: queue → bucketer → compiled programs → futures.
+The SnapshotWatcher closes the publish pipeline (DESIGN.md §4): it feeds
+``ModelPublisher`` snapshots into ``TopicEngine.swap_model`` live.
 """
 from repro.serving.engine import TopicEngine
 from repro.serving.protocol import EngineStats, Request, Response
 from repro.serving.server import BatchingServer
+from repro.serving.watcher import SnapshotWatcher
 
 __all__ = ["TopicEngine", "EngineStats", "Request", "Response",
-           "BatchingServer"]
+           "BatchingServer", "SnapshotWatcher"]

@@ -73,6 +73,7 @@ class TopicEngine:
         self.max_batch = int(max_batch)
         self.max_delay_ms = float(max_delay_ms)
         self._model = model
+        self._model_version = 0
         self._infer = features.make_serving_fn(
             n_iters=n_iters, n_trials=n_trials, top_n=top_n)
         self._clock = clock
@@ -134,11 +135,23 @@ class TopicEngine:
         self.flush_all()
         return [f.result() for f in futs]
 
-    def swap_model(self, model: RTLDAModel) -> None:
+    def swap_model(self, model: RTLDAModel, version=None) -> None:
         """Atomically publish a new serving model (one reference store; each
         flush reads it once, so no batch ever sees a half-swapped model).
-        Same-shaped models reuse the compiled programs — no recompile."""
-        self._model = model
+        Same-shaped models reuse the compiled programs — no recompile.
+
+        ``version`` labels the model for observability (``stats()`` reports
+        it; the SnapshotWatcher passes the snapshot version). ``None``
+        auto-increments, so every swap is visible even unlabeled."""
+        with self._cv:
+            if version is None:
+                prev = self._model_version
+                version = (prev + 1) if isinstance(prev, int) else 0
+            # model + version stored together so stats() can never report a
+            # version the flush path isn't serving yet (each flush still
+            # reads the reference exactly once, without the lock)
+            self._model = model
+            self._model_version = version
 
     def stats(self) -> EngineStats:
         with self._cv:
@@ -159,6 +172,7 @@ class TopicEngine:
                 mean_batch_occupancy=occ,
                 deadline_miss_rate=miss_rate,
                 per_bucket=dict(self._per_bucket),
+                model_version=self._model_version,
             )
 
     def reset_stats(self) -> None:

@@ -87,6 +87,7 @@ class EngineStats:
     mean_batch_occupancy: float  # real rows / padded rows, recent flushes
     deadline_miss_rate: float   # missed / completed-with-deadline
     per_bucket: Dict[int, int]  # completed requests per shape bucket
+    model_version: Optional[int] = None  # label of the live model (hot-swap)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)

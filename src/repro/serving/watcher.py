@@ -1,0 +1,115 @@
+"""``SnapshotWatcher`` — the serving side of the publish pipeline.
+
+Polls a snapshot directory (``checkpoint.snapshots`` layout, written by
+``repro.training.ModelPublisher``) and hot-swaps every new complete version
+into a live :class:`TopicEngine` via its lock-free ``swap_model``. In-flight
+requests are untouched: each engine flush reads the model reference once, so
+a swap between flushes is invisible to queued work — the train→serve refresh
+drops zero requests by construction.
+
+Use it manually (``poll()`` per tick — how the tests drive it) or as a
+background thread (``start()`` / context manager):
+
+    with TopicEngine(model) as engine, \
+         SnapshotWatcher(snap_dir, engine, poll_s=0.5) as watcher:
+        ...   # traffic; every publish shows up within one poll interval
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+from repro.checkpoint import snapshots
+
+
+class SnapshotWatcher:
+    def __init__(self, snapshot_dir: str, engine, poll_s: float = 0.5,
+                 on_swap: Optional[Callable[[int, dict], None]] = None):
+        self.snapshot_dir = snapshot_dir
+        self.engine = engine
+        self.poll_s = float(poll_s)
+        self.on_swap = on_swap
+        self.version: Optional[int] = None     # last version swapped in
+        self.swaps = 0
+        self.poll_failures = 0                 # consecutive failed reads
+        self.last_error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -------------------------------------------------------------- poll ---
+
+    def poll(self) -> Optional[int]:
+        """One tick: if a newer complete version exists, load + swap it.
+        Returns the swapped version, or None. A version rotated away between
+        listing and reading is skipped; the next tick re-resolves latest."""
+        latest = snapshots.latest_version(self.snapshot_dir)
+        if latest is None or (self.version is not None
+                              and latest <= self.version):
+            return None
+        try:
+            model, meta = snapshots.load_snapshot(self.snapshot_dir, latest)
+        except OSError as exc:
+            # rotated/incomplete mid-read: retry next tick. A PERSISTENT
+            # failure (permissions, dead mount) is visible to operators as
+            # a growing ``poll_failures`` streak + ``last_error`` — the
+            # model going stale must not be silent.
+            self.poll_failures += 1
+            self.last_error = exc
+            return None
+        self.poll_failures = 0
+        self.last_error = None
+        self.engine.swap_model(model, version=latest)
+        self.version = latest
+        self.swaps += 1
+        if self.on_swap is not None:
+            self.on_swap(latest, meta)
+        return latest
+
+    # --------------------------------------------------------- background --
+
+    def start(self) -> "SnapshotWatcher":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run,
+                                        name="snapshot-watcher", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            # keep the handle if the thread is wedged (e.g. a hung
+            # filesystem inside poll): start() then refuses to spawn a
+            # duplicate poller, and the wedged thread exits at its next
+            # tick because _stop stays set
+            if not self._thread.is_alive():
+                self._thread = None
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self.poll()
+            self._stop.wait(self.poll_s)
+
+    def wait_for_version(self, version: int, timeout_s: float = 30.0) -> bool:
+        """Block until ``version`` (or newer) is live on the engine. Polls
+        inline when the background thread isn't running."""
+        deadline = timeout_s + time.monotonic()
+        while time.monotonic() < deadline:
+            if self.version is not None and self.version >= version:
+                return True
+            if self._thread is None:
+                self.poll()
+            if self.version is not None and self.version >= version:
+                return True
+            self._stop.wait(min(self.poll_s, 0.05))
+        return False
+
+    def __enter__(self) -> "SnapshotWatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.stop()
+        return False

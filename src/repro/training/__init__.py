@@ -1,0 +1,24 @@
+"""``repro.training`` — the typed Trainer/Publisher API (train side of the loop).
+
+    TrainerConfig  — validated session description (mesh, schedule, ckpts)
+    Trainer        — owns sharding, state init, the epoch/boundary loop
+    callbacks      — Checkpointing, AlphaOptimizer, KillSwitch,
+                     ElasticLiveness, Metrics (the old inline ``if`` blocks)
+    ModelPublisher — versioned RT-LDA snapshots for the serving fleet
+
+The serving half (``repro.serving.SnapshotWatcher`` → ``TopicEngine``)
+consumes what ``ModelPublisher`` writes; ``checkpoint.snapshots`` is the
+shared format between them.
+"""
+from repro.training.callbacks import (AlphaOptimizer, Checkpointing,
+                                      ElasticLiveness, KillSwitch, Metrics,
+                                      TrainerCallback)
+from repro.training.config import TrainerConfig
+from repro.training.publisher import ModelPublisher
+from repro.training.trainer import Trainer, TrainResult
+
+__all__ = [
+    "TrainerConfig", "Trainer", "TrainResult", "TrainerCallback",
+    "Checkpointing", "AlphaOptimizer", "KillSwitch", "ElasticLiveness",
+    "Metrics", "ModelPublisher",
+]

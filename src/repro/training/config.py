@@ -1,0 +1,113 @@
+"""``TrainerConfig`` — the typed, validated description of one training session.
+
+Everything the old script-shaped ``launch/train.py`` used to hold as loose
+argparse attributes lives here: mesh/shard geometry (pods × data × model),
+epoch schedule (epochs, aggregation cadence, α-optimization onset),
+checkpointing, and the synthetic-corpus knobs used by demos and tests.
+``from_peacock_lda`` derives the production-scale session from
+``configs/peacock_lda.py`` so the paper's §4.1/§5.1 deployment is one call
+away from the same Trainer that runs the tiny CI configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    # ----------------------------------------------------------- corpus ----
+    n_docs: int = 3000
+    vocab_size: int = 800
+    n_topics: int = 32
+    true_topics: int = 20          # synthetic generator only
+    doc_len_mean: int = 8
+    # ------------------------------------------------- mesh / sharding -----
+    n_pods: int = 1
+    data_shards: int = 1
+    model_shards: int = 1
+    # --------------------------------------------------------- schedule ----
+    n_epochs: int = 20
+    agg_every: int = 3             # aggregation boundary cadence (multi-pod)
+    alpha_opt_from: int = 10       # first epoch of the Minka fixed point
+    alpha_opt_iters: int = 3
+    package_len: int = 0           # pipeline package L; 0 → cap (one package)
+    seed: int = 0                  # corpus + sampler seed
+    shard_seed: int = 1
+    # ------------------------------------------------------------ priors ---
+    alpha0: float = 50.0           # α_k init = alpha0 / K (symmetric start)
+    beta: float = 0.01
+    # ----------------------------------------------------- checkpointing ---
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 5
+    ckpt_keep: int = 3
+    ckpt_async: bool = False
+    resume: bool = False
+    # ------------------------------------------------------ dedup/export ---
+    dedup_merge_l1: float = 0.3    # cluster-merge threshold (Fig. 7B)
+    dedup_dup_l1: float = 0.5      # duplicate-fraction threshold
+    # ------------------------------------------------------------- bench ---
+    bench_out: Optional[str] = None
+
+    def __post_init__(self):
+        positive = {
+            "n_docs": self.n_docs, "vocab_size": self.vocab_size,
+            "n_topics": self.n_topics, "true_topics": self.true_topics,
+            "doc_len_mean": self.doc_len_mean, "n_pods": self.n_pods,
+            "data_shards": self.data_shards, "model_shards": self.model_shards,
+            "n_epochs": self.n_epochs, "agg_every": self.agg_every,
+            "ckpt_every": self.ckpt_every, "ckpt_keep": self.ckpt_keep,
+        }
+        for name, v in positive.items():
+            if int(v) <= 0:
+                raise ValueError(f"TrainerConfig.{name} must be > 0, got {v}")
+        if self.n_topics < 2:
+            raise ValueError("TrainerConfig.n_topics must be >= 2")
+        if self.package_len < 0:
+            raise ValueError("TrainerConfig.package_len must be >= 0")
+        if not (0.0 < self.beta):
+            raise ValueError("TrainerConfig.beta must be > 0")
+        if self.alpha0 <= 0.0:
+            raise ValueError("TrainerConfig.alpha0 must be > 0")
+        if self.resume and self.ckpt_dir is None:
+            raise ValueError("TrainerConfig.resume requires ckpt_dir")
+
+    # ------------------------------------------------------ derived --------
+    @property
+    def ring_size(self) -> int:
+        """M — devices per pod = data_shards × model_shards (ring length)."""
+        return self.data_shards * self.model_shards
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_pods * self.ring_size
+
+    @property
+    def multi_pod(self) -> bool:
+        return self.n_pods > 1
+
+    def replace(self, **kw) -> "TrainerConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -------------------------------------------------- derivations --------
+    @classmethod
+    def from_peacock_lda(cls, n_pods: int = 1, data_shards: int = 16,
+                         model_shards: int = 16, **overrides
+                         ) -> "TrainerConfig":
+        """The paper's production session (configs/peacock_lda.py scale):
+        V = 2.1e5 SOSO vocabulary, K = 1e5 topics, 4096-doc data shards on a
+        16×16 ring per pod. Anything not pinned by the paper config can be
+        overridden (n_epochs, ckpt_dir, ...)."""
+        from repro.configs import peacock_lda as pl
+
+        base = dict(
+            n_docs=data_shards * model_shards * pl.DOCS_PER_SHARD,
+            vocab_size=pl.VOCAB,
+            n_topics=pl.K_TOPICS,
+            doc_len_mean=max(1, int(round(pl.TOKENS_PER_DOC))),
+            n_pods=n_pods, data_shards=data_shards,
+            model_shards=model_shards,
+            **pl.TRAIN_DEFAULTS,
+        )
+        base.update(overrides)
+        return cls(**base)

@@ -1,0 +1,364 @@
+"""``Trainer`` — the typed training driver that owns the train side of the loop.
+
+Replaces the script-shaped ``launch/train.py`` body: corpus sharding, state
+init (single-pod ring or pod-hierarchical), the epoch/aggregation loop, and
+an event protocol through which checkpointing, α optimization, liveness,
+metrics and model publication plug in (``training/callbacks.py``). The loop
+itself is ``hierarchy.run_hierarchical`` — the Trainer supplies timed
+epoch/aggregate fns and adapts the two loop hooks into the callback events,
+so the coordinator schedule exists exactly once.
+
+    cfg = TrainerConfig(n_docs=3000, n_topics=32, data_shards=2,
+                        model_shards=2, ckpt_dir="/tmp/ck")
+    tr = Trainer(cfg, callbacks=[Checkpointing(), AlphaOptimizer(),
+                                 Metrics(), ModelPublisher("/tmp/snaps")])
+    result = tr.fit()
+    model, info = tr.export_model()        # dedup + merge → RT-LDA
+
+``export_model`` is the shared train→serve export: one O(K²V) L1 distance
+pass feeds both the duplicate-fraction diagnostic and the cluster merge,
+then the merged counts become an :class:`RTLDAModel` (R cache, Eq. 3).
+``ModelPublisher`` calls the same method on a cadence and writes versioned
+snapshots a serving-side ``SnapshotWatcher`` hot-swaps into a
+``TopicEngine`` — the paper's continuously-refreshing industrial loop.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.training.callbacks import ElasticLiveness, TrainerCallback
+from repro.training.config import TrainerConfig
+
+
+@dataclasses.dataclass
+class TrainResult:
+    """What ``fit()`` hands back: final device state + session metrics."""
+
+    state: Tuple[Any, ...]       # (phi, psi, wl, dl, uid, z)
+    alpha: Any                   # [K] f32 — final asymmetric prior
+    epochs_run: int              # epochs executed by THIS fit (excl. resume)
+    start_epoch: int             # where the run began (0 unless resumed)
+    metrics: Dict[str, list]
+
+
+class Trainer:
+    """Owns mesh/corpus/state and drives the epoch loop through callbacks."""
+
+    def __init__(self, config: TrainerConfig,
+                 callbacks: Sequence[TrainerCallback] = (),
+                 corpus=None):
+        self.config = config
+        self.callbacks = list(callbacks)
+        self.metrics: Dict[str, list] = collections.defaultdict(list)
+        self.epoch = 0               # completed epochs (resume fast-forwards)
+        self.corpus = corpus         # built lazily when None
+        self.state: Optional[Tuple[Any, ...]] = None
+        self.alpha = None
+        self.beta = None
+        self.mesh = None
+        self.sc0 = None              # pod-0 / single-pod ShardedCorpus
+        self.ring_cfg = None
+        self._scs = None             # per-pod shards (multi-pod)
+        self._epoch_fn = None
+        self._agg_fn = None
+        self._refs = None            # (phi_ref, psi_ref) of the last boundary
+        self._doc_len_hist = None
+        self._built = False
+
+    # ------------------------------------------------------------ build ----
+
+    def log(self, msg: str) -> None:
+        print(msg, flush=True)
+
+    def notify(self, event: str, *args) -> None:
+        """Fire one event on every callback, in list order."""
+        for cb in self.callbacks:
+            getattr(cb, event)(self, *args)
+
+    def setup(self) -> "Trainer":
+        """Build corpus, mesh, sharded device state and the compiled fns.
+        Idempotent; ``fit()`` calls it automatically."""
+        if self._built:
+            return self
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import distributed as dist, hierarchy
+        from repro.data import corpus as corpus_mod, synthetic
+
+        cfg = self.config
+        if self.corpus is None:
+            self.corpus, _ = synthetic.lda_corpus(
+                seed=cfg.seed, n_docs=cfg.n_docs, n_topics=cfg.true_topics,
+                vocab_size=cfg.vocab_size, doc_len_mean=cfg.doc_len_mean)
+        corpus = self.corpus
+        K, M = cfg.n_topics, cfg.ring_size
+
+        if cfg.multi_pod:
+            self.mesh = jax.make_mesh(
+                (cfg.n_pods, cfg.data_shards, cfg.model_shards),
+                ("pod", "data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+            self._scs = corpus_mod.shard_corpus_pods(
+                corpus, cfg.n_pods, M, M, K, seed=cfg.shard_seed)
+            self.sc0 = self._scs[0]
+            self.state = hierarchy.init_pod_state(self._scs, K)
+        else:
+            self.mesh = jax.make_mesh(
+                (cfg.data_shards, cfg.model_shards), ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            self.sc0 = corpus_mod.shard_corpus(corpus, M, M, K,
+                                               seed=cfg.shard_seed)
+            self.state = dist.device_arrays(self.sc0, K)
+
+        cap = self.sc0.word_local.shape[-1]
+        self.ring_cfg = dist.RingConfig(
+            n_topics=K, vocab_size=corpus.vocab_size,
+            rows_per_shard=self.sc0.rows_per_shard,
+            docs_per_shard=self.sc0.docs_per_shard,
+            cap=cap, package_len=cfg.package_len or cap, n_rounds=M)
+        elastic = any(isinstance(cb, ElasticLiveness) for cb in self.callbacks)
+        if cfg.multi_pod:
+            self._epoch_fn = hierarchy.make_pod_ring_epoch(self.mesh,
+                                                           self.ring_cfg)
+            if elastic:
+                self._agg_fn = hierarchy.make_elastic_aggregate(self.mesh)
+            else:
+                self._agg_fn = hierarchy.make_aggregate(self.mesh)
+            # every pod starts from the same global replica: the initial
+            # state is its own aggregation ref (copied — epochs donate)
+            self._refs = (jnp.copy(self.state[0]), jnp.copy(self.state[1]))
+        else:
+            if elastic:
+                raise ValueError(
+                    "ElasticLiveness requires aggregation boundaries "
+                    "(n_pods > 1); a single-pod session would silently "
+                    "never consult the probe")
+            self._epoch_fn = dist.make_ring_epoch(self.mesh, self.ring_cfg)
+            self._agg_fn = None
+
+        self.alpha = jnp.full((K,), cfg.alpha0 / K, jnp.float32)
+        self.beta = jnp.float32(cfg.beta)
+        self._built = True
+        return self
+
+    # -------------------------------------------------------------- fit ----
+
+    def fit(self) -> TrainResult:
+        """Run the session: ``on_train_start`` (restore happens here), the
+        epoch/boundary loop with events, then ``on_train_end``. A
+        ``KillSwitch`` (or any callback) aborting with an exception skips
+        ``on_train_end`` — exactly the crash the resume path recovers from."""
+        from repro.core import hierarchy
+
+        self.setup()
+        cfg = self.config
+        self.notify("on_train_start")
+        start_epoch = self.epoch
+        if start_epoch >= cfg.n_epochs:
+            self.log(f"[train] nothing to do: resumed at epoch {start_epoch} "
+                     f"of {cfg.n_epochs}")
+        liveness = None
+        for cb in self.callbacks:
+            if isinstance(cb, ElasticLiveness):
+                liveness = cb.probe
+        state = hierarchy.run_hierarchical(
+            self._timed_epoch, self._timed_agg if self._agg_fn else None,
+            self.state, self.alpha, self.beta, cfg.n_epochs, cfg.agg_every,
+            seed0=cfg.seed * 131 + 7, liveness=liveness,
+            start_epoch=start_epoch,
+            on_epoch_end=self._hook_epoch_end,
+            on_aggregate=self._hook_aggregate,
+            refs=self._refs,
+        )
+        self.state = tuple(state)
+        self.notify("on_train_end")
+        return TrainResult(state=self.state, alpha=self.alpha,
+                           epochs_run=max(0, cfg.n_epochs - start_epoch),
+                           start_epoch=start_epoch,
+                           metrics={k: list(v) for k, v in self.metrics.items()})
+
+    # loop plumbing: timed fns + hook→event adaptation -----------------------
+
+    def _timed_epoch(self, *args):
+        import jax
+
+        t0 = time.perf_counter()
+        out = self._epoch_fn(*args)
+        jax.block_until_ready(out)
+        self.metrics["epoch_s"].append(time.perf_counter() - t0)
+        return out
+
+    def _timed_agg(self, *args, **kwargs):
+        import jax
+
+        t0 = time.perf_counter()
+        out = self._agg_fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        self.metrics["agg_s"].append(time.perf_counter() - t0)
+        return out
+
+    def _hook_aggregate(self, ep: int, state) -> None:
+        import jax.numpy as jnp
+
+        self.state = tuple(state)
+        # merged state IS the new ref; keep a copy that survives donation so
+        # mid-window checkpoints carry the exact refs a resume must replay
+        # against (see run_hierarchical's refs contract)
+        self._refs = (jnp.copy(state[0]), jnp.copy(state[1]))
+        self.notify("on_aggregate", ep)
+
+    def _hook_epoch_end(self, ep: int, state, alpha):
+        self.state = tuple(state)
+        self.alpha = alpha
+        self.epoch = ep + 1
+        self.notify("on_epoch_end", ep)
+        return self.alpha       # callbacks may have replaced it
+
+    # --------------------------------------------- state views / helpers ---
+
+    @property
+    def has_aggregation(self) -> bool:
+        """Whether this session has aggregation boundaries (multi-pod)."""
+        return self._agg_fn is not None
+
+    @property
+    def agg_fn(self):
+        """The boundary-merge callable (None in single-pod sessions)."""
+        return self._agg_fn
+
+    def local_model(self):
+        """(phi_shards, psi) of pod 0 (multi-pod) or the single pod."""
+        phi, psi = self.state[0], self.state[1]
+        if self.config.multi_pod:
+            return phi[0], psi[0]
+        return phi, psi
+
+    def gather_phi(self) -> np.ndarray:
+        """Reassembled global [V, K] topic-count matrix."""
+        from repro.core import distributed as dist
+
+        phi0, _ = self.local_model()
+        return np.asarray(dist.gather_phi(phi0, self.sc0,
+                                          self.config.n_topics))
+
+    def log_likelihood(self) -> float:
+        import jax.numpy as jnp
+
+        from repro.core import lda
+
+        _, psi0 = self.local_model()
+        return float(lda.word_log_likelihood(jnp.asarray(self.gather_phi()),
+                                             psi0, self.beta))
+
+    def alpha_statistics(self):
+        """Coordinator stats for the Minka fixed point: (Ω_kn histogram,
+        doc-length histogram) — two small arrays, never per-document state."""
+        import jax.numpy as jnp
+
+        from repro.core import dedup
+
+        cfg = self.config
+        multi = cfg.multi_pod
+        wl = self.state[2][0] if multi else self.state[2]
+        dl = self.state[3][0] if multi else self.state[3]
+        z = self.state[5][0] if multi else self.state[5]
+        omega = dedup.topic_count_histogram(
+            dl.reshape(-1), z.reshape(-1), (wl >= 0).reshape(-1),
+            self.ring_cfg.docs_per_shard * cfg.ring_size, cfg.n_topics)
+        if self._doc_len_hist is None:
+            self._doc_len_hist = dedup.doc_length_histogram(
+                jnp.array(self.corpus.doc_lengths()))
+        return omega, self._doc_len_hist
+
+    # ------------------------------------------------- checkpoint plumbing -
+
+    def checkpoint_tree(self) -> dict:
+        tree = {"state": tuple(self.state), "alpha": self.alpha}
+        if self.config.multi_pod:
+            # aggregation refs ride along so a resume from a mid-window
+            # checkpoint replays against the SAME last-boundary refs —
+            # re-deriving them from the restored (per-pod-divergent) state
+            # would break the pods-agree invariant at the next merge
+            tree["refs"] = tuple(self._refs)
+        return tree
+
+    def checkpoint_like(self) -> dict:
+        self.setup()
+        return self.checkpoint_tree()
+
+    def load_checkpoint(self, tree: dict, meta: dict) -> None:
+        import jax.numpy as jnp
+
+        self.state = tuple(jnp.asarray(x) for x in tree["state"])
+        self.alpha = jnp.asarray(tree["alpha"])
+        if "refs" in tree:
+            self._refs = tuple(jnp.asarray(x) for x in tree["refs"])
+        self.epoch = int(meta["step"])
+
+    # --------------------------------------------------- train→serve export
+
+    def export_model(self, merge_l1: Optional[float] = None,
+                     dup_l1: Optional[float] = None):
+        """Dedup + merge + RT-LDA build (paper §3.3 → §3.2 handoff).
+
+        One shared ``pairwise_l1`` distance pass feeds the duplicate-fraction
+        diagnostic and the cluster merge; merged counts + merged α become the
+        serving model. Returns ``(RTLDAModel, info)`` with
+        ``info = {duplicate_fraction, n_topics, n_topics_raw}``.
+        """
+        import jax.numpy as jnp
+
+        from repro.core import dedup, rtlda
+
+        cfg = self.config
+        merge_l1 = cfg.dedup_merge_l1 if merge_l1 is None else merge_l1
+        dup_l1 = cfg.dedup_dup_l1 if dup_l1 is None else dup_l1
+        _, psi0 = self.local_model()
+        phi_full = jnp.asarray(self.gather_phi())
+        d_l1 = dedup.pairwise_l1(phi_full, self.beta)
+        frac = dedup.duplicate_fraction(phi_full, self.beta, dup_l1, dist=d_l1)
+        cl, ncl = dedup.cluster_topics(phi_full, self.beta,
+                                       l1_threshold=merge_l1, dist=d_l1)
+        phi_m, psi_m, alpha_m = dedup.merge_topics(phi_full, psi0, self.alpha,
+                                                   cl, ncl)
+        model = rtlda.build_model(jnp.asarray(phi_m), self.beta,
+                                  jnp.asarray(alpha_m))
+        info = {"duplicate_fraction": float(frac), "n_topics": int(ncl),
+                "n_topics_raw": int(cfg.n_topics)}
+        return model, info
+
+    # ------------------------------------------------------------- bench ---
+
+    def bench_record(self) -> dict:
+        """Machine-readable training bench record (BENCH_train.json)."""
+        cfg = self.config
+        ep_s = self.metrics.get("epoch_s", [])
+        agg_s = self.metrics.get("agg_s", [])
+        pub_s = self.metrics.get("publish_s", [])
+        ll = self.metrics.get("ll", [])
+        tokens = int(self.corpus.n_tokens) if self.corpus is not None else 0
+        mean = lambda xs: float(np.mean(xs)) if xs else None
+        return {
+            "bench": "train",
+            "n_docs": int(self.corpus.n_docs) if self.corpus else cfg.n_docs,
+            "n_tokens": tokens,
+            "n_topics": cfg.n_topics,
+            "mesh": {"pods": cfg.n_pods, "data": cfg.data_shards,
+                     "model": cfg.model_shards},
+            "n_epochs": cfg.n_epochs,
+            "epochs_timed": len(ep_s),
+            "epoch_s_mean": mean(ep_s),
+            "epoch_s_last": ep_s[-1] if ep_s else None,
+            "tokens_per_s": (tokens / mean(ep_s)) if ep_s else None,
+            "agg_s_mean": mean(agg_s),
+            "n_aggregates": len(agg_s),
+            "publish_s_mean": mean(pub_s),
+            "n_publishes": len(pub_s),
+            "ll_final": ll[-1] if ll else None,
+        }

@@ -103,6 +103,58 @@ def test_async_save(tmp_path):
     assert mgr.steps() == [7]
 
 
+def test_async_save_snapshots_before_mutation(tmp_path):
+    """``async_save`` must snapshot to host BEFORE returning: a caller
+    mutating (or donating) its buffers right after ``save`` returns races
+    the writer thread otherwise. The snapshot happens synchronously in
+    ``save``, so the checkpoint holds the at-save values."""
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    tree = {"x": np.arange(8, dtype=np.int32)}
+    mgr.save(1, tree)
+    tree["x"][:] = -1            # epoch loop reuses the buffer immediately
+    mgr.wait()
+    restored, meta = mgr.restore_latest({"x": np.zeros(8, np.int32)})
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(restored["x"], np.arange(8))
+
+
+def test_async_save_wait_serializes_back_to_back(tmp_path):
+    """A second ``save`` waits out the first (one writer thread at a time);
+    ``wait()`` is idempotent and both checkpoints land complete."""
+    mgr = CheckpointManager(str(tmp_path), async_save=True, keep=5)
+    mgr.save(1, {"x": jnp.zeros(4)})
+    mgr.save(2, {"x": jnp.ones(4)})      # internally waits for step 1
+    mgr.wait()
+    mgr.wait()                            # second wait is a no-op
+    assert mgr.steps() == [1, 2]
+    restored, _ = mgr.restore_latest({"x": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.ones(4))
+
+
+def test_restart_pod_restores_single_configuration(tmp_path):
+    """§3.1.4: ``restart_pod`` restores ONE failed configuration from ITS
+    latest checkpoint — other pods' and the global checkpoint streams are
+    independent namespaces and stay untouched."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, {"x": jnp.full(3, 10)}, pod=0)
+    mgr.save(4, {"x": jnp.full(3, 11)}, pod=0)
+    mgr.save(3, {"x": jnp.full(3, 20)}, pod=1)
+    mgr.save(5, {"x": jnp.full(3, 99)})           # global stream
+    like = {"x": jnp.zeros(3)}
+
+    restored, meta = mgr.restart_pod(1, like)
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.full(3, 20))
+
+    restored0, meta0 = mgr.restart_pod(0, like)   # pod 0: its own latest
+    assert meta0["step"] == 4
+    np.testing.assert_array_equal(np.asarray(restored0["x"]), np.full(3, 11))
+
+    assert mgr.steps() == [5]                     # global stream unaffected
+    assert mgr.steps(pod=0) == [2, 4]
+    assert mgr.restart_pod(7, like) is None       # never-checkpointed pod
+
+
 # ------------------------------- optimizers --------------------------------
 
 def test_adamw_matches_reference_math():

@@ -146,3 +146,88 @@ def test_collective_parse_variadic_tuple():
     assert out["all-reduce"] == (128 * 4 + 64 * 4) + 100 * 4
     assert out["all-gather"] == 256 * 1 + 16 * 4   # -start: result, not op+result
     assert out["collective-permute"] == 100 * 4    # not 2× the buffer
+
+
+# a while loop whose body holds one all-reduce (plus a fusion the body calls
+# that holds a collective-permute), and one all-reduce outside the loop —
+# the shape XLA emits for a lax.scan-carried collective
+_WHILE_HLO = """
+%fused_body_inner.9 (p0: f32[4,4]) -> f32[4,4] {
+  %p0 = f32[4,4]{1,0} parameter(0)
+  %cp = f32[4,4]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+}
+
+%body.10 (arg.11: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %arg.11 = (s32[], f32[128]) parameter(0)
+  %ar.body = f32[128]{0} all-reduce(%gte.1), to_apply=%add
+  %fus = f32[4,4]{1,0} fusion(%c), kind=kLoop, calls=%fused_body_inner.9
+}
+
+%cond.20 (arg.21: (s32[], f32[128])) -> pred[] {
+  %arg.21 = (s32[], f32[128]) parameter(0)
+}
+
+ENTRY %main.30 (Arg_0.1: f32[128]) -> f32[128] {
+  %ar.entry = f32[64]{0} all-reduce(%x), to_apply=%add
+  %w = (s32[], f32[128]) while(%tuple), condition=%cond.20, body=%body.10
+}
+"""
+
+
+def test_collective_while_body_counts_once_by_default():
+    out = analysis.collective_bytes(_WHILE_HLO)
+    assert out["all-reduce"] == 128 * 4 + 64 * 4
+    assert out["collective-permute"] == 16 * 4
+
+
+def test_collective_while_body_scalar_trips():
+    # scalar while_trips multiplies everything the loop body (transitively)
+    # executes — the fusion's collective-permute included — but not the
+    # entry-computation all-reduce
+    out = analysis.collective_bytes(_WHILE_HLO, while_trips=7)
+    assert out["all-reduce"] == 7 * 128 * 4 + 64 * 4
+    assert out["collective-permute"] == 7 * 16 * 4
+
+
+def test_collective_while_body_fold_jaxpr_counts():
+    # jaxpr-walker counts: 11 all-reduces total (1 outside + body ran 10×),
+    # 10 collective-permutes (all in-loop) → per-kind derived trips
+    out = analysis.collective_bytes(
+        _WHILE_HLO, while_trips={"all-reduce": 11.0,
+                                 "collective-permute": 10.0})
+    assert out["all-reduce"] == 10 * 128 * 4 + 64 * 4
+    assert out["collective-permute"] == 10 * 16 * 4
+
+
+def test_collective_fold_from_traced_scan(subproc):
+    """End to end: a psum carried by lax.scan compiles to one all-reduce in
+    an HLO while body; folding the scan-aware jaxpr counts recovers the
+    ×length traffic the plain parse undercounts (ROADMAP open item)."""
+    code = r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.dist import analysis
+
+mesh = jax.make_mesh((2,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+L = 5
+def f(x):
+    def body(c, _):
+        return jax.lax.psum(c, "x") * 0.5, None
+    c, _ = jax.lax.scan(body, x, None, length=L)
+    return c
+sm = jax.shard_map(f, mesh=mesh, in_specs=(P("x"),), out_specs=P("x"),
+                   check_vma=False)
+arg = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+hlo = jax.jit(sm).lower(arg).compile().as_text()
+cost = analysis.trace_cost(sm, arg)
+assert cost.collectives.get("psum") == L, cost.collectives
+counts = analysis.hlo_collective_counts(cost)
+assert counts == {"all-reduce": float(L)}, counts
+legacy = analysis.collective_bytes(hlo)
+folded = analysis.collective_bytes(hlo, while_trips=counts)
+assert legacy["all-reduce"] > 0
+assert folded["all-reduce"] == L * legacy["all-reduce"], (legacy, folded)
+print("FOLD_OK")
+"""
+    out = subproc(code, n_devices=2)
+    assert "FOLD_OK" in out

@@ -1,0 +1,143 @@
+"""Publish pipeline: versioned snapshots, the ModelPublisher callback, and
+the serving-side SnapshotWatcher closing the train→publish→serve loop.
+
+Single-device (ring of 1), so everything runs in the main pytest process.
+"""
+import os
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import io, snapshots
+from repro.core import rtlda
+from repro.serving import SnapshotWatcher, TopicEngine
+from repro.training import Metrics, ModelPublisher, Trainer, TrainerConfig
+
+pytestmark = pytest.mark.trainer
+
+K, V = 6, 40
+
+
+def _model(seed=0):
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(rng.integers(0, 20, (V, K)).astype(np.int32))
+    alpha = jnp.full((K,), 0.5, jnp.float32)
+    return rtlda.build_model(phi, jnp.float32(0.01), alpha)
+
+
+# ------------------------------ snapshots ----------------------------------
+
+def test_snapshot_roundtrip(tmp_path):
+    root = str(tmp_path)
+    m = _model()
+    snapshots.save_snapshot(root, 0, m, meta={"epoch": 3})
+    model, meta = snapshots.load_snapshot(root)
+    assert meta["version"] == 0 and meta["epoch"] == 3
+    np.testing.assert_allclose(np.asarray(model.pvk), np.asarray(m.pvk))
+    np.testing.assert_array_equal(np.asarray(model.r_topic),
+                                  np.asarray(m.r_topic))
+
+
+def test_snapshot_versions_skip_incomplete(tmp_path):
+    root = str(tmp_path)
+    snapshots.save_snapshot(root, 0, _model())
+    snapshots.save_snapshot(root, 1, _model(1))
+    # crash mid-publish: payload without manifest must stay invisible
+    broken = snapshots.snapshot_path(root, 2)
+    os.makedirs(broken)
+    with open(os.path.join(broken, io.PAYLOAD), "wb") as f:
+        f.write(b"partial garbage")
+    os.makedirs(str(tmp_path / "not_a_snapshot"))
+    assert snapshots.snapshot_versions(root) == [0, 1]
+    assert snapshots.latest_version(root) == 1
+
+
+def test_snapshot_rotation(tmp_path):
+    root = str(tmp_path)
+    for v in range(5):
+        snapshots.save_snapshot(root, v, _model(v))
+    dropped = snapshots.rotate_snapshots(root, keep=2)
+    assert dropped == [0, 1, 2]
+    assert snapshots.snapshot_versions(root) == [3, 4]
+
+
+# ------------------------------- watcher -----------------------------------
+
+def test_watcher_polls_and_swaps(tmp_path):
+    root = str(tmp_path)
+    engine = TopicEngine(_model(), buckets=(4, 8), start=False)
+    w = SnapshotWatcher(root, engine, poll_s=0.01)
+    assert w.poll() is None                       # nothing there yet
+    snapshots.save_snapshot(root, 0, _model(1))
+    assert w.poll() == 0
+    assert engine.stats().model_version == 0
+    assert w.poll() is None                       # same version: no re-swap
+    snapshots.save_snapshot(root, 1, _model(2))
+    assert w.poll() == 1 and w.swaps == 2
+    assert engine.stats().model_version == 1
+
+
+def test_watcher_background_thread(tmp_path):
+    root = str(tmp_path)
+    snapshots.save_snapshot(root, 0, _model())
+    engine = TopicEngine(_model(), buckets=(4, 8), start=False)
+    swapped = threading.Event()
+    w = SnapshotWatcher(root, engine, poll_s=0.01,
+                        on_swap=lambda v, meta: swapped.set())
+    with w:
+        assert w.wait_for_version(0, timeout_s=5)
+        swapped.clear()
+        snapshots.save_snapshot(root, 3, _model(3))   # versions may skip
+        assert w.wait_for_version(3, timeout_s=5)
+    assert engine.stats().model_version == 3
+    assert swapped.is_set()
+
+
+# --------------------- live refresh, end to end ----------------------------
+
+def test_live_refresh_end_to_end(tmp_path):
+    """The acceptance loop: train with ModelPublisher, serve through a
+    SnapshotWatcher-fed TopicEngine before AND after a publish; post-publish
+    responses run on the new model version; nothing in flight is dropped."""
+    snap = str(tmp_path / "snaps")
+    cfg = TrainerConfig(n_docs=200, vocab_size=80, n_topics=10, true_topics=6,
+                        n_epochs=3, alpha_opt_from=99)
+    pub = ModelPublisher(snap, every=1, at_start=True)
+    tr = Trainer(cfg, callbacks=[pub, Metrics(printer=lambda m: None)])
+    tr.log = lambda msg: None
+    tr.setup()
+    pub.publish(tr, epoch=-1)                     # v0 before any training
+
+    model0, meta0 = snapshots.load_snapshot(snap)
+    with TopicEngine(model0, buckets=(4, 8), max_batch=32,
+                     max_delay_ms=1.0) as engine:
+        engine.swap_model(model0, version=meta0["version"])
+        watcher = SnapshotWatcher(snap, engine, poll_s=0.01)
+
+        rng = np.random.default_rng(3)
+        queries = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+                   for _ in range(8)]
+        pre = engine.infer(queries)
+        assert engine.stats().model_version == 0
+        assert all(np.isfinite(r.pkd).all() for r in pre)
+
+        # queries in flight while training publishes new versions
+        inflight = [engine.submit(q) for q in queries]
+        tr.fit()                                  # publishes v1..vN
+        assert pub.last_version is not None and pub.last_version >= 1
+
+        assert watcher.poll() == pub.last_version
+        post = engine.infer(queries)
+        stats = engine.stats()
+        assert stats.model_version == pub.last_version
+        assert all(np.isfinite(r.pkd).all() for r in post)
+        # zero dropped in-flight requests across the hot-swaps
+        for f in inflight:
+            assert np.isfinite(f.result(timeout=30).pkd).all()
+        assert stats.completed >= len(pre) + len(queries)
+
+    meta_last = snapshots.load_snapshot(snap)[1]
+    assert meta_last["version"] == pub.last_version
+    assert meta_last["epoch"] == cfg.n_epochs
