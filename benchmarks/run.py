@@ -12,8 +12,8 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_pipeline, bench_quality, bench_rtlda,
-                            bench_scaling, bench_train)
+    from benchmarks import (bench_data, bench_pipeline, bench_quality,
+                            bench_rtlda, bench_scaling, bench_train)
 
     modules = [
         ("pipeline(Table1)", bench_pipeline),
@@ -21,6 +21,7 @@ def main() -> None:
         ("scaling(Fig6)", bench_scaling),
         ("quality(Fig1/7/8)", bench_quality),
         ("train(Trainer)", bench_train),
+        ("data(Fig3/4)", bench_data),
     ]
     failures = 0
     for label, mod in modules:

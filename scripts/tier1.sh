@@ -5,6 +5,7 @@
 #   scripts/tier1.sh          # full suite
 #   scripts/tier1.sh smoke    # fast serving-engine smoke subset (-m serve)
 #   scripts/tier1.sh train    # training-driver smoke subset (-m trainer)
+#   scripts/tier1.sh data     # data-layer streaming subset (-m data)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 case "${1:-}" in
@@ -14,5 +15,8 @@ case "${1:-}" in
     train)
         shift
         exec python -m pytest -x -q -m trainer "$@";;
+    data)
+        shift
+        exec python -m pytest -x -q -m data "$@";;
 esac
 exec python -m pytest -x -q "$@"

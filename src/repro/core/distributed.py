@@ -264,23 +264,37 @@ def make_ring_epoch(mesh, cfg: RingConfig):
     return jax.jit(epoch_sm, donate_argnums=(0, 2, 3, 4, 5))
 
 
+def host_counts(sc: ShardedCorpus, n_topics: int, phi=None, psi=None):
+    """Accumulate one segment's z0 into host (phi [M, rows, K], psi [K]).
+
+    Pass the previous segment's output back in to fold several segments into
+    ONE global count state — the n_t that streamed training carries across
+    segment swaps (Fig. 3).
+    """
+    import numpy as np
+
+    S, M, cap = sc.word_local.shape
+    if phi is None:
+        phi = np.zeros((M, sc.rows_per_shard, n_topics), np.int64)
+    if psi is None:
+        psi = np.zeros((n_topics,), np.int64)
+    valid = np.asarray(sc.word_local) >= 0
+    # vocab shard of sub-block index m is m (by construction)
+    for m in range(M):
+        w = np.asarray(sc.word_local[:, m])[valid[:, m]]
+        zz = np.asarray(sc.z0[:, m])[valid[:, m]]
+        np.add.at(phi[m], (w, zz), 1)
+        np.add.at(psi, zz, 1)
+    return phi, psi
+
+
 def device_arrays(sc: ShardedCorpus, n_topics: int):
     """Host → device: the [S, M, cap] stacks + phi/psi built from z0."""
     import numpy as np
 
-    S, M, cap = sc.word_local.shape
-    rows = sc.rows_per_shard
-    phi = np.zeros((M, rows, n_topics), np.int32)
-    psi = np.zeros((n_topics,), np.int64)
-    valid = sc.word_local >= 0
-    # vocab shard of sub-block index m is m (by construction)
-    for m in range(M):
-        w = sc.word_local[:, m][valid[:, m]]
-        zz = sc.z0[:, m][valid[:, m]]
-        np.add.at(phi[m], (w, zz), 1)
-        np.add.at(psi, zz, 1)
+    phi, psi = host_counts(sc, n_topics)
     return (
-        jnp.asarray(phi),
+        jnp.asarray(phi.astype(np.int32)),
         jnp.asarray(psi.astype(np.int32)),
         jnp.asarray(sc.word_local),
         jnp.asarray(sc.doc_local),

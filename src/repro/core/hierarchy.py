@@ -183,6 +183,7 @@ def run_hierarchical(
     epoch_fn, agg_fn, state, alpha, beta, n_epochs: int, agg_every: int,
     seed0: int = 0, liveness=None, start_epoch: int = 0,
     on_epoch_end=None, on_aggregate=None, refs=None,
+    segments=None, start_segment: int = 0, on_segment_end=None,
 ):
     """Coordinator loop: epochs in each pod, aggregate every ``agg_every``.
 
@@ -192,6 +193,19 @@ def run_hierarchical(
     loop then drives the single-pod ring sampler, so there is exactly one
     epoch/boundary loop in the codebase (``repro.training.Trainer`` layers
     its callback protocol on the two hooks below).
+
+    ``segments`` (a :class:`repro.data.SegmentStream`) switches the loop to
+    the Fig. 3/4 out-of-core schedule: ``state`` is then just ``(phi, psi)``
+    — the n_t the paper carries across segment swaps — and each epoch
+    iterates the stream's segments, calling ``epoch_fn(phi, psi, wl, dl,
+    uid, z, ...)`` per segment (LoadShard), then ``segments.commit``
+    (SaveShard). The per-epoch sampler seed is shared across segments —
+    tokens carry globally-unique uids, so the counter-based RNG stays
+    decorrelated. ``start_segment`` resumes the FIRST replayed epoch at a
+    mid-epoch segment boundary (the visit order is a seeded permutation, so
+    replay regenerates it); ``on_segment_end(ep, seg, (phi, psi))`` fires
+    after each segment's swap — the segment-granular checkpoint point.
+    Streaming is single-configuration: ``agg_fn`` must be ``None``.
 
     ``liveness`` (optional) wires §3.1.4 fault recovery: a callable
     ``epoch -> [n_pods] liveness flags`` consulted at each aggregation
@@ -214,6 +228,26 @@ def run_hierarchical(
     epoch — the coordinator's hyperparameter-redistribution point (Fig. 3
     line 4).
     """
+    if segments is not None:
+        if agg_fn is not None:
+            raise ValueError("segment streaming drives a single "
+                             "configuration: agg_fn must be None")
+        phi, psi = state[0], state[1]
+        for ep in range(start_epoch, n_epochs):
+            first = start_segment if ep == start_epoch else 0
+            for seg in segments.epoch(ep, start=first):
+                phi, psi, _, _, _, z = epoch_fn(
+                    phi, psi, seg.wl, seg.dl, seg.uid, seg.z,
+                    alpha, beta, jnp.uint32(seed0 + ep))
+                segments.commit(seg, z)                      # SaveShard
+                if on_segment_end is not None:
+                    on_segment_end(ep, seg, (phi, psi))
+            if on_epoch_end is not None:
+                new_alpha = on_epoch_end(ep, (phi, psi), alpha)
+                if new_alpha is not None:
+                    alpha = new_alpha
+        return phi, psi
+
     phi, psi, wl, dl, uid, z = state
     if agg_fn is not None:
         if refs is not None:

@@ -143,6 +143,8 @@ def shard_corpus(
     placement=None,
     min_cap: int = 0,
     min_docs_per_shard: int = 0,
+    uids=None,
+    probe_only: bool = False,
 ) -> ShardedCorpus:
     """Shuffle docs (paper: randomize to balance blocks), round-robin them to data
     shards, split each shard's tokens by vocab shard, pad to one capacity.
@@ -150,7 +152,13 @@ def shard_corpus(
     ``placement`` — optional shared (shard_of, local_of, rows) so that multiple
     segments / pod partitions agree on one vocabulary layout (phi shards must be
     stable across them). ``min_cap``/``min_docs_per_shard`` force common static
-    shapes across partitions.
+    shapes across partitions. ``uids`` — optional [n_tokens] global token ids
+    (default ``arange``): a segment/pod sub-corpus must pass the ids of its
+    tokens in the FULL corpus, or tokens in different partitions would share
+    counter-based RNG keys. ``probe_only=True`` returns just
+    ``(cap, docs_per_shard)`` — the static shapes — after the vectorized
+    counting, skipping the per-token stack build (the slow pure-Python pass);
+    the common-shape two-pass builders use it so they never shard twice.
     """
     rng = np.random.default_rng(seed)
     if placement is None:
@@ -175,6 +183,8 @@ def shard_corpus(
     cap = max(int(counts.max()), min_cap)
     cap = ((cap + cap_multiple - 1) // cap_multiple) * cap_multiple
     cap = max(cap, cap_multiple)
+    if probe_only:
+        return cap, docs_per_shard
 
     S, M = n_data_shards, n_vocab_shards
     word_local = np.full((S, M, cap), -1, np.int32)
@@ -184,13 +194,15 @@ def shard_corpus(
 
     fill = np.zeros((S, M), np.int64)
     z_init = rng.integers(0, n_topics, corpus.n_tokens).astype(np.int32)
+    if uids is None:
+        uids = np.arange(corpus.n_tokens, dtype=np.uint32)
     for t in range(corpus.n_tokens):
         s = tok_data_shard[t]
         m = tok_vocab_shard[t]
         p = fill[s, m]
         word_local[s, m, p] = local_of[corpus.word_ids[t]]
         doc_local[s, m, p] = doc_local_of_doc[corpus.doc_ids[t]]
-        uid[s, m, p] = t
+        uid[s, m, p] = uids[t]
         z0[s, m, p] = z_init[t]
         fill[s, m] += 1
 
@@ -230,31 +242,64 @@ class Segments:
         return len(self.segments)
 
 
+def assign_segments(n_docs: int, n_segments: int, seed: int = 0) -> np.ndarray:
+    """Document→segment assignment from a seeded permutation.
+
+    Returns ``seg_of_doc`` [n_docs] int32. Deterministic given (n_docs,
+    n_segments, seed), balanced to within one document per segment, and —
+    unlike ``doc_id % n_segments`` — decorrelated from any ordering the
+    corpus arrived in (adjacent/near-duplicate documents spread across
+    segments, which is what keeps per-segment token counts, and therefore
+    the shared static capacity, balanced).
+    """
+    perm = np.random.default_rng(seed).permutation(n_docs)
+    seg_of = np.empty(n_docs, np.int32)
+    seg_of[perm] = np.arange(n_docs, dtype=np.int32) % n_segments
+    return seg_of
+
+
 def segment_corpus(
     corpus: Corpus, n_segments: int, n_data_shards: int, n_vocab_shards: int,
     n_topics: int, seed: int = 0,
 ) -> Segments:
-    """Split documents round-robin into segments, shard each independently.
+    """Split documents into segments (seeded permutation), shard each segment.
 
     All segments share one global vocab placement so that phi shards are stable
-    across segments (re-derived from the full-corpus frequency).
+    across segments (re-derived from the full-corpus frequency), and one common
+    static shape (cap, docs_per_shard): the ring epoch is compiled once and
+    every segment swap reuses it — segment count is a memory knob, never a
+    recompile.
     """
     if n_segments == 1:
         return Segments([shard_corpus(corpus, n_data_shards, n_vocab_shards, n_topics, seed)])
     # one global vocab placement for every segment (phi shards must be stable)
     freq = np.bincount(corpus.word_ids, minlength=corpus.vocab_size)
     placement = vocab_placement(freq, n_vocab_shards)
-    segs = []
+    seg_of = assign_segments(corpus.n_docs, n_segments, seed)
+    subs = []
+    guids = []
     for g in range(n_segments):
-        mask = (corpus.doc_ids % n_segments) == g
+        mask = seg_of[corpus.doc_ids] == g
         w = corpus.word_ids[mask]
         d = corpus.doc_ids[mask]
-        # compact doc ids within the segment
+        # compact doc ids within the segment; uids stay GLOBAL token ids
         uniq, inv = np.unique(d, return_inverse=True)
-        sub = Corpus(w, inv.astype(np.int32), len(uniq), corpus.vocab_size)
-        segs.append(shard_corpus(sub, n_data_shards, n_vocab_shards, n_topics,
-                                 seed + g, placement=placement))
-    return Segments(segs)
+        subs.append(Corpus(w, inv.astype(np.int32), len(uniq), corpus.vocab_size))
+        guids.append(np.nonzero(mask)[0].astype(np.uint32))
+    # shape probe (vectorized counting only), then ONE build per segment
+    probe = [
+        shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + g,
+                     placement=placement, probe_only=True)
+        for g, s in enumerate(subs)
+    ]
+    cap = max(c for c, _ in probe)
+    dps = max(d for _, d in probe)
+    return Segments([
+        shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + g,
+                     placement=placement, min_cap=cap, min_docs_per_shard=dps,
+                     uids=u)
+        for g, (s, u) in enumerate(zip(subs, guids))
+    ])
 
 
 def shard_corpus_pods(
@@ -270,21 +315,25 @@ def shard_corpus_pods(
     freq = np.bincount(corpus.word_ids, minlength=corpus.vocab_size)
     placement = vocab_placement(freq, n_vocab_shards)
     subs = []
+    guids = []
     for p in range(n_pods):
         mask = (corpus.doc_ids % n_pods) == p
         w = corpus.word_ids[mask]
         d = corpus.doc_ids[mask]
         uniq, inv = np.unique(d, return_inverse=True)
         subs.append(Corpus(w, inv.astype(np.int32), len(uniq), corpus.vocab_size))
-    # first pass to learn the max shapes, second to build with common shapes
+        guids.append(np.nonzero(mask)[0].astype(np.uint32))
+    # shape probe (vectorized counting only), then ONE build per pod
     probe = [
-        shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + p, placement=placement)
+        shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + p,
+                     placement=placement, probe_only=True)
         for p, s in enumerate(subs)
     ]
-    cap = max(sc.word_local.shape[2] for sc in probe)
-    dps = max(sc.docs_per_shard for sc in probe)
+    cap = max(c for c, _ in probe)
+    dps = max(d for _, d in probe)
     return [
         shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + p,
-                     placement=placement, min_cap=cap, min_docs_per_shard=dps)
-        for p, s in enumerate(subs)
+                     placement=placement, min_cap=cap, min_docs_per_shard=dps,
+                     uids=u)
+        for p, (s, u) in enumerate(zip(subs, guids))
     ]

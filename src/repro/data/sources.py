@@ -1,0 +1,304 @@
+"""``CorpusSource`` — the typed streaming corpus API behind the Trainer.
+
+The paper trains 10⁵-topic LDA from 10⁹ search queries; that corpus is never
+resident. Fig. 3/4's LoadShard/SaveShard swaps are the mechanism, and this
+module makes them the *default data path* instead of a helper the Trainer
+ignores: a source describes a corpus as global statistics plus an iterator of
+ring-sharded **segments**, and the trainer streams segments through one
+compiled ring epoch with Φ/Ψ (n_t of Fig. 3) carried across the swaps.
+
+Three implementations:
+
+  * :class:`InMemorySource`  — wraps a :class:`repro.data.corpus.Corpus`
+    (today's resident path, now just the 1-segment/1-copy special case).
+  * :class:`DiskSource`      — segments saved by :func:`save_segments` as
+    per-segment ``.npy`` shard files plus one ``placement.npz`` + ``meta.json``;
+    opened memory-mapped so only the *active* segment's tokens are resident.
+    (``.npy`` per array rather than one ``.npz`` per segment: numpy cannot
+    memory-map zip members, and mmap is the whole point.)
+  * :class:`SyntheticSource` — wraps ``synthetic.lda_corpus`` so the
+    corpus=None fallback is an explicit, logged source, not a silent default.
+
+Invariants every source guarantees:
+
+  * **stable vocab placement** — all segments share one global word→shard
+    placement, so Φ shards never move across segments, epochs, or a
+    save→load round trip;
+  * **common static shapes** — one (cap, docs_per_shard, rows_per_shard)
+    across segments, so the ring epoch compiles once;
+  * **global token uids** — every token keeps its id in the full corpus
+    (the counter-based RNG key, and the index into the trainer's global z);
+  * **deterministic iteration** — ``iter_segments(epoch)`` visits segments
+    in a per-epoch order drawn from a seeded permutation
+    (:func:`segment_order`), so resume-at-``(epoch, segment)`` replays
+    bitwise. Document→segment assignment itself is fixed at build time from
+    a seeded permutation (``corpus.assign_segments``): re-assigning per epoch
+    would change per-segment token counts, i.e. recompile the epoch and
+    invalidate on-disk segment files.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.data.corpus import Corpus, ShardedCorpus, segment_corpus
+
+META = "meta.json"
+PLACEMENT = "placement.npz"
+SEGMENT_ARRAYS = ("word_local", "doc_local", "uid", "z0")
+
+
+def segment_order(n_segments: int, epoch: int, seed: int) -> np.ndarray:
+    """Deterministic per-epoch segment visit order (seeded permutation).
+
+    Stable given (n_segments, epoch, seed) — the resume contract: a
+    checkpoint records how many segments of an epoch completed, and replay
+    regenerates the identical order to continue from that boundary.
+    """
+    if n_segments == 1:
+        return np.zeros(1, np.int64)
+    return np.random.default_rng([int(seed) & 0x7FFFFFFF, int(epoch)]).permutation(n_segments)
+
+
+class CorpusSource:
+    """Protocol base: global corpus statistics + an iterator of segments.
+
+    Attributes (all set by concrete sources): ``n_docs``, ``n_tokens``,
+    ``vocab_size``, ``n_topics``, ``n_segments``, ``n_data_shards``,
+    ``n_vocab_shards``, ``seed``, and ``corpus`` (the resident
+    :class:`Corpus`, or ``None`` for out-of-core sources).
+    """
+
+    corpus: Optional[Corpus] = None
+    n_docs: int
+    n_tokens: int
+    vocab_size: int
+    n_topics: int
+    n_segments: int
+    n_data_shards: int
+    n_vocab_shards: int
+    seed: int
+
+    def word_freq(self) -> np.ndarray:
+        """Global [V] token frequencies (drives the stable vocab placement)."""
+        raise NotImplementedError
+
+    def doc_lengths(self) -> np.ndarray:
+        """[n_docs] token counts (the α-optimizer's doc-length histogram)."""
+        raise NotImplementedError
+
+    def segment(self, g: int) -> ShardedCorpus:
+        """Segment ``g`` in its ring-sharded layout (host arrays; a
+        :class:`DiskSource` returns memory-mapped views)."""
+        raise NotImplementedError
+
+    def iter_segments(self, epoch: int) -> Iterator[Tuple[int, ShardedCorpus]]:
+        """Yield ``(segment_id, sharded_segment)`` in this epoch's visit order."""
+        for g in segment_order(self.n_segments, epoch, self.seed):
+            g = int(g)
+            yield g, self.segment(g)
+
+    def describe(self) -> str:
+        return (f"{type(self).__name__}: {self.n_docs} docs / "
+                f"{self.n_tokens} tokens / V={self.vocab_size} / "
+                f"{self.n_segments} segment(s) on a "
+                f"{self.n_data_shards}x{self.n_vocab_shards} ring")
+
+
+class InMemorySource(CorpusSource):
+    """A resident :class:`Corpus`, segmented and sharded on first access.
+
+    Lazy so that consumers who only need the corpus + stats (e.g. a
+    multi-pod Trainer, which partitions by pod instead) never pay the
+    per-token sharding pass.
+    """
+
+    def __init__(self, corpus: Corpus, n_segments: int, n_data_shards: int,
+                 n_vocab_shards: int, n_topics: int, seed: int = 0):
+        self.corpus = corpus
+        self.n_docs = int(corpus.n_docs)
+        self.n_tokens = int(corpus.n_tokens)
+        self.vocab_size = int(corpus.vocab_size)
+        self.n_topics = int(n_topics)
+        self.n_segments = int(n_segments)
+        self.n_data_shards = int(n_data_shards)
+        self.n_vocab_shards = int(n_vocab_shards)
+        self.seed = int(seed)
+        self._segments = None
+
+    def word_freq(self) -> np.ndarray:
+        return np.bincount(self.corpus.word_ids, minlength=self.vocab_size)
+
+    def doc_lengths(self) -> np.ndarray:
+        return self.corpus.doc_lengths()
+
+    def segment(self, g: int) -> ShardedCorpus:
+        if self._segments is None:
+            self._segments = segment_corpus(
+                self.corpus, self.n_segments, self.n_data_shards,
+                self.n_vocab_shards, self.n_topics, seed=self.seed).segments
+        return self._segments[g]
+
+
+class SyntheticSource(InMemorySource):
+    """Known-ground-truth LDA corpus (``synthetic.lda_corpus``) as a source.
+
+    The Trainer routes ``corpus=None`` here *explicitly* and logs it, so a
+    misconfigured ``--corpus-dir`` can never train on synthetic data
+    unnoticed. ``gen_seed`` seeds the generator; ``seed`` the segmentation.
+    """
+
+    def __init__(self, n_docs: int, vocab_size: int, true_topics: int,
+                 doc_len_mean: float, gen_seed: int, n_segments: int,
+                 n_data_shards: int, n_vocab_shards: int, n_topics: int,
+                 seed: int = 0):
+        from repro.data import synthetic
+
+        corpus, truth = synthetic.lda_corpus(
+            seed=gen_seed, n_docs=n_docs, n_topics=true_topics,
+            vocab_size=vocab_size, doc_len_mean=doc_len_mean)
+        self.truth = truth
+        self.gen_seed = int(gen_seed)
+        super().__init__(corpus, n_segments, n_data_shards, n_vocab_shards,
+                         n_topics, seed=seed)
+
+
+def save_segments(source: CorpusSource, directory: str) -> str:
+    """Write a source's segments as a :class:`DiskSource` directory.
+
+    Layout::
+
+        <dir>/placement.npz        — shard_of_word, local_of_word,
+                                     word_freq, doc_lengths (small, resident)
+        <dir>/segment_<g>/<a>.npy  — word_local / doc_local / uid / z0
+                                     (the big stacks; mmap'd on open)
+        <dir>/meta.json            — geometry + per-segment stats; written
+                                     LAST — its presence marks completeness
+
+    Returns ``directory``.
+    """
+    os.makedirs(directory, exist_ok=True)
+    # drop any previous save's completeness marker FIRST: while this save
+    # rewrites arrays, a stale meta.json would make an interrupted re-save
+    # open as a complete (but mixed old/new) corpus
+    meta_path = os.path.join(directory, META)
+    if os.path.exists(meta_path):
+        os.remove(meta_path)
+    sc0 = source.segment(0)
+    np.savez(os.path.join(directory, PLACEMENT),
+             shard_of_word=np.asarray(sc0.shard_of_word),
+             local_of_word=np.asarray(sc0.local_of_word),
+             word_freq=np.asarray(source.word_freq(), np.int64),
+             doc_lengths=np.asarray(source.doc_lengths(), np.int64))
+    seg_meta = []
+    for g in range(source.n_segments):
+        sc = source.segment(g)
+        seg_dir = os.path.join(directory, f"segment_{g:05d}")
+        os.makedirs(seg_dir, exist_ok=True)
+        for name in SEGMENT_ARRAYS:
+            np.save(os.path.join(seg_dir, f"{name}.npy"),
+                    np.asarray(getattr(sc, name)))
+        seg_meta.append({"n_real_tokens": int(sc.n_real_tokens)})
+    meta = {
+        "version": 1,
+        "n_docs": int(source.n_docs),
+        "n_tokens": int(source.n_tokens),
+        "vocab_size": int(source.vocab_size),
+        "n_topics": int(source.n_topics),
+        "n_segments": int(source.n_segments),
+        "n_data_shards": int(source.n_data_shards),
+        "n_vocab_shards": int(source.n_vocab_shards),
+        "rows_per_shard": int(sc0.rows_per_shard),
+        "docs_per_shard": int(sc0.docs_per_shard),
+        "cap": int(sc0.word_local.shape[-1]),
+        "seed": int(source.seed),
+        "segments": seg_meta,
+    }
+    tmp = os.path.join(directory, META + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(directory, META))
+    return directory
+
+
+class DiskSource(CorpusSource):
+    """Out-of-core source over a :func:`save_segments` directory.
+
+    ``segment(g)`` returns memory-mapped stack views — the OS pages in only
+    what the host→device transfer touches, so resident set ≈ one segment
+    (plus the small placement arrays), independent of corpus size.
+    """
+
+    corpus = None
+
+    def __init__(self, directory: str):
+        meta_path = os.path.join(directory, META)
+        if not os.path.isfile(meta_path):
+            raise FileNotFoundError(
+                f"{directory!r} is not a segment directory (no {META}; "
+                f"write one with repro.data.save_segments)")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        self.directory = directory
+        self._meta = meta
+        for k in ("n_docs", "n_tokens", "vocab_size", "n_topics",
+                  "n_segments", "n_data_shards", "n_vocab_shards", "seed"):
+            setattr(self, k, int(meta[k]))
+        self.rows_per_shard = int(meta["rows_per_shard"])
+        self.docs_per_shard = int(meta["docs_per_shard"])
+        self.cap = int(meta["cap"])
+        pl = np.load(os.path.join(directory, PLACEMENT))
+        self._shard_of = pl["shard_of_word"]
+        self._local_of = pl["local_of_word"]
+        self._word_freq = pl["word_freq"]
+        self._doc_lengths = pl["doc_lengths"]
+
+    def word_freq(self) -> np.ndarray:
+        return self._word_freq
+
+    def doc_lengths(self) -> np.ndarray:
+        return self._doc_lengths
+
+    def segment(self, g: int) -> ShardedCorpus:
+        if not (0 <= g < self.n_segments):
+            raise IndexError(f"segment {g} out of range [0, {self.n_segments})")
+        seg_dir = os.path.join(self.directory, f"segment_{g:05d}")
+        arrs = {name: np.load(os.path.join(seg_dir, f"{name}.npy"),
+                              mmap_mode="r")
+                for name in SEGMENT_ARRAYS}
+        return ShardedCorpus(
+            word_local=arrs["word_local"], doc_local=arrs["doc_local"],
+            uid=arrs["uid"], z0=arrs["z0"],
+            shard_of_word=self._shard_of, local_of_word=self._local_of,
+            rows_per_shard=self.rows_per_shard,
+            docs_per_shard=self.docs_per_shard,
+            n_data_shards=self.n_data_shards,
+            n_vocab_shards=self.n_vocab_shards,
+            vocab_size=self.vocab_size,
+            n_real_tokens=int(self._meta["segments"][g]["n_real_tokens"]),
+        )
+
+
+def open_segments(directory: str) -> DiskSource:
+    """Open a :func:`save_segments` directory as a :class:`DiskSource`."""
+    return DiskSource(directory)
+
+
+def initial_z(source: CorpusSource) -> np.ndarray:
+    """The global [n_tokens] initial topic assignment, scattered by uid.
+
+    This array is the trainer's authoritative z store for streamed training:
+    LoadShard gathers ``z[uid]`` per segment, SaveShard scatters the sampled
+    z back — so the assignment survives any segment layout or visit order.
+    """
+    z = np.zeros(source.n_tokens, np.int32)
+    for g in range(source.n_segments):
+        sc = source.segment(g)
+        valid = np.asarray(sc.word_local) >= 0
+        z[np.asarray(sc.uid)[valid]] = np.asarray(sc.z0)[valid]
+    return z

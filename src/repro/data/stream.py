@@ -1,0 +1,139 @@
+"""``SegmentStream`` — double-buffered LoadShard/SaveShard over a source.
+
+The Fig. 3/4 swap loop: while segment *g* trains on device, a background
+thread loads segment *g+1* (mmap read + z gather + host→device transfer), so
+the sampler never waits on I/O. ``commit`` is SaveShard: the updated z comes
+back to the host and is scattered into the trainer's global z store by uid.
+
+Prefetch is safe by construction: documents are partitioned across segments,
+so segment *g*'s SaveShard scatter and segment *g+1*'s LoadShard gather touch
+disjoint indices of the shared z array — the only concurrent host-side access
+the stream ever performs. Prefetch on/off is therefore bitwise-invisible:
+identical arrays reach the device in an identical order either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Iterator, Tuple
+
+import numpy as np
+
+from repro.data.sources import CorpusSource
+
+
+@dataclasses.dataclass
+class LoadedSegment:
+    """One segment resident on device, plus the host refs SaveShard needs."""
+
+    pos: int                    # index in this epoch's visit order
+    gid: int                    # segment id (stable across epochs)
+    wl: Any                     # [S, M, cap] device int32
+    dl: Any
+    uid: Any
+    z: Any
+    host_uid: np.ndarray        # host views for the commit scatter and the
+    host_valid: np.ndarray      # trainer's Ω fold (mmap refs — no copies)
+    host_dl: np.ndarray
+
+
+class SegmentStream:
+    """Iterate one epoch's segments with optional background prefetch.
+
+    ``z_host`` is the global [n_tokens] topic-assignment array the stream
+    gathers LoadShard z from and scatters SaveShard z into — the trainer owns
+    it (``sources.initial_z`` builds it; checkpoints carry it).
+    """
+
+    def __init__(self, source: CorpusSource, z_host: np.ndarray,
+                 prefetch: bool = True):
+        self.source = source
+        self.z = z_host
+        self.prefetch = prefetch
+        self.n_segments = source.n_segments
+
+    # ------------------------------------------------------------ load -----
+    def _load(self, pos: int, gid: int, sc) -> LoadedSegment:
+        import jax.numpy as jnp
+
+        host_uid = np.asarray(sc.uid)
+        host_valid = np.asarray(sc.word_local) >= 0
+        # pad slots carry uid 0 → they read z[0]; the sampler masks them out
+        # and commit never scatters them, so the value is numerically inert
+        z_stack = self.z[host_uid]
+        return LoadedSegment(
+            pos=pos, gid=gid,
+            wl=jnp.asarray(sc.word_local), dl=jnp.asarray(sc.doc_local),
+            uid=jnp.asarray(host_uid), z=jnp.asarray(z_stack),
+            host_uid=host_uid, host_valid=host_valid,
+            host_dl=sc.doc_local)
+
+    # ---------------------------------------------------------- commit -----
+    def commit(self, seg: LoadedSegment, z_dev) -> None:
+        """SaveShard: scatter the segment's sampled z into the global store."""
+        z_host = np.asarray(z_dev)
+        self.z[seg.host_uid[seg.host_valid]] = z_host[seg.host_valid]
+
+    # ----------------------------------------------------------- epoch -----
+    def epoch(self, epoch: int, start: int = 0) -> Iterator[LoadedSegment]:
+        """Yield this epoch's segments from visit-position ``start`` on.
+
+        The traversal IS the source's ``iter_segments(epoch)`` — one
+        implementation of the seeded per-epoch visit order, shared with
+        every other consumer of the protocol. With prefetch, a daemon
+        worker keeps exactly one segment in flight (queue depth 1 = double
+        buffering): the device trains g while the host loads g+1.
+        """
+        todo = ((pos, gid, sc)
+                for pos, (gid, sc) in enumerate(self.source.iter_segments(epoch))
+                if pos >= start)
+        if not self.prefetch or self.n_segments - start <= 1:
+            for pos, gid, sc in todo:
+                yield self._load(pos, gid, sc)
+            return
+
+        q: "queue.Queue[Tuple[str, Any]]" = queue.Queue(maxsize=1)
+        stop = threading.Event()
+        # one free-buffer token, released by the consumer as it takes a
+        # segment: the worker may only LOAD once a buffer is free, so at
+        # most two segments are ever resident (training + prefetched) —
+        # without it the worker would run a third load and park in put()
+        slots = threading.Semaphore(1)
+
+        def _put(item: Tuple[str, Any]) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def worker() -> None:
+            try:
+                for pos, gid, sc in todo:
+                    while not slots.acquire(timeout=0.1):
+                        if stop.is_set():
+                            return
+                    if not _put(("seg", self._load(pos, gid, sc))):
+                        return
+                _put(("end", None))
+            except BaseException as exc:  # noqa: BLE001 — forwarded to consumer
+                _put(("err", exc))
+
+        t = threading.Thread(target=worker, daemon=True,
+                             name="segment-prefetch")
+        t.start()
+        try:
+            while True:
+                kind, item = q.get()
+                slots.release()
+                if kind == "end":
+                    break
+                if kind == "err":
+                    raise item
+                yield item
+        finally:
+            stop.set()
+            t.join(timeout=5)

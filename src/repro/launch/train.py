@@ -18,6 +18,15 @@ feeds versioned RT-LDA snapshots to a serving fleet
 ``--bench-out`` writes the machine-readable BENCH_train.json record (epoch
 time, tokens/s, aggregate time, publish latency).
 
+Out-of-core training (``repro.data`` streaming pipeline): ``--corpus-dir``
+points at a ``repro.data.save_segments()`` directory — segments are
+memory-mapped and streamed through a double-buffered SegmentStream
+(``--no-prefetch`` disables the overlap), ``--n-segments`` segments a
+synthetic/in-memory corpus the same way, ``--ckpt-segments N`` adds
+segment-boundary checkpoints, and ``--kill-at E --kill-at-segment S`` kills
+at an intra-epoch segment boundary; ``--resume`` then lands bitwise on the
+recorded (epoch, segment).
+
 On this CPU container device counts come from XLA host devices; on a real
 cluster the same code runs under jax.distributed with the production mesh
 (launch/mesh.py).
@@ -33,7 +42,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--topics", type=int, default=32)
     ap.add_argument("--true-topics", type=int, default=20)
     ap.add_argument("--epochs", type=int, default=20)
-    ap.add_argument("--segments", type=int, default=1)
+    ap.add_argument("--n-segments", "--segments", dest="n_segments",
+                    type=int, default=1,
+                    help="out-of-core segments per epoch (Fig. 3/4 swaps)")
+    ap.add_argument("--corpus-dir", default=None,
+                    help="train from a repro.data.save_segments() directory "
+                         "(DiskSource, memory-mapped) instead of synthetic")
+    ap.add_argument("--prefetch", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="double-buffer segment loads on a background thread")
     ap.add_argument("--data-shards", type=int, default=1)
     ap.add_argument("--model-shards", type=int, default=1)
     ap.add_argument("--pods", type=int, default=1)
@@ -41,9 +58,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--alpha-opt-from", type=int, default=10)
     ap.add_argument("--ckpt-dir", default="/tmp/peacock_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--ckpt-segments", type=int, default=0,
+                    help="also checkpoint every N segment swaps (0 = off)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--kill-at", type=int, default=-1,
                     help="simulate a failure after this epoch (exit 17)")
+    ap.add_argument("--kill-at-segment", type=int, default=-1,
+                    help="with --kill-at E: die after this many segment "
+                         "swaps of the E-th epoch (segment boundary)")
     ap.add_argument("--package-len", type=int, default=0)
     ap.add_argument("--publish-dir", default=None,
                     help="publish versioned RT-LDA snapshots here")
@@ -61,6 +83,8 @@ def config_from_args(args) -> "TrainerConfig":
     return TrainerConfig(
         n_docs=args.docs, vocab_size=args.vocab, n_topics=args.topics,
         true_topics=args.true_topics, doc_len_mean=8,
+        n_segments=args.n_segments, corpus_dir=args.corpus_dir,
+        prefetch=args.prefetch,
         n_pods=args.pods, data_shards=args.data_shards,
         model_shards=args.model_shards,
         n_epochs=args.epochs, agg_every=args.agg_every,
@@ -72,7 +96,12 @@ def config_from_args(args) -> "TrainerConfig":
 
 
 def main(argv=None):
-    args = build_parser().parse_args(argv)
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    if args.kill_at_segment > 0 and args.kill_at <= 0:
+        ap.error("--kill-at-segment requires --kill-at (the epoch to die "
+                 "in); without it no KillSwitch is armed and the failure "
+                 "simulation would silently never fire")
 
     n_dev_needed = args.pods * args.data_shards * args.model_shards
     if "XLA_FLAGS" not in os.environ and n_dev_needed > 1:
@@ -84,18 +113,18 @@ def main(argv=None):
 
     cfg = config_from_args(args)
     # old inline-block order: agg → α-opt → checkpoint → kill → epoch print
-    callbacks = [AlphaOptimizer(), Checkpointing()]
+    callbacks = [AlphaOptimizer(),
+                 Checkpointing(every_segments=args.ckpt_segments or None)]
     if args.kill_at > 0:
-        callbacks.append(KillSwitch(args.kill_at))
+        at_seg = args.kill_at_segment if args.kill_at_segment > 0 else None
+        callbacks.append(KillSwitch(args.kill_at, at_segment=at_seg))
     if args.publish_dir:
         callbacks.append(ModelPublisher(args.publish_dir,
                                         every=args.publish_every))
     callbacks.append(Metrics())
 
+    # setup() logs the data source (type / docs / tokens / segments)
     trainer = Trainer(cfg, callbacks=callbacks).setup()
-    c = trainer.corpus
-    print(f"[data] {c.n_docs} docs / {c.n_tokens} tokens / "
-          f"V={c.vocab_size}")
 
     trainer.fit()
 

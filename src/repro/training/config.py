@@ -22,6 +22,10 @@ class TrainerConfig:
     n_topics: int = 32
     true_topics: int = 20          # synthetic generator only
     doc_len_mean: int = 8
+    # ------------------------------------------------- data streaming ------
+    n_segments: int = 1            # out-of-core segment count (Fig. 3/4 swaps)
+    corpus_dir: Optional[str] = None   # save_segments() dir → DiskSource
+    prefetch: bool = True          # double-buffer segment host→device loads
     # ------------------------------------------------- mesh / sharding -----
     n_pods: int = 1
     data_shards: int = 1
@@ -57,6 +61,7 @@ class TrainerConfig:
             "data_shards": self.data_shards, "model_shards": self.model_shards,
             "n_epochs": self.n_epochs, "agg_every": self.agg_every,
             "ckpt_every": self.ckpt_every, "ckpt_keep": self.ckpt_keep,
+            "n_segments": self.n_segments,
         }
         for name, v in positive.items():
             if int(v) <= 0:
@@ -71,6 +76,11 @@ class TrainerConfig:
             raise ValueError("TrainerConfig.alpha0 must be > 0")
         if self.resume and self.ckpt_dir is None:
             raise ValueError("TrainerConfig.resume requires ckpt_dir")
+        if self.n_pods > 1 and (self.n_segments > 1 or self.corpus_dir):
+            raise ValueError(
+                "segment streaming is single-configuration: n_segments > 1 "
+                "or corpus_dir cannot combine with n_pods > 1 (pods already "
+                "partition documents; segment a pod's own corpus instead)")
 
     # ------------------------------------------------------ derived --------
     @property

@@ -31,7 +31,8 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.training.callbacks import ElasticLiveness, TrainerCallback
+from repro.training.callbacks import (AlphaOptimizer, ElasticLiveness,
+                                      TrainerCallback)
 from repro.training.config import TrainerConfig
 
 
@@ -39,7 +40,9 @@ from repro.training.config import TrainerConfig
 class TrainResult:
     """What ``fit()`` hands back: final device state + session metrics."""
 
-    state: Tuple[Any, ...]       # (phi, psi, wl, dl, uid, z)
+    state: Tuple[Any, ...]       # (phi, psi, wl, dl, uid, z); streamed
+                                 # sessions carry only (phi, psi) — the
+                                 # stacks live in the SegmentStream/z store
     alpha: Any                   # [K] f32 — final asymmetric prior
     epochs_run: int              # epochs executed by THIS fit (excl. resume)
     start_epoch: int             # where the run began (0 unless resumed)
@@ -47,27 +50,44 @@ class TrainResult:
 
 
 class Trainer:
-    """Owns mesh/corpus/state and drives the epoch loop through callbacks."""
+    """Owns mesh/source/state and drives the epoch loop through callbacks.
+
+    Data always enters through a :class:`repro.data.CorpusSource`: pass one
+    via ``source=``, a resident :class:`Corpus` via ``corpus=`` (wrapped in
+    an ``InMemorySource``), set ``config.corpus_dir`` (opened as a
+    ``DiskSource``), or pass nothing — the synthetic fallback is an explicit
+    ``SyntheticSource``, and ``setup()`` logs which source (type, docs,
+    tokens, segments) the session trains on. With more than one segment the
+    epoch loop streams: (phi, psi) stay on device across segment swaps while
+    the token stacks ride through a double-buffered ``SegmentStream``.
+    """
 
     def __init__(self, config: TrainerConfig,
                  callbacks: Sequence[TrainerCallback] = (),
-                 corpus=None):
+                 corpus=None, source=None):
         self.config = config
         self.callbacks = list(callbacks)
         self.metrics: Dict[str, list] = collections.defaultdict(list)
         self.epoch = 0               # completed epochs (resume fast-forwards)
-        self.corpus = corpus         # built lazily when None
+        self.segment = 0             # segments completed in the current epoch
+        self.corpus = corpus         # resident corpus (None for DiskSource)
+        self.source = source         # CorpusSource (built in setup if None)
         self.state: Optional[Tuple[Any, ...]] = None
         self.alpha = None
         self.beta = None
         self.mesh = None
-        self.sc0 = None              # pod-0 / single-pod ShardedCorpus
+        self.sc0 = None              # pod-0 / single-pod / segment-0 shards
         self.ring_cfg = None
         self._scs = None             # per-pod shards (multi-pod)
         self._epoch_fn = None
         self._agg_fn = None
         self._refs = None            # (phi_ref, psi_ref) of the last boundary
         self._doc_len_hist = None
+        self._z = None               # global [n_tokens] z store (streaming)
+        self._streaming = False
+        self._ep_time = 0.0          # per-epoch accumulator (streaming)
+        self._omega_from = None      # first epoch that folds Ω incrementally
+        self._omega_parts = {}       # segment id → this epoch's Ω part
         self._built = False
 
     # ------------------------------------------------------------ build ----
@@ -80,8 +100,54 @@ class Trainer:
         for cb in self.callbacks:
             getattr(cb, event)(self, *args)
 
+    def _build_source(self):
+        """Resolve the session's CorpusSource (explicit > corpus_dir >
+        corpus= > synthetic) and validate its geometry against the config."""
+        from repro.data import sources as data_sources
+
+        cfg = self.config
+        K, M = cfg.n_topics, cfg.ring_size
+        if self.source is None:
+            if cfg.corpus_dir is not None:
+                self.source = data_sources.open_segments(cfg.corpus_dir)
+            elif self.corpus is not None:
+                self.source = data_sources.InMemorySource(
+                    self.corpus, cfg.n_segments, M, M, K,
+                    seed=cfg.shard_seed)
+            else:
+                # the synthetic fallback is an EXPLICIT, logged source — a
+                # misconfigured corpus_dir raises in open_segments above
+                # instead of silently training on synthetic data
+                self.source = data_sources.SyntheticSource(
+                    n_docs=cfg.n_docs, vocab_size=cfg.vocab_size,
+                    true_topics=cfg.true_topics,
+                    doc_len_mean=cfg.doc_len_mean, gen_seed=cfg.seed,
+                    n_segments=cfg.n_segments, n_data_shards=M,
+                    n_vocab_shards=M, n_topics=K, seed=cfg.shard_seed)
+        src = self.source
+        self.corpus = src.corpus
+        if src.n_data_shards != M or src.n_vocab_shards != M:
+            raise ValueError(
+                f"source ring geometry {src.n_data_shards}x"
+                f"{src.n_vocab_shards} does not match the session's "
+                f"{M}x{M} (data_shards*model_shards)")
+        if src.n_topics != K:
+            raise ValueError(f"source was sharded for K={src.n_topics}, "
+                             f"session has n_topics={K}")
+        if cfg.corpus_dir and cfg.n_segments not in (1, src.n_segments):
+            raise ValueError(
+                f"config n_segments={cfg.n_segments} but {cfg.corpus_dir!r} "
+                f"holds {src.n_segments} segments")
+        self.log(f"[data] {src.describe()}")
+        return src
+
+    @property
+    def n_segments(self) -> int:
+        """Segments per epoch (1 on the resident and multi-pod paths)."""
+        return self.source.n_segments if self._streaming else 1
+
     def setup(self) -> "Trainer":
-        """Build corpus, mesh, sharded device state and the compiled fns.
+        """Build source, mesh, sharded device state and the compiled fns.
         Idempotent; ``fit()`` calls it automatically."""
         if self._built:
             return self
@@ -89,36 +155,49 @@ class Trainer:
         import jax.numpy as jnp
 
         from repro.core import distributed as dist, hierarchy
-        from repro.data import corpus as corpus_mod, synthetic
 
         cfg = self.config
-        if self.corpus is None:
-            self.corpus, _ = synthetic.lda_corpus(
-                seed=cfg.seed, n_docs=cfg.n_docs, n_topics=cfg.true_topics,
-                vocab_size=cfg.vocab_size, doc_len_mean=cfg.doc_len_mean)
-        corpus = self.corpus
         K, M = cfg.n_topics, cfg.ring_size
+        src = self._build_source()
+        # streaming = any session whose stacks are not resident device state:
+        # more than one segment, or an out-of-core (corpus-less) source
+        self._streaming = src.n_segments > 1 or src.corpus is None
+        if cfg.multi_pod and self._streaming:
+            raise ValueError("segment streaming is single-configuration "
+                             "(got a multi-pod session with a streaming "
+                             "source)")
 
         if cfg.multi_pod:
+            from repro.data import corpus as corpus_mod
+
             self.mesh = jax.make_mesh(
                 (cfg.n_pods, cfg.data_shards, cfg.model_shards),
                 ("pod", "data", "model"),
                 axis_types=(jax.sharding.AxisType.Auto,) * 3)
             self._scs = corpus_mod.shard_corpus_pods(
-                corpus, cfg.n_pods, M, M, K, seed=cfg.shard_seed)
+                self.corpus, cfg.n_pods, M, M, K, seed=cfg.shard_seed)
             self.sc0 = self._scs[0]
             self.state = hierarchy.init_pod_state(self._scs, K)
+        elif self._streaming:
+            self.mesh = jax.make_mesh(
+                (cfg.data_shards, cfg.model_shards), ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            self.sc0 = src.segment(0)
+            # (phi, psi) + the global z store materialize lazily in fit():
+            # a resume restores all three from the checkpoint, and the
+            # init pass over every segment would be thrown away
+            self.state = None
+            self._z = None
         else:
             self.mesh = jax.make_mesh(
                 (cfg.data_shards, cfg.model_shards), ("data", "model"),
                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
-            self.sc0 = corpus_mod.shard_corpus(corpus, M, M, K,
-                                               seed=cfg.shard_seed)
+            self.sc0 = src.segment(0)
             self.state = dist.device_arrays(self.sc0, K)
 
         cap = self.sc0.word_local.shape[-1]
         self.ring_cfg = dist.RingConfig(
-            n_topics=K, vocab_size=corpus.vocab_size,
+            n_topics=K, vocab_size=src.vocab_size,
             rows_per_shard=self.sc0.rows_per_shard,
             docs_per_shard=self.sc0.docs_per_shard,
             cap=cap, package_len=cfg.package_len or cap, n_rounds=M)
@@ -144,8 +223,38 @@ class Trainer:
 
         self.alpha = jnp.full((K,), cfg.alpha0 / K, jnp.float32)
         self.beta = jnp.float32(cfg.beta)
+        if self._streaming:
+            # fold the α-optimizer's Ω histogram during the epoch (at each
+            # segment's SaveShard) instead of re-reading every segment at
+            # epoch end — only when an AlphaOptimizer will consume it
+            starts = [cfg.alpha_opt_from if cb.from_epoch is None
+                      else cb.from_epoch
+                      for cb in self.callbacks
+                      if isinstance(cb, AlphaOptimizer)]
+            self._omega_from = min(starts) if starts else None
         self._built = True
         return self
+
+    def _materialize_stream_state(self) -> None:
+        """ONE pass over the segments building the initial (phi, psi) and
+        the global z store together (z0 scattered by uid). Skipped when a
+        checkpoint restore already supplied both."""
+        import jax.numpy as jnp
+
+        from repro.core import distributed as dist
+
+        src = self.source
+        K = self.config.n_topics
+        phi = psi = None
+        z = np.zeros(src.n_tokens, np.int32)
+        for g in range(src.n_segments):
+            sc = src.segment(g)
+            phi, psi = dist.host_counts(sc, K, phi, psi)
+            valid = np.asarray(sc.word_local) >= 0
+            z[np.asarray(sc.uid)[valid]] = np.asarray(sc.z0)[valid]
+        self.state = (jnp.asarray(phi.astype(np.int32)),
+                      jnp.asarray(psi.astype(np.int32)))
+        self._z = z
 
     # -------------------------------------------------------------- fit ----
 
@@ -167,6 +276,15 @@ class Trainer:
         for cb in self.callbacks:
             if isinstance(cb, ElasticLiveness):
                 liveness = cb.probe
+        stream = None
+        if self._streaming:
+            from repro.data.stream import SegmentStream
+
+            if self.state is None:      # fresh run (no checkpoint restored)
+                self._materialize_stream_state()
+            self._omega_parts.clear()
+            stream = SegmentStream(self.source, self._z,
+                                   prefetch=cfg.prefetch)
         state = hierarchy.run_hierarchical(
             self._timed_epoch, self._timed_agg if self._agg_fn else None,
             self.state, self.alpha, self.beta, cfg.n_epochs, cfg.agg_every,
@@ -175,6 +293,8 @@ class Trainer:
             on_epoch_end=self._hook_epoch_end,
             on_aggregate=self._hook_aggregate,
             refs=self._refs,
+            segments=stream, start_segment=self.segment,
+            on_segment_end=self._hook_segment_end if stream else None,
         )
         self.state = tuple(state)
         self.notify("on_train_end")
@@ -191,7 +311,13 @@ class Trainer:
         t0 = time.perf_counter()
         out = self._epoch_fn(*args)
         jax.block_until_ready(out)
-        self.metrics["epoch_s"].append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        if self._streaming:
+            # per-segment wall time; _hook_epoch_end folds the epoch total
+            self.metrics["segment_s"].append(dt)
+            self._ep_time += dt
+        else:
+            self.metrics["epoch_s"].append(dt)
         return out
 
     def _timed_agg(self, *args, **kwargs):
@@ -213,11 +339,45 @@ class Trainer:
         self._refs = (jnp.copy(state[0]), jnp.copy(state[1]))
         self.notify("on_aggregate", ep)
 
+    def _hook_segment_end(self, ep: int, seg, state) -> None:
+        self.state = tuple(state)
+        self.epoch = ep
+        self.segment = seg.pos + 1
+        if self._omega_from is not None and ep >= self._omega_from:
+            self._fold_segment_omega(seg)
+        self.notify("on_segment_end", ep, seg.pos + 1)
+
+    def _segment_omega(self, dl, z, valid):
+        """Ω_kn histogram of one segment's (doc_local, z, valid) host views —
+        the ONE histogram call shared by the incremental fold and the
+        full-scan fallback."""
+        import jax.numpy as jnp
+
+        from repro.core import dedup
+
+        return dedup.topic_count_histogram(
+            jnp.asarray(np.asarray(dl).reshape(-1)),
+            jnp.asarray(np.asarray(z).reshape(-1)),
+            jnp.asarray(np.asarray(valid).reshape(-1)),
+            self.ring_cfg.docs_per_shard * self.config.ring_size,
+            self.config.n_topics)
+
+    def _fold_segment_omega(self, seg) -> None:
+        """Ω_kn part for one just-committed segment (its z is final for this
+        epoch), from the stream's already-loaded host views — no re-read."""
+        self._omega_parts[seg.gid] = self._segment_omega(
+            seg.host_dl, self._z[seg.host_uid], seg.host_valid)
+
     def _hook_epoch_end(self, ep: int, state, alpha):
         self.state = tuple(state)
         self.alpha = alpha
         self.epoch = ep + 1
+        self.segment = 0
+        if self._streaming:
+            self.metrics["epoch_s"].append(self._ep_time)
+            self._ep_time = 0.0
         self.notify("on_epoch_end", ep)
+        self._omega_parts.clear()     # next epoch folds fresh parts
         return self.alpha       # callbacks may have replaced it
 
     # --------------------------------------------- state views / helpers ---
@@ -258,28 +418,54 @@ class Trainer:
 
     def alpha_statistics(self):
         """Coordinator stats for the Minka fixed point: (Ω_kn histogram,
-        doc-length histogram) — two small arrays, never per-document state."""
+        doc-length histogram) — two small arrays, never per-document state.
+        Streamed sessions fold the histogram over every segment (z gathered
+        from the global store, stacks re-read from the source — mmap'd, so
+        this stays out-of-core too)."""
         import jax.numpy as jnp
+        import numpy as np
 
         from repro.core import dedup
 
         cfg = self.config
-        multi = cfg.multi_pod
-        wl = self.state[2][0] if multi else self.state[2]
-        dl = self.state[3][0] if multi else self.state[3]
-        z = self.state[5][0] if multi else self.state[5]
-        omega = dedup.topic_count_histogram(
-            dl.reshape(-1), z.reshape(-1), (wl >= 0).reshape(-1),
-            self.ring_cfg.docs_per_shard * cfg.ring_size, cfg.n_topics)
+        if self._streaming:
+            n = self.source.n_segments
+            if len(self._omega_parts) == n:
+                # folded at each segment's SaveShard this epoch — no re-read
+                omega = sum(self._omega_parts[g] for g in range(n))
+            else:
+                # fallback (call outside the fold window, or a partially
+                # replayed resume epoch): one pass over the source
+                omega = None
+                for g in range(n):
+                    sc = self.source.segment(g)
+                    o = self._segment_omega(
+                        sc.doc_local, self._z[np.asarray(sc.uid)],
+                        np.asarray(sc.word_local) >= 0)
+                    omega = o if omega is None else omega + o
+        else:
+            multi = cfg.multi_pod
+            wl = self.state[2][0] if multi else self.state[2]
+            dl = self.state[3][0] if multi else self.state[3]
+            z = self.state[5][0] if multi else self.state[5]
+            omega = dedup.topic_count_histogram(
+                dl.reshape(-1), z.reshape(-1), (wl >= 0).reshape(-1),
+                self.ring_cfg.docs_per_shard * cfg.ring_size, cfg.n_topics)
         if self._doc_len_hist is None:
             self._doc_len_hist = dedup.doc_length_histogram(
-                jnp.array(self.corpus.doc_lengths()))
+                jnp.array(self.source.doc_lengths()))
         return omega, self._doc_len_hist
 
     # ------------------------------------------------- checkpoint plumbing -
 
     def checkpoint_tree(self) -> dict:
         tree = {"state": tuple(self.state), "alpha": self.alpha}
+        if self._streaming:
+            # streamed sessions checkpoint (phi, psi) + the GLOBAL z store:
+            # the stacks are reproducible from the source, z is not — and a
+            # resume must land bitwise on the recorded (epoch, segment)
+            # boundary regardless of what the source dir holds by then
+            tree["z"] = np.array(self._z)
         if self.config.multi_pod:
             # aggregation refs ride along so a resume from a mid-window
             # checkpoint replays against the SAME last-boundary refs —
@@ -290,6 +476,16 @@ class Trainer:
 
     def checkpoint_like(self) -> dict:
         self.setup()
+        if self._streaming and self.state is None:
+            # restore template before the lazy init pass: the loader only
+            # needs the tree STRUCTURE (leaf count + order), not values
+            cfg = self.config
+            K, M = cfg.n_topics, cfg.ring_size
+            return {"state": (np.zeros((M, self.sc0.rows_per_shard, K),
+                                       np.int32),
+                              np.zeros((K,), np.int32)),
+                    "alpha": np.zeros((K,), np.float32),
+                    "z": np.zeros(self.source.n_tokens, np.int32)}
         return self.checkpoint_tree()
 
     def load_checkpoint(self, tree: dict, meta: dict) -> None:
@@ -297,9 +493,12 @@ class Trainer:
 
         self.state = tuple(jnp.asarray(x) for x in tree["state"])
         self.alpha = jnp.asarray(tree["alpha"])
+        if "z" in tree:
+            self._z = np.array(tree["z"], np.int32)
         if "refs" in tree:
             self._refs = tuple(jnp.asarray(x) for x in tree["refs"])
-        self.epoch = int(meta["step"])
+        self.epoch = int(meta.get("epoch", meta["step"]))
+        self.segment = int(meta.get("segment", 0))
 
     # --------------------------------------------------- train→serve export
 
@@ -339,23 +538,30 @@ class Trainer:
         """Machine-readable training bench record (BENCH_train.json)."""
         cfg = self.config
         ep_s = self.metrics.get("epoch_s", [])
+        seg_s = self.metrics.get("segment_s", [])
         agg_s = self.metrics.get("agg_s", [])
         pub_s = self.metrics.get("publish_s", [])
         ll = self.metrics.get("ll", [])
-        tokens = int(self.corpus.n_tokens) if self.corpus is not None else 0
+        src = self.source
+        tokens = int(src.n_tokens) if src is not None else (
+            int(self.corpus.n_tokens) if self.corpus is not None else 0)
         mean = lambda xs: float(np.mean(xs)) if xs else None
         return {
             "bench": "train",
-            "n_docs": int(self.corpus.n_docs) if self.corpus else cfg.n_docs,
+            "n_docs": int(src.n_docs) if src else cfg.n_docs,
             "n_tokens": tokens,
             "n_topics": cfg.n_topics,
             "mesh": {"pods": cfg.n_pods, "data": cfg.data_shards,
                      "model": cfg.model_shards},
+            "source": type(src).__name__ if src else None,
+            "n_segments": src.n_segments if src else 1,
+            "prefetch": bool(cfg.prefetch) if self._streaming else None,
             "n_epochs": cfg.n_epochs,
             "epochs_timed": len(ep_s),
             "epoch_s_mean": mean(ep_s),
             "epoch_s_last": ep_s[-1] if ep_s else None,
             "tokens_per_s": (tokens / mean(ep_s)) if ep_s else None,
+            "segment_s_mean": mean(seg_s),
             "agg_s_mean": mean(agg_s),
             "n_aggregates": len(agg_s),
             "publish_s_mean": mean(pub_s),

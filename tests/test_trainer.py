@@ -196,10 +196,171 @@ print("MULTIPOD_RESUME_OK")
 """
 
 
+BOUNDARY_CKPT_CODE = r"""
+import numpy as np, tempfile
+from repro.checkpoint.manager import CheckpointManager
+from repro.training import Checkpointing, Metrics, Trainer, TrainerConfig
+
+# agg_every=2, 6 epochs → boundaries at epochs 2, 4, 6. A pure boundary
+# cadence must checkpoint exactly there — never mid-window — even though
+# ckpt_every (the epoch cadence default) is 1.
+ck = tempfile.mkdtemp()
+cfg = TrainerConfig(n_docs=200, vocab_size=120, n_topics=8, true_topics=6,
+                    n_pods=2, data_shards=2, model_shards=1,
+                    n_epochs=6, agg_every=2, alpha_opt_from=99,
+                    ckpt_dir=ck, ckpt_every=1)
+tr = Trainer(cfg, callbacks=[Checkpointing(every_boundaries=1),
+                             Metrics(printer=lambda m: None)])
+tr.log = lambda m: None
+tr.fit()
+steps = CheckpointManager(ck, keep=99).steps()
+assert steps == [2, 4, 6], steps
+# every_boundaries=2 → every other boundary
+ck2 = tempfile.mkdtemp()
+tr2 = Trainer(cfg.replace(ckpt_dir=ck2),
+              callbacks=[Checkpointing(every_boundaries=2),
+                         Metrics(printer=lambda m: None)])
+tr2.log = lambda m: None
+tr2.fit()
+steps2 = CheckpointManager(ck2, keep=99).steps()
+assert steps2 == [4], steps2
+print("BOUNDARY_CKPT_OK")
+"""
+
+
+CORPUS_DIR_E2E_CODE = r"""
+import os, tempfile
+import numpy as np
+from repro.data import open_segments, save_segments
+from repro.launch import train
+from repro.training import Trainer, TrainerConfig
+
+def argv(ck, extra=()):
+    return ["--docs","200","--vocab","120","--topics","8","--true-topics","6",
+            "--epochs","4","--data-shards","2","--model-shards","2",
+            "--alpha-opt-from","2","--ckpt-dir",ck,"--ckpt-every","2",
+            "--bench-out",""] + list(extra)
+
+# resident reference: the same synthetic corpus streamed from memory
+tr_mem = train.main(argv(tempfile.mkdtemp(), ["--n-segments","4"]))
+assert tr_mem.source.n_segments == 4
+
+# save that segmentation, retrain out-of-core through the DiskSource
+d = tempfile.mkdtemp()
+save_segments(tr_mem.source, d)
+tr_disk = train.main(argv(tempfile.mkdtemp(), ["--corpus-dir",d]))
+assert type(tr_disk.source).__name__ == "DiskSource"
+assert tr_disk.config.prefetch
+assert (np.asarray(tr_mem.state[0]) == np.asarray(tr_disk.state[0])).all()
+assert (np.asarray(tr_mem.state[1]) == np.asarray(tr_disk.state[1])).all()
+assert (tr_mem._z == tr_disk._z).all()
+assert (np.asarray(tr_mem.alpha) == np.asarray(tr_disk.alpha)).all()
+
+# kill at an intra-epoch segment boundary → resume lands bitwise on it
+ck = tempfile.mkdtemp()
+try:
+    train.main(argv(ck, ["--corpus-dir",d,"--ckpt-segments","1",
+                         "--kill-at","3","--kill-at-segment","2"]))
+    raise AssertionError("kill-at-segment did not exit")
+except SystemExit as e:
+    assert e.code == 17, e.code
+tr_res = train.main(argv(ck, ["--corpus-dir",d,"--resume"]))
+assert tr_res.epoch == 4
+for i in (0, 1):
+    assert (np.asarray(tr_disk.state[i]) == np.asarray(tr_res.state[i])).all(), i
+assert (tr_disk._z == tr_res._z).all()
+assert (np.asarray(tr_disk.alpha) == np.asarray(tr_res.alpha)).all()
+print("CORPUS_DIR_E2E_OK")
+"""
+
+
 def test_train_entrypoint_e2e(subproc):
     out = subproc(TRAIN_E2E_CODE, n_devices=4)
     assert "TRAIN_E2E_OK" in out
     assert "[ckpt] epoch 6 saved" in out
+
+
+def test_checkpoint_every_aggregation_boundary(subproc):
+    out = subproc(BOUNDARY_CKPT_CODE, n_devices=4)
+    assert "BOUNDARY_CKPT_OK" in out
+
+
+def test_segment_cadence_covers_every_boundary(tmp_path):
+    """every_segments=1 must persist EVERY segment boundary — the last one
+    of each epoch lands via the epoch-end save (post-α), even when the
+    epoch cadence itself is not due (regression: it was silently dropped
+    whenever ckpt_every didn't happen to align)."""
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.training import Checkpointing, Trainer, TrainerConfig
+
+    ck = str(tmp_path)
+    cfg = TrainerConfig(n_docs=80, vocab_size=50, n_topics=4, true_topics=3,
+                        n_epochs=2, n_segments=2, alpha_opt_from=99,
+                        ckpt_dir=ck, ckpt_every=99, ckpt_keep=99)
+    tr = Trainer(cfg, callbacks=[Checkpointing(every_segments=1)])
+    tr.log = lambda m: None
+    tr.fit()
+    # global step = epoch * 2 + segments_done: (0,1)=1, (1,0)=2, (1,1)=3,
+    # (2,0)=4 — every boundary present, none skipped
+    steps = CheckpointManager(ck, keep=99).steps()
+    assert steps == [1, 2, 3, 4], steps
+
+
+def test_checkpoint_cadences_refuse_sessions_they_cannot_fire_in(tmp_path):
+    """every_boundaries on a never-aggregating session (and every_segments
+    on a 1-segment one) would silently write zero checkpoints — data loss
+    discovered only at restore time. Both must refuse at train start."""
+    from repro.training import Checkpointing, Trainer, TrainerConfig
+
+    base = dict(n_docs=60, vocab_size=40, n_topics=4, true_topics=3,
+                n_epochs=1, ckpt_dir=str(tmp_path))
+    for cfg, cb in [
+        # single-pod: no aggregation boundaries at all
+        (TrainerConfig(**base), Checkpointing(every_boundaries=1)),
+        # resident session: no segment boundaries
+        (TrainerConfig(**base), Checkpointing(every_segments=1)),
+        # streamed, but the cadence skips past every boundary in the epoch
+        (TrainerConfig(**{**base, "n_segments": 2}),
+         Checkpointing(every_segments=3)),
+    ]:
+        tr = Trainer(cfg, callbacks=[cb])
+        tr.log = lambda m: None
+        with pytest.raises(ValueError, match="can never fire"):
+            tr.fit()
+
+
+def test_kill_at_segment_refuses_sessions_it_cannot_fire_in():
+    """A segment kill on a non-streamed session (or beyond the segment
+    count) would silently never fire — the failure-sim must refuse loudly,
+    like ElasticLiveness on a single-pod session."""
+    import pytest as _pytest
+
+    from repro.training import KillSwitch, Trainer, TrainerConfig
+
+    base = dict(n_docs=60, vocab_size=40, n_topics=4, true_topics=3,
+                n_epochs=1)
+    tr = Trainer(TrainerConfig(**base),
+                 callbacks=[KillSwitch(1, at_segment=1)])
+    tr.log = lambda m: None
+    with _pytest.raises(ValueError, match="streamed session"):
+        tr.fit()
+    tr2 = Trainer(TrainerConfig(n_segments=2, **base),
+                  callbacks=[KillSwitch(1, at_segment=5)])
+    tr2.log = lambda m: None
+    with _pytest.raises(ValueError, match="never fire"):
+        tr2.fit()
+
+
+def test_train_corpus_dir_streams_and_resumes_bitwise(subproc):
+    """Acceptance: --corpus-dir + --n-segments trains out-of-core through
+    DiskSource with prefetch, matches the resident run bitwise, and
+    kill-at→resume restores the exact (epoch, segment) boundary."""
+    out = subproc(CORPUS_DIR_E2E_CODE, n_devices=4)
+    assert "CORPUS_DIR_E2E_OK" in out
+    assert "DiskSource" in out
+    assert "[recovery] resumed from epoch 2 (+2 segments)" in out
 
 
 def test_train_resume_bitwise_roundtrip(subproc):
