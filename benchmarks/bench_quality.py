@@ -151,6 +151,93 @@ def fig8_auc(corpus, truth, ks=(2, 4, 8, 16, 32, 64), n_impr=8000):
     return rows
 
 
+def _train_model_alias(K, corpus, iters=40, seed=0, n_mh=4, rebuild_every=3,
+                       block_size=512):
+    """Alias-MH twin of ``_train_model``: the same 512-token block schedule
+    (counts refresh at block boundaries) with ``sparse.sample_block_mh`` as
+    the inner draw and the §9 table-rebuild cadence across sweeps."""
+    from repro.core import sparse
+
+    V = corpus.vocab_size
+    wi = np.asarray(corpus.word_ids, np.int32)
+    di = np.asarray(corpus.doc_ids, np.int32)
+    state = lda.init_state(jax.random.key(seed), jnp.array(wi), K, V)
+    phi, psi = state.phi, state.psi
+    alpha, beta = state.alpha, state.beta
+    cap = sparse.suggest_cap(corpus.doc_lengths(), K)
+    z = state.z
+    tp, ct = sparse.pairs_from_assignments(
+        jnp.array(di), z, jnp.ones(len(wi), bool), corpus.n_docs, cap)
+    uid = jnp.arange(len(wi), dtype=jnp.uint32)
+    wj, dj = jnp.array(wi), jnp.array(di)
+    # full blocks + one remainder block (two jit shapes, no sentinel pad)
+    bounds = list(range(0, len(wi), block_size))
+    if bounds[-1] != len(wi):
+        bounds.append(len(wi))
+    tables = None
+    for it in range(iters):
+        if it % rebuild_every == 0:     # the aggregation-boundary cadence
+            tables = sparse.make_tables(phi, psi, alpha, beta, V)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            sl = slice(lo, hi)
+            zb, phi, psi, tp, ct = sparse.sample_block_mh(
+                phi, psi, tp, ct, z[sl], wj[sl], dj[sl], uid[sl],
+                alpha, beta, it * 11 + seed, V, tables, n_mh=n_mh)
+            z = z.at[sl].set(zb)
+    return lda.LDAState(phi, psi, z, alpha, beta)
+
+
+def _heldout_ll(state, corpus_te):
+    """Predictive held-out log-likelihood per token: fold-in θ̂ under frozen
+    (Φ, Ψ) (the same ``_infer_pkd`` pass the figure benches use), then mean
+    log Σ_k θ̂_dk φ̂_wk over the held-out tokens."""
+    V = state.vocab_size
+    that = _infer_pkd(state, corpus_te)                          # [D, K]
+    phat = np.asarray((state.phi + state.beta)
+                      / (state.psi[None, :] + V * state.beta))   # [V, K]
+    p_tok = np.einsum("tk,tk->t", that[np.asarray(corpus_te.doc_ids)],
+                      phat[np.asarray(corpus_te.word_ids)])
+    return float(np.mean(np.log(np.maximum(p_tok, 1e-30))))
+
+
+def sampler_guardrail(K=24, tol=0.02):
+    """Dense vs alias held-out log-likelihood at small scale — the quality
+    gate that keeps sampler speedups honest: the alias path must stay within
+    ``tol`` relative held-out LL of the exact dense sampler (it is usually
+    indistinguishable; the MH correction targets the same posterior).
+    ``BENCH_QUICK`` trims the corpus/sweeps; the tolerance stays hard."""
+    import os
+
+    quick = bool(os.environ.get("BENCH_QUICK"))
+    iters = 25 if quick else 40
+    corpus, truth = synthetic.lda_corpus(seed=2,
+                                         n_docs=700 if quick else 1500,
+                                         n_topics=16, vocab_size=400,
+                                         doc_len_mean=12)
+    split = (4 * corpus.n_docs) // 5
+    tr_mask = np.asarray(corpus.doc_ids) < split
+    corpus_tr = corpus_mod.Corpus(
+        np.asarray(corpus.word_ids)[tr_mask],
+        np.asarray(corpus.doc_ids)[tr_mask], split, corpus.vocab_size)
+    te_ids = np.asarray(corpus.doc_ids)[~tr_mask] - split
+    corpus_te = corpus_mod.Corpus(
+        np.asarray(corpus.word_ids)[~tr_mask], te_ids.astype(np.int32),
+        corpus.n_docs - split, corpus.vocab_size)
+
+    dense_state, *_ = _train_model(K, corpus_tr, iters=iters,
+                                   alpha_opt_from=99)
+    alias_state = _train_model_alias(K, corpus_tr, iters=iters)
+    ll_dense = _heldout_ll(dense_state, corpus_te)
+    ll_alias = _heldout_ll(alias_state, corpus_te)
+    # LLs are negative; alias may not be worse than dense by > tol relative
+    if ll_alias < ll_dense - tol * abs(ll_dense):
+        raise AssertionError(
+            f"alias sampler regressed held-out quality: dense {ll_dense:.4f}"
+            f" vs alias {ll_alias:.4f} (tol {tol:.0%})")
+    return [("heldout_ll_dense", ll_dense), ("heldout_ll_alias", ll_alias),
+            ("heldout_ll_gap", ll_alias - ll_dense)]
+
+
 def run():
     lines = []
     t0 = time.perf_counter()
@@ -169,6 +256,10 @@ def run():
                                              stopword_frac=0.35)
     for name, v in fig7b_dedup(corpus_b, truth_b):
         lines.append((f"quality.fig7b.{name}", 0.0, round(v, 4)))
+    # LAST: the hard quality gate — a regression raises and reds the whole
+    # quality module (the AssertionError carries both LL numbers)
+    for name, v in sampler_guardrail():
+        lines.append((f"quality.sampler.{name}", 0.0, round(v, 4)))
     lines.append(("quality.total_wall_s", (time.perf_counter() - t0) * 1e6,
                   ""))
     return lines

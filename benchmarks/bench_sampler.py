@@ -1,0 +1,154 @@
+"""Sampler bench — dense plane scan vs sparsity-aware alias-MH (DESIGN.md §9).
+
+The asymptotics claim of the alias sampler is the whole point of this bench:
+per-token work is O(K) on the dense path and O(k_d + n_mh) on the alias path,
+so the tokens/s gap must WIDEN with K. We time one z-update sweep per token
+through both block samplers (``core/gibbs.sample_block`` vs
+``core/sparse.sample_block_mh``) over the same synthetic count state at
+K ∈ {1k, 10k, 100k} (quick mode trims the sweep), and record the Walker
+table-build cost separately — it amortizes across the aggregation-boundary
+rebuild cadence, not per token.
+
+Emits CSV lines for ``benchmarks/run.py`` and the machine-readable
+``BENCH_sampler.json`` (per-K tokens/s, speedups, widening check).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_OUT = "BENCH_sampler.json"
+N_MH = 4
+DOC_LEN = 16          # mean tokens per doc → k_d ≪ K (the long-tail regime)
+V_ROWS = 128          # vocab rows (one shard's phi slice)
+
+
+def _quick() -> bool:
+    return bool(os.environ.get("BENCH_QUICK"))
+
+
+def _state(K, T, seed=0):
+    """Synthetic consistent count state: T tokens over V_ROWS words and
+    T/DOC_LEN docs, z uniform over K (so doc rows hold ≤ DOC_LEN pairs)."""
+    rng = np.random.default_rng(seed)
+    D = max(1, T // DOC_LEN)
+    w = rng.integers(0, V_ROWS, T).astype(np.int32)
+    d = (np.arange(T) % D).astype(np.int32)
+    z = rng.integers(0, K, T).astype(np.int32)
+    phi = np.zeros((V_ROWS, K), np.int32)
+    np.add.at(phi, (w, z), 1)
+    psi = np.bincount(z, minlength=K).astype(np.int32)
+    alpha = np.full(K, 50.0 / K, np.float32)
+    return w, d, z, phi, psi, alpha, D
+
+
+def _time(fn, warmup=1, iters=3):
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench_k(K: int) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core import gibbs, sparse
+
+    # dense block size shrinks with K so the [T, K] planes stay resident;
+    # per-token cost is what we compare, not block wall
+    t_dense = int(max(64, min(4096, (1 << 25) // K)))
+    t_alias = 4096
+    cap = DOC_LEN + 8
+
+    # ---- dense: exact [T, K] plane scan --------------------------------
+    w, d, z, phi, psi, alpha, D = _state(K, t_dense)
+    theta = np.zeros((D, K), np.int32)
+    np.add.at(theta, (d, z), 1)
+    uid = jnp.arange(t_dense, dtype=jnp.uint32)
+    args = (jnp.asarray(phi), jnp.asarray(psi), jnp.asarray(theta),
+            jnp.asarray(z), jnp.asarray(w), jnp.asarray(d), uid,
+            jnp.asarray(alpha), jnp.float32(0.01), jnp.uint32(7))
+    dense_s = _time(lambda: gibbs.sample_block(
+        *args, vocab_size=V_ROWS, temperature=1.0)[0])
+
+    # ---- alias: O(k_d + n_mh) probes -----------------------------------
+    w, d, z, phi, psi, alpha, D = _state(K, t_alias)
+    tp, ct = sparse.pairs_from_assignments(
+        jnp.asarray(d), jnp.asarray(z), jnp.ones(t_alias, bool), D, cap)
+    t0 = time.perf_counter()
+    tables = sparse.make_tables(jnp.asarray(phi), jnp.asarray(psi),
+                                jnp.asarray(alpha), jnp.float32(0.01),
+                                V_ROWS)
+    import jax
+
+    jax.block_until_ready(tables)
+    build_s = time.perf_counter() - t0
+    uid = jnp.arange(t_alias, dtype=jnp.uint32)
+    alias_s = _time(lambda: sparse.sample_block_mh(
+        jnp.asarray(phi), jnp.asarray(psi), tp, ct, jnp.asarray(z),
+        jnp.asarray(w), jnp.asarray(d), uid, jnp.asarray(alpha),
+        jnp.float32(0.01), 7, V_ROWS, tables, n_mh=N_MH)[0])
+
+    dense_tps = t_dense / dense_s
+    alias_tps = t_alias / alias_s
+    return {
+        "K": K,
+        "dense_tokens": t_dense,
+        "alias_tokens": t_alias,
+        "dense_us_per_token": dense_s / t_dense * 1e6,
+        "alias_us_per_token": alias_s / t_alias * 1e6,
+        "dense_tokens_per_s": dense_tps,
+        "alias_tokens_per_s": alias_tps,
+        "speedup": alias_tps / dense_tps,
+        "table_build_s": build_s,
+        "n_mh": N_MH,
+    }
+
+
+def run():
+    ks = (1_000, 10_000) if _quick() else (1_000, 10_000, 100_000)
+    points = [_bench_k(K) for K in ks]
+    speedups = [p["speedup"] for p in points]
+    record = {
+        "bench": "sampler",
+        "n_mh": N_MH,
+        "doc_len": DOC_LEN,
+        "vocab_rows": V_ROWS,
+        "quick": _quick(),
+        "points": points,
+        # acceptance: the gap must widen strictly with K, and clear 3× at
+        # the largest K measured
+        "speedup_widening": all(b > a for a, b in zip(speedups, speedups[1:])),
+        "speedup_at_max_k": speedups[-1],
+        "tokens_per_s": points[-1]["alias_tokens_per_s"],
+    }
+    with open(BENCH_OUT, "w") as f:
+        json.dump(record, f, indent=2)
+
+    lines = []
+    for p in points:
+        lines.append((f"sampler.dense.K{p['K']}",
+                      p["dense_us_per_token"],
+                      f"tokens_per_s={p['dense_tokens_per_s']:.0f}"))
+        lines.append((f"sampler.alias.K{p['K']}",
+                      p["alias_us_per_token"],
+                      f"tokens_per_s={p['alias_tokens_per_s']:.0f}"
+                      f"|speedup=x{p['speedup']:.1f}"))
+    lines.append(("sampler.widening", 0.0,
+                  f"{record['speedup_widening']}"
+                  f"|max_speedup=x{record['speedup_at_max_k']:.1f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,38 +1,121 @@
-"""Benchmark driver — one module per paper table/figure.
+"""Consolidated benchmark runner — one command, every ``BENCH_*.json``.
 
-Prints ``name,us_per_call,derived`` CSV. Roofline/dry-run tables are separate
+    python benchmarks/run.py --quick          # trimmed sweep, all modules
+    python benchmarks/run.py --only sampler   # one module
+    scripts/bench.sh --quick                  # the shell wrapper
+
+Each module is one paper table/figure (or one perf trajectory line) exposing
+``run() -> [(name, us, derived), ...]``; this driver prints the CSV stream,
+then writes/updates the module's ``BENCH_<name>.json`` with a SHARED schema:
+
+    {"bench": <name>, "git_sha": ..., "wall_s": ..., "tokens_per_s": ...,
+     "quick": ..., "schema": 1, "rows": [[name, us, derived], ...], ...}
+
+Modules that already emit a richer record (sampler, data) keep their fields —
+the shared keys are merged on top. ``--quick`` exports ``BENCH_QUICK=1``,
+which quick-aware modules honor. Roofline/dry-run tables are separate
 (launch/dryrun.py produces them; benchmarks/roofline.py formats them) because
 they need the 512-device host platform, which the benches must NOT inherit.
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (REPO, os.path.join(REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+# (name, module, paper anchor) — the json file is BENCH_<name>.json
+MODULES = [
+    ("pipeline", "benchmarks.bench_pipeline", "Table 1"),
+    ("rtlda", "benchmarks.bench_rtlda", "Fig 5"),
+    ("scaling", "benchmarks.bench_scaling", "Fig 6"),
+    ("quality", "benchmarks.bench_quality", "Fig 1/7/8"),
+    ("train", "benchmarks.bench_train", "Trainer"),
+    ("data", "benchmarks.bench_data", "Fig 3/4"),
+    ("sampler", "benchmarks.bench_sampler", "§9 alias-MH"),
+]
+
+
+def git_sha():
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO,
+            text=True).strip()
+    except Exception:  # noqa: BLE001 — sha is best-effort metadata
+        return None
+
+
+def run_module(name: str, modpath: str, anchor: str, sha) -> bool:
+    """Run one bench module, print its CSV, stamp its BENCH json. Returns
+    success."""
+    json_path = os.path.join(REPO, f"BENCH_{name}.json")
+    t0 = time.perf_counter()
+    try:
+        mod = importlib.import_module(modpath)
+        rows = [(n, float(us), str(d)) for n, us, d in mod.run()]
+    except Exception:  # noqa: BLE001 — a failed bench is a recorded failure
+        print(f"# {name}({anchor}) FAILED:\n{traceback.format_exc()}",
+              flush=True)
+        return False
+    wall = time.perf_counter() - t0
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}", flush=True)
+    print(f"# {name}({anchor}) done in {wall:.1f}s", flush=True)
+
+    record = {}
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                record = json.load(f)
+        except Exception:  # noqa: BLE001 — stale/corrupt record: overwrite
+            record = {}
+    record.update({
+        "bench": name,
+        "git_sha": sha,
+        "wall_s": round(wall, 3),
+        "tokens_per_s": record.get("tokens_per_s"),
+        "quick": bool(os.environ.get("BENCH_QUICK")),
+        "schema": 1,
+        "rows": rows,
+    })
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return True
+
 
 def main() -> None:
-    from benchmarks import (bench_data, bench_pipeline, bench_quality,
-                            bench_rtlda, bench_scaling, bench_train)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="trimmed sweeps (exports BENCH_QUICK=1)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names "
+                         f"({', '.join(n for n, _, _ in MODULES)})")
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+    os.chdir(REPO)    # module-written BENCH_*.json land at the repo root
 
-    modules = [
-        ("pipeline(Table1)", bench_pipeline),
-        ("rtlda(Fig5)", bench_rtlda),
-        ("scaling(Fig6)", bench_scaling),
-        ("quality(Fig1/7/8)", bench_quality),
-        ("train(Trainer)", bench_train),
-        ("data(Fig3/4)", bench_data),
-    ]
-    failures = 0
-    for label, mod in modules:
-        t0 = time.perf_counter()
-        try:
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-            print(f"# {label} done in {time.perf_counter()-t0:.1f}s", flush=True)
-        except Exception:  # noqa: BLE001
-            failures += 1
-            print(f"# {label} FAILED:\n{traceback.format_exc()}", flush=True)
+    work = MODULES
+    if args.only:
+        names = {s.strip() for s in args.only.split(",")}
+        unknown = names - {n for n, _, _ in MODULES}
+        if unknown:
+            ap.error(f"unknown bench module(s): {sorted(unknown)}")
+        work = [m for m in MODULES if m[0] in names]
+
+    sha = git_sha()
+    failures = sum(
+        0 if run_module(name, modpath, anchor, sha) else 1
+        for name, modpath, anchor in work)
     if failures:
         sys.exit(1)
 

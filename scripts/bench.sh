@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Consolidated benchmark entry point: every BENCH_*.json in one command.
+#
+#   scripts/bench.sh                 # full sweep
+#   scripts/bench.sh --quick         # trimmed sweep (BENCH_QUICK=1)
+#   scripts/bench.sh --only sampler  # one module
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python benchmarks/run.py "$@"

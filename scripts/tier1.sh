@@ -6,6 +6,7 @@
 #   scripts/tier1.sh smoke    # fast serving-engine smoke subset (-m serve)
 #   scripts/tier1.sh train    # training-driver smoke subset (-m trainer)
 #   scripts/tier1.sh data     # data-layer streaming subset (-m data)
+#   scripts/tier1.sh kernels  # Pallas kernel subset, interpret-mode (-m kernels)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 case "${1:-}" in
@@ -18,5 +19,8 @@ case "${1:-}" in
     data)
         shift
         exec python -m pytest -x -q -m data "$@";;
+    kernels)
+        shift
+        exec python -m pytest -x -q -m kernels "$@";;
 esac
 exec python -m pytest -x -q "$@"

@@ -51,6 +51,9 @@ class Cell:
                                    # dist/analysis.collective_bytes caveat)
     donate: Tuple[int, ...] = ()
     note: str = ""
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+                                   # analytic side-channel merged into the
+                                   # dry-run record (e.g. sampler_traffic)
 
     def lower(self):
         jitted = jax.jit(

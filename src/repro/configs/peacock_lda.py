@@ -105,6 +105,13 @@ def _train_cell(mesh, multi_pod: bool, optimized: bool = False) -> Cell:
     # (16·M·cap bytes) every round; M devices × M rounds → 16·M³·cap per
     # epoch, plus one Ψ psum per segment
     coll = n_pods * (16.0 * M ** 3 * cap + M * K * 4.0)
+    # §9: dense plane-scan vs alias-MH HBM traffic, side by side — the
+    # dry-run prints this so --sampler choices are visible before a run
+    from repro.dist import analysis as dist_analysis
+
+    traffic = dist_analysis.sampler_epoch_bytes(
+        n_tokens=sampled_tokens, n_topics=K, k_d=TOKENS_PER_DOC,
+        n_mh=4, vocab=VOCAB, rebuild_epochs=TRAIN_DEFAULTS["agg_every"])
     return Cell(
         arch="peacock-lda",
         shape="train_segment_opt" if optimized else "train_segment",
@@ -115,6 +122,7 @@ def _train_cell(mesh, multi_pod: bool, optimized: bool = False) -> Cell:
         note=f"M={M} ring, cap={cap}, segment={M * DOCS_PER_SHARD} docs"
              + (", int8-Θ+col-excl" if optimized else "")
              + (f", {n_pods} pods" if multi_pod else ""),
+        extra={"sampler_traffic": traffic},
     )
 
 

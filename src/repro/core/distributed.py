@@ -61,6 +61,15 @@ class RingConfig:
     package_len: int           # L — pipeline package size (§3.1.2)
     n_rounds: int              # = ring size M
     use_kernel: bool = False
+    # ---- sampler family (DESIGN.md §9) -----------------------------------
+    sampler: str = "dense"     # "dense" = exact [T, K] plane scan;
+                               # "alias" = sparsity-aware alias-table MH
+                               # (O(k_d + n_mh) per token, stale proposal
+                               # tables passed as extra epoch args)
+    n_mh: int = 4              # MH steps per token (alias sampler)
+    doc_topic_cap: int = 0     # pair-row pitch for sparse Θ (0 → n_topics);
+                               # must be ≥ max distinct topics per doc
+                               # (sparse.suggest_cap)
     # §Perf hillclimb knobs (EXPERIMENTS.md §Perf / peacock-lda):
     theta_dtype: Any = jnp.int32   # int8 → 4× less Θ-rebuild traffic (query
                                    # docs never exceed 127 repeats of a topic)
@@ -145,6 +154,49 @@ def _sample_subblock(phi, psi, theta, w, d, z, uid, alpha, beta, seed, cfg: Ring
     return phi, psi, theta, z_new.reshape(-1)
 
 
+def _sample_subblock_mh(phi, psi, pairs, w, d, z, uid, alpha, beta, seed,
+                        cfg: RingConfig, tables):
+    """Alias-MH twin of :func:`_sample_subblock` (DESIGN.md §9).
+
+    Same package pipeline and snapshot semantics, but each token runs
+    ``cfg.n_mh`` accept/reject probes against the stale proposal ``tables``
+    instead of scanning the [L, K] posterior plane; Θ rides as sparse
+    (topic, count) ``pairs`` updated incrementally at package boundaries.
+    Returns (phi, psi, pairs, z_new).
+    """
+    from repro.core import sparse
+    from repro.kernels.alias import ops as alias_ops
+
+    L = cfg.package_len
+    n_pkg = cfg.cap // L
+    wp_ = w.reshape(n_pkg, L)
+    dp = d.reshape(n_pkg, L)
+    zp = z.reshape(n_pkg, L)
+    up = uid.reshape(n_pkg, L)
+
+    def package(carry, xs):
+        phi, psi, tp, ct = carry
+        w, d, z, uid = xs
+        valid = w >= 0
+        w_s = jnp.where(valid, w, 0)
+        d_s = jnp.where(valid, d, 0)
+        z_new = alias_ops.mh_resample(
+            phi, psi, tp, ct, tables.wq, tables.wp, tables.wa, alpha,
+            tables.ap, tables.aa, w_s, d_s, z, uid.astype(jnp.uint32),
+            jnp.asarray(seed, jnp.uint32), beta, cfg.vocab_size, cfg.n_mh,
+            force="pallas" if cfg.use_kernel else None)
+        z_new = jnp.where(valid, z_new, z)
+        delta = valid.astype(jnp.int32)
+        phi = phi.at[w_s, z].add(-delta).at[w_s, z_new].add(delta)
+        psi = psi.at[z].add(-delta).at[z_new].add(delta)
+        tp, ct = sparse.apply_deltas(tp, ct, d_s, z, z_new, valid)
+        return (phi, psi, tp, ct), z_new
+
+    (phi, psi, tp, ct), z_new = jax.lax.scan(
+        package, (phi, psi) + tuple(pairs), (wp_, dp, zp, up))
+    return phi, psi, (tp, ct), z_new.reshape(-1)
+
+
 def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
     """The per-device ring-epoch body — THE one implementation of the round
     loop, shared by the single-pod path (``ring_epoch_parts``) and the
@@ -162,7 +214,13 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
     plead = lead - 1                            # psi has one fewer (replicated
                                                 # intra-pod, P() or P(pod))
 
-    def epoch(phi, psi, wl, dl, uid, z, alpha, beta, seed):
+    alias = cfg.sampler == "alias"
+
+    def epoch(phi, psi, wl, dl, uid, z, alpha, beta, seed, *tables):
+        """``tables`` is empty on the dense path; the alias path appends the
+        per-shard stale proposal state (wq, wp, wa sharded like phi; ap, aa
+        replicated like alpha — rebuilt by the coordinator at aggregation
+        boundaries, constant within an epoch)."""
         me = flat_ring_index(axis_sizes)
         seed = jnp.asarray(seed, jnp.uint32)
         if pod_axis is not None:
@@ -173,6 +231,11 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
         sq = lambda a: a.reshape(a.shape[lead:])
         phi_l = sq(phi)                               # [rows, K]
         psi_l = psi.reshape(psi.shape[plead:])        # [K]
+        if alias:
+            from repro.core import sparse as sparse_mod
+
+            wq, wp_t, wa, ap, aa = tables
+            tabs = sparse_mod.AliasTables(sq(wq), sq(wp_t), sq(wa), ap, aa)
         stack0 = tuple(sq(a) for a in (wl, dl, uid, z))   # each [M, cap]
         psi0 = psi_l
         # psi becomes device-varying once local deltas accumulate; mark it so
@@ -200,26 +263,40 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
             take = lambda a: jax.lax.dynamic_slice_in_dim(a, me, 1, axis=0)[0]
             w_sub, d_sub, u_sub, z_sub = take(wl), take(dl), take(uid), take(z)
 
-            if cfg.small_theta:
-                # Θ only for docs actually sampled this round: remap their doc
-                # ids into [0, cap) (one row per present doc; absent docs hit
-                # the scratch row). Θ build cost: [cap+1, K] instead of
-                # [docs_per_shard, K] — and segment size no longer bounds Θ.
-                inv = jnp.full((cfg.docs_per_shard,), cfg.cap, jnp.int32)
-                inv = inv.at[d_sub].set(jnp.arange(cfg.cap, dtype=jnp.int32))
-                idx = inv[flat_d]
-                theta = jnp.zeros((cfg.cap + 1, cfg.n_topics),
-                                  cfg.theta_dtype).at[idx, flat_z].add(valid)
-                d_sub_local = inv[d_sub]
-            else:
-                theta = jnp.zeros((cfg.docs_per_shard, cfg.n_topics),
-                                  cfg.theta_dtype).at[flat_d, flat_z].add(valid)
-                d_sub_local = d_sub
+            if alias:
+                # sparse Θ: capped (topic, count) pairs instead of a
+                # [docs, K] plane — the doc-side O(k_d) term of §9
+                from repro.core import sparse as sparse_mod
 
-            phi_l, psi_l, _, z_new = _sample_subblock(
-                phi_l, psi_l, theta, w_sub, d_sub_local, z_sub, u_sub,
-                alpha, beta, seed, cfg,
-            )
+                cap_p = cfg.doc_topic_cap or cfg.n_topics
+                pairs = sparse_mod.pairs_from_assignments(
+                    flat_d, flat_z, flat_w >= 0, cfg.docs_per_shard, cap_p)
+                phi_l, psi_l, _, z_new = _sample_subblock_mh(
+                    phi_l, psi_l, pairs, w_sub, d_sub, z_sub, u_sub,
+                    alpha, beta, seed, cfg, tabs)
+            else:
+                if cfg.small_theta:
+                    # Θ only for docs actually sampled this round: remap
+                    # their doc ids into [0, cap) (one row per present doc;
+                    # absent docs hit the scratch row). Θ build cost:
+                    # [cap+1, K] instead of [docs_per_shard, K] — and
+                    # segment size no longer bounds Θ.
+                    inv = jnp.full((cfg.docs_per_shard,), cfg.cap, jnp.int32)
+                    inv = inv.at[d_sub].set(
+                        jnp.arange(cfg.cap, dtype=jnp.int32))
+                    idx = inv[flat_d]
+                    theta = jnp.zeros((cfg.cap + 1, cfg.n_topics),
+                                      cfg.theta_dtype).at[idx, flat_z].add(valid)
+                    d_sub_local = inv[d_sub]
+                else:
+                    theta = jnp.zeros((cfg.docs_per_shard, cfg.n_topics),
+                                      cfg.theta_dtype).at[flat_d, flat_z].add(valid)
+                    d_sub_local = d_sub
+
+                phi_l, psi_l, _, z_new = _sample_subblock(
+                    phi_l, psi_l, theta, w_sub, d_sub_local, z_sub, u_sub,
+                    alpha, beta, seed, cfg,
+                )
             # write updated z back into the (already-shipped view of the) stack:
             # the z we forward must include this round's update, so we update
             # BEFORE shipping in program order — instead we re-ship z only.
@@ -253,6 +330,10 @@ def ring_epoch_parts(mesh, cfg: RingConfig):
     epoch = build_epoch_body(mesh, cfg)
     sharded = shd.ring_spec()
     in_specs = (sharded, P(), sharded, sharded, sharded, sharded, P(), P(), P())
+    if cfg.sampler == "alias":
+        # stale proposal tables: wq/wp/wa ride the vocab sharding like phi,
+        # the α table is replicated like alpha
+        in_specs = in_specs + (sharded, sharded, sharded, P(), P())
     out_specs = (sharded, P(), sharded, sharded, sharded, sharded)
     epoch_sm = jax.shard_map(epoch, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_vma=False)

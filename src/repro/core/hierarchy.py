@@ -117,7 +117,7 @@ def make_elastic_aggregate(mesh):
     return call
 
 
-def _pod_epoch_specs():
+def _pod_epoch_specs(cfg=None):
     specs_in = (
         pod_ring_spec(),      # phi      [Pods, M, rows, K]
         pod_spec(),           # psi      [Pods, K]
@@ -129,6 +129,11 @@ def _pod_epoch_specs():
         P(),                  # beta
         P(),                  # seed
     )
+    if cfg is not None and getattr(cfg, "sampler", "dense") == "alias":
+        # stale proposal tables (§9): wq/wp/wa shard like phi; the α table
+        # is replicated (identical across pods — rebuilt from merged state)
+        specs_in = specs_in + (pod_ring_spec(), pod_ring_spec(),
+                               pod_ring_spec(), P(), P())
     specs_out = specs_in[:6]
     return specs_in, specs_out
 
@@ -152,7 +157,7 @@ def pod_ring_epoch_parts(mesh, cfg):
     from repro.core import distributed as dist
 
     inner = dist.build_epoch_body(mesh, cfg, pod_axis=POD_AXIS)
-    specs_in, specs_out = _pod_epoch_specs()
+    specs_in, specs_out = _pod_epoch_specs(cfg)
     epoch_sm = jax.shard_map(inner, mesh=mesh, in_specs=specs_in,
                          out_specs=specs_out, check_vma=False)
     return epoch_sm, specs_in, specs_out
@@ -184,6 +189,7 @@ def run_hierarchical(
     seed0: int = 0, liveness=None, start_epoch: int = 0,
     on_epoch_end=None, on_aggregate=None, refs=None,
     segments=None, start_segment: int = 0, on_segment_end=None,
+    epoch_aux=None,
 ):
     """Coordinator loop: epochs in each pod, aggregate every ``agg_every``.
 
@@ -214,6 +220,13 @@ def run_hierarchical(
     and hands every pod (rejoining ones included) the merged state. Without
     it the aggregate assumes all pods live, as before.
 
+    ``epoch_aux`` (optional) is a zero-arg callable returning a tuple of
+    extra positional args appended to every ``epoch_fn`` call — the alias
+    sampler's stale proposal tables (DESIGN.md §9). It is re-invoked per
+    epoch (and per segment) so a rebuild scheduled at an aggregation
+    boundary (``on_aggregate``) or an α update (``on_epoch_end``) takes
+    effect on the very next epoch without re-plumbing the loop.
+
     ``start_epoch`` resumes mid-run. When resuming a multi-pod run at an
     epoch that is NOT an aggregation boundary, pass ``refs`` = the
     (phi_ref, psi_ref) of the last boundary *before* the checkpoint: the
@@ -233,12 +246,13 @@ def run_hierarchical(
             raise ValueError("segment streaming drives a single "
                              "configuration: agg_fn must be None")
         phi, psi = state[0], state[1]
+        aux = (lambda: ()) if epoch_aux is None else epoch_aux
         for ep in range(start_epoch, n_epochs):
             first = start_segment if ep == start_epoch else 0
             for seg in segments.epoch(ep, start=first):
                 phi, psi, _, _, _, z = epoch_fn(
                     phi, psi, seg.wl, seg.dl, seg.uid, seg.z,
-                    alpha, beta, jnp.uint32(seed0 + ep))
+                    alpha, beta, jnp.uint32(seed0 + ep), *aux())
                 segments.commit(seg, z)                      # SaveShard
                 if on_segment_end is not None:
                     on_segment_end(ep, seg, (phi, psi))
@@ -249,6 +263,7 @@ def run_hierarchical(
         return phi, psi
 
     phi, psi, wl, dl, uid, z = state
+    aux = (lambda: ()) if epoch_aux is None else epoch_aux
     if agg_fn is not None:
         if refs is not None:
             phi_ref, psi_ref = refs
@@ -257,7 +272,8 @@ def run_hierarchical(
             phi_ref, psi_ref = jnp.copy(phi), jnp.copy(psi)
     for ep in range(start_epoch, n_epochs):
         phi, psi, wl, dl, uid, z = epoch_fn(
-            phi, psi, wl, dl, uid, z, alpha, beta, jnp.uint32(seed0 + ep)
+            phi, psi, wl, dl, uid, z, alpha, beta, jnp.uint32(seed0 + ep),
+            *aux()
         )
         if agg_fn is not None and (ep + 1) % agg_every == 0:
             # boundary index as quantization seed (decorrelated rounding)

@@ -315,3 +315,44 @@ def collective_bytes(hlo_text: str, while_trips=None) -> Dict[str, int]:
         result[op] = int(round(out_bytes.get(op, 0)
                                + loop_bytes.get(op, 0) * trips))
     return result
+
+
+def sampler_epoch_bytes(n_tokens: float, n_topics: int, k_d: float,
+                        n_mh: int = 4, vocab: int | None = None,
+                        rebuild_epochs: int = 1) -> Dict[str, float]:
+    """Analytic per-epoch HBM traffic of the two sampler families (§9).
+
+    The dense plane scan streams three f32 [T, K] planes per token block
+    (phi rows, psi broadcast, theta rows) and writes [T] ids — per-token
+    traffic ≈ 3·K·4 B regardless of sparsity. The alias-MH probe reads the
+    doc's (topic, count) pair rows once per doc proposal (⌈n_mh/2⌉ of the
+    n_mh steps) plus O(1) scalar gathers per probe (phi/psi/alpha/table
+    entries for proposal + acceptance), so per-token traffic ≈
+    ⌈n_mh/2⌉·2·k_d·4 + n_mh·10·4 B. Word-table rebuilds stream the full
+    [V, K] phi once and write three table planes — amortized over
+    ``rebuild_epochs`` epochs (the aggregation-boundary cadence).
+
+    Returns dense / alias_sample / alias_rebuild / alias (total) bytes per
+    epoch plus the dense:alias ratio — the number ``launch/dryrun.py``
+    prints next to each lda_train cell so ``--sampler`` choices are visible
+    before a run.
+    """
+    import math
+
+    dense = float(n_tokens) * 3.0 * n_topics * 4.0
+    per_token = (math.ceil(n_mh / 2) * 2.0 * k_d * 4.0
+                 + float(n_mh) * 10.0 * 4.0)
+    alias_sample = float(n_tokens) * per_token
+    alias_rebuild = 0.0
+    if vocab:
+        # read int32 phi once, write f32 wq/wp + int32 wa
+        alias_rebuild = float(vocab) * n_topics * 4.0 * 4.0 / max(
+            1, rebuild_epochs)
+    total = alias_sample + alias_rebuild
+    return {
+        "dense_bytes_per_epoch": dense,
+        "alias_sample_bytes_per_epoch": alias_sample,
+        "alias_rebuild_bytes_per_epoch": alias_rebuild,
+        "alias_bytes_per_epoch": total,
+        "dense_over_alias": dense / total if total else float("inf"),
+    }

@@ -1,0 +1,1 @@
+# Sparsity-aware alias-table MH sampling kernels (DESIGN.md §9).

@@ -1,0 +1,95 @@
+"""Dispatching wrappers for the alias-table build / MH probe ops.
+
+Same contract as ``kernels/gibbs/ops.py``: ``force`` in {None, "pallas",
+"interpret", "ref"}; None defers to the pinned process default
+(``repro.kernels.set_kernel_mode``) and then the cached backend probe, so CPU
+CI runs the exact jnp oracle and TPU runs the compiled kernel.
+
+``build_alias`` normalizes + partitions ONCE here (``_prepare``) and hands
+identical inputs to whichever sweep implementation runs — ref vs kernel
+agreement is bitwise because only the K-step sweep differs in execution
+strategy, never in arithmetic. ``mh_resample`` likewise mixes the sampler
+seed with a sampler-family salt here (the MH uniform stream must not collide
+with the dense path's Gumbel stream at equal (seed, uid) counters).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as kernels_mod
+from repro.core import prng
+from repro.kernels.alias.kernel import alias_build_pallas, mh_resample_pallas
+from repro.kernels.alias.ref import build_alias_ref, mh_resample_ref
+
+# decorrelates the MH uniform stream from the dense sampler's Gumbel stream
+MH_SALT = 0x5EED_A11A
+
+
+def _prepare(weights):
+    """Mean-1 normalization + stable small/large partition of [R, K] rows.
+
+    Returns (wn, order, ns): ``order`` lists small slots (w < 1) in index
+    order, then large slots; ``ns`` is the per-row small count. Shared
+    verbatim by the ref and Pallas sweeps.
+    """
+    K = weights.shape[-1]
+    total = jnp.maximum(jnp.sum(weights, axis=-1, keepdims=True),
+                        jnp.float32(1e-30))
+    wn = (weights * (jnp.float32(K) / total)).astype(jnp.float32)
+    is_large = wn >= 1.0
+    order = jnp.argsort(is_large.astype(jnp.int32), axis=-1,
+                        stable=True).astype(jnp.int32)
+    ns = jnp.sum(~is_large, axis=-1).astype(jnp.int32)
+    return wn, order, ns
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def build_alias(weights, *, force: str | None = None):
+    """Batched Walker alias tables over the trailing axis.
+
+    weights [..., K] nonneg f32 → (prob [..., K] f32, alias [..., K] int32)
+    with the table identity  q(k) = (prob_k + Σ_j (1−prob_j)·1[alias_j = k])/K
+    = weights_k / Σ weights  (exactly, up to f32 rounding).
+    """
+    lead = weights.shape[:-1]
+    K = weights.shape[-1]
+    wn, order, ns = _prepare(weights.reshape(-1, K).astype(jnp.float32))
+    mode = kernels_mod.kernel_mode(force)
+    if mode == "pallas":
+        prob, alias = alias_build_pallas(wn, order, ns)
+    elif mode == "interpret":
+        prob, alias = alias_build_pallas(wn, order, ns, interpret=True)
+    else:
+        prob, alias = build_alias_ref(wn, order, ns)
+    return prob.reshape(*lead, K), alias.reshape(*lead, K)
+
+
+def mh_resample(
+    phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
+    w, d, z, uid, seed, beta,
+    vocab_size: int, n_mh: int, *, force: str | None = None,
+):
+    """n_mh alias-MH steps per token; returns z_new [T] int32.
+
+    See ``ref.mh_resample_ref`` for the array contract and the proposal
+    cycle. ``seed`` is the raw sweep seed — the MH salt is mixed here.
+    """
+    seed2 = prng.fmix32(jnp.asarray(seed, jnp.uint32)
+                        ^ jnp.uint32(MH_SALT))
+    alpha_sum = jnp.sum(alpha).astype(jnp.float32)
+    mode = kernels_mod.kernel_mode(force)
+    if mode == "pallas":
+        return mh_resample_pallas(
+            phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
+            w, d, z, uid, seed2, beta, alpha_sum, vocab_size, n_mh)
+    if mode == "interpret":
+        return mh_resample_pallas(
+            phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
+            w, d, z, uid, seed2, beta, alpha_sum, vocab_size, n_mh,
+            interpret=True)
+    return mh_resample_ref(
+        phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
+        w, d, z, uid, seed2, jnp.float32(beta), alpha_sum, vocab_size, n_mh)

@@ -1,8 +1,7 @@
 """Dispatching wrapper for EmbeddingBag (padded + ragged forms)."""
 from __future__ import annotations
 
-import jax
-
+from repro import kernels as kernels_mod
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
 from repro.kernels.embedding_bag.ref import (
     embedding_bag_padded_ref,
@@ -10,17 +9,12 @@ from repro.kernels.embedding_bag.ref import (
 )
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:
-        return False
-
-
 def embedding_bag(table, ids, weights=None, combiner: str = "sum",
                   *, force: str | None = None):
-    """Padded multi-hot lookup. force in {None, "pallas", "interpret", "ref"}."""
-    mode = force or ("pallas" if _on_tpu() else "ref")
+    """Padded multi-hot lookup. force in {None, "pallas", "interpret", "ref"};
+    None defers to the pinned process default, then the cached backend probe
+    (``repro.kernels.kernel_mode``)."""
+    mode = kernels_mod.kernel_mode(force)
     if mode == "pallas":
         return embedding_bag_pallas(table, ids, weights, combiner)
     if mode == "interpret":

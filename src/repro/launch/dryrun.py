@@ -52,6 +52,12 @@ def run_cell(spec, shape: str, multi_pod: bool, skip_jaxpr: bool = False) -> dic
         rec["reason"] = spec.skip.get(shape, "")
         return rec
     rec["note"] = cell.note
+    if cell.extra:
+        # analytic side-channel (e.g. dense vs alias sampler HBM traffic,
+        # dist/analysis.sampler_epoch_bytes) — recorded even when the
+        # lower/compile below fails, so --sampler planning never blocks on
+        # a compile bug
+        rec.update(cell.extra)
     t0 = time.time()
     try:
         lowered = cell.lower()
@@ -152,6 +158,14 @@ def main() -> None:
                     f"compile={rec['compile_s']}s live/dev="
                     f"{rec['live_bytes_per_device']/1e9:.2f}GB "
                     f"bottleneck={rec['bottleneck']}", flush=True)
+                st = rec.get("sampler_traffic")
+                if st:
+                    print(
+                        f"#   sampler HBM/epoch: dense="
+                        f"{st['dense_bytes_per_epoch']/1e9:.1f}GB alias="
+                        f"{st['alias_bytes_per_epoch']/1e9:.1f}GB "
+                        f"(x{st['dense_over_alias']:.0f} less with "
+                        f"--sampler alias)", flush=True)
             elif rec["status"] == "skip":
                 print(f"# {rec['arch']}/{rec['shape']} SKIP: {rec['reason']}",
                       flush=True)

@@ -67,6 +67,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="with --kill-at E: die after this many segment "
                          "swaps of the E-th epoch (segment boundary)")
     ap.add_argument("--package-len", type=int, default=0)
+    ap.add_argument("--sampler", choices=("dense", "alias"), default="dense",
+                    help="inner-loop family (DESIGN.md §9): exact dense "
+                         "plane scan, or sparsity-aware alias-table MH "
+                         "(O(k_d + n_mh) per token; tables rebuilt at "
+                         "aggregation boundaries)")
+    ap.add_argument("--n-mh", type=int, default=4,
+                    help="MH steps per token for --sampler alias")
     ap.add_argument("--publish-dir", default=None,
                     help="publish versioned RT-LDA snapshots here")
     ap.add_argument("--publish-every", type=int, default=1,
@@ -89,6 +96,7 @@ def config_from_args(args) -> "TrainerConfig":
         model_shards=args.model_shards,
         n_epochs=args.epochs, agg_every=args.agg_every,
         alpha_opt_from=args.alpha_opt_from, package_len=args.package_len,
+        sampler=args.sampler, n_mh=args.n_mh,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume,
         bench_out=args.bench_out or None,

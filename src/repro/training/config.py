@@ -30,6 +30,13 @@ class TrainerConfig:
     n_pods: int = 1
     data_shards: int = 1
     model_shards: int = 1
+    # ---------------------------------------------------------- sampler ----
+    sampler: str = "dense"         # inner-loop family (DESIGN.md §9):
+                                   # "dense" = exact [T, K] plane scan,
+                                   # "alias" = sparsity-aware alias-table MH
+    n_mh: int = 4                  # MH steps per token (alias sampler)
+    kernel_mode: Optional[str] = None  # pin kernel dispatch process-wide:
+                                   # None (auto) | pallas | interpret | ref
     # --------------------------------------------------------- schedule ----
     n_epochs: int = 20
     agg_every: int = 3             # aggregation boundary cadence (multi-pod)
@@ -74,6 +81,16 @@ class TrainerConfig:
             raise ValueError("TrainerConfig.beta must be > 0")
         if self.alpha0 <= 0.0:
             raise ValueError("TrainerConfig.alpha0 must be > 0")
+        if self.sampler not in ("dense", "alias"):
+            raise ValueError(
+                f"TrainerConfig.sampler must be 'dense' or 'alias', got "
+                f"{self.sampler!r}")
+        if self.n_mh < 1:
+            raise ValueError("TrainerConfig.n_mh must be >= 1")
+        if self.kernel_mode not in (None, "pallas", "interpret", "ref"):
+            raise ValueError(
+                "TrainerConfig.kernel_mode must be None, 'pallas', "
+                f"'interpret' or 'ref', got {self.kernel_mode!r}")
         if self.resume and self.ckpt_dir is None:
             raise ValueError("TrainerConfig.resume requires ckpt_dir")
         if self.n_pods > 1 and (self.n_segments > 1 or self.corpus_dir):

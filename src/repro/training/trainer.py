@@ -84,6 +84,9 @@ class Trainer:
         self._refs = None            # (phi_ref, psi_ref) of the last boundary
         self._doc_len_hist = None
         self._z = None               # global [n_tokens] z store (streaming)
+        self._tables = None          # alias sampler proposal tables (§9)
+        self._tables_built_at = -1   # epoch of the last word-table rebuild
+        self._tables_alpha = None    # the α the current α table was built from
         self._streaming = False
         self._ep_time = 0.0          # per-epoch accumulator (streaming)
         self._omega_from = None      # first epoch that folds Ω incrementally
@@ -195,12 +198,22 @@ class Trainer:
             self.sc0 = src.segment(0)
             self.state = dist.device_arrays(self.sc0, K)
 
+        if cfg.kernel_mode is not None:
+            from repro import kernels as kernels_mod
+
+            kernels_mod.set_kernel_mode(cfg.kernel_mode)
+        doc_cap = 0
+        if cfg.sampler == "alias":
+            from repro.core import sparse
+
+            doc_cap = sparse.suggest_cap(src.doc_lengths(), K)
         cap = self.sc0.word_local.shape[-1]
         self.ring_cfg = dist.RingConfig(
             n_topics=K, vocab_size=src.vocab_size,
             rows_per_shard=self.sc0.rows_per_shard,
             docs_per_shard=self.sc0.docs_per_shard,
-            cap=cap, package_len=cfg.package_len or cap, n_rounds=M)
+            cap=cap, package_len=cfg.package_len or cap, n_rounds=M,
+            sampler=cfg.sampler, n_mh=cfg.n_mh, doc_topic_cap=doc_cap)
         elastic = any(isinstance(cb, ElasticLiveness) for cb in self.callbacks)
         if cfg.multi_pod:
             self._epoch_fn = hierarchy.make_pod_ring_epoch(self.mesh,
@@ -285,6 +298,11 @@ class Trainer:
             self._omega_parts.clear()
             stream = SegmentStream(self.source, self._z,
                                    prefetch=cfg.prefetch)
+        if self._alias and self._tables is None:
+            # fresh run (or a resume whose checkpoint predates §9 tables):
+            # build from whatever (phi, psi, α) the session starts from
+            self._rebuild_tables()
+            self._tables_built_at = self.epoch
         state = hierarchy.run_hierarchical(
             self._timed_epoch, self._timed_agg if self._agg_fn else None,
             self.state, self.alpha, self.beta, cfg.n_epochs, cfg.agg_every,
@@ -295,6 +313,7 @@ class Trainer:
             refs=self._refs,
             segments=stream, start_segment=self.segment,
             on_segment_end=self._hook_segment_end if stream else None,
+            epoch_aux=self._epoch_tables if self._alias else None,
         )
         self.state = tuple(state)
         self.notify("on_train_end")
@@ -337,6 +356,12 @@ class Trainer:
         # mid-window checkpoints carry the exact refs a resume must replay
         # against (see run_hierarchical's refs contract)
         self._refs = (jnp.copy(state[0]), jnp.copy(state[1]))
+        if self._alias:
+            # §9 rebuild cadence: stale word-proposal tables refresh from the
+            # just-merged Φ — before notify, so boundary checkpoints capture
+            # the tables the next epoch samples with
+            self._rebuild_tables()
+            self._tables_built_at = ep + 1
         self.notify("on_aggregate", ep)
 
     def _hook_segment_end(self, ep: int, seg, state) -> None:
@@ -381,6 +406,48 @@ class Trainer:
         return self.alpha       # callbacks may have replaced it
 
     # --------------------------------------------- state views / helpers ---
+
+    @property
+    def _alias(self) -> bool:
+        return self.config.sampler == "alias"
+
+    def _rebuild_tables(self, word: bool = True) -> None:
+        """Refresh the alias sampler's stale proposal state from the current
+        (phi, psi, α). ``word=False`` refreshes only the (cheap) α table —
+        used when α moved but Φ is mid-window."""
+        from repro.core import sparse
+
+        phi, psi = self.state[0], self.state[1]
+        if word or self._tables is None:
+            wq, wp, wa = sparse.make_word_tables(
+                phi, psi, self.beta, self.ring_cfg.vocab_size)
+        else:
+            wq, wp, wa = self._tables.wq, self._tables.wp, self._tables.wa
+        ap, aa = sparse.make_alpha_table(self.alpha)
+        self._tables = sparse.AliasTables(wq, wp, wa, ap, aa)
+        self._tables_alpha = self.alpha
+
+    def _epoch_tables(self) -> tuple:
+        """``run_hierarchical``'s ``epoch_aux``: hand the loop the proposal
+        tables, refreshing them LAZILY at epoch start. Rebuilding here — not
+        in the epoch-end hook — keeps the checkpoint contract trivial: a save
+        always captures exactly the tables its epoch sampled with, and a
+        resumed run re-derives any due rebuild from the restored state (equal
+        to the uninterrupted run's epoch-start state), so replay stays
+        bitwise. Single-configuration sessions rebuild word tables on the
+        ``agg_every`` cadence (multi-pod rebuilds ride ``_hook_aggregate``'s
+        merged Φ instead); the α table refreshes whenever α moved — the MH
+        correction assumes the drawn proposal and the q ratio share one α.
+        """
+        ep = self.epoch
+        if (not self.has_aggregation and ep > 0
+                and ep % self.config.agg_every == 0
+                and self._tables_built_at != ep):
+            self._rebuild_tables()
+            self._tables_built_at = ep
+        elif self._tables_alpha is not self.alpha:
+            self._rebuild_tables(word=False)
+        return tuple(self._tables)
 
     @property
     def has_aggregation(self) -> bool:
@@ -460,6 +527,12 @@ class Trainer:
 
     def checkpoint_tree(self) -> dict:
         tree = {"state": tuple(self.state), "alpha": self.alpha}
+        if self._alias and self._tables is not None:
+            # the stale proposal tables are part of the sampler's state: a
+            # resume must replay against the SAME staleness the uninterrupted
+            # run sampled with (rebuilding from the restored Φ would hand the
+            # resumed run fresher proposals and break bitwise replay)
+            tree["tables"] = tuple(self._tables)
         if self._streaming:
             # streamed sessions checkpoint (phi, psi) + the GLOBAL z store:
             # the stacks are reproducible from the source, z is not — and a
@@ -474,6 +547,16 @@ class Trainer:
             tree["refs"] = tuple(self._refs)
         return tree
 
+    def _tables_like(self, phi_shape) -> tuple:
+        """Structure-only stand-in for the alias tables (wq, wp, wa, ap, aa)
+        — same treedef/leaf count as ``tuple(self._tables)``."""
+        K = self.config.n_topics
+        return (np.zeros(phi_shape, np.float32),
+                np.zeros(phi_shape, np.float32),
+                np.zeros(phi_shape, np.int32),
+                np.zeros((K,), np.float32),
+                np.zeros((K,), np.int32))
+
     def checkpoint_like(self) -> dict:
         self.setup()
         if self._streaming and self.state is None:
@@ -481,12 +564,20 @@ class Trainer:
             # needs the tree STRUCTURE (leaf count + order), not values
             cfg = self.config
             K, M = cfg.n_topics, cfg.ring_size
-            return {"state": (np.zeros((M, self.sc0.rows_per_shard, K),
-                                       np.int32),
+            phi_shape = (M, self.sc0.rows_per_shard, K)
+            like = {"state": (np.zeros(phi_shape, np.int32),
                               np.zeros((K,), np.int32)),
                     "alpha": np.zeros((K,), np.float32),
                     "z": np.zeros(self.source.n_tokens, np.int32)}
-        return self.checkpoint_tree()
+            if self._alias:
+                like["tables"] = self._tables_like(phi_shape)
+            return like
+        tree = self.checkpoint_tree()
+        if self._alias and "tables" not in tree:
+            # restore runs before fit()'s lazy table build — synthesize the
+            # template from the phi shape (values never reach the loader)
+            tree["tables"] = self._tables_like(tuple(self.state[0].shape))
+        return tree
 
     def load_checkpoint(self, tree: dict, meta: dict) -> None:
         import jax.numpy as jnp
@@ -499,6 +590,24 @@ class Trainer:
             self._refs = tuple(jnp.asarray(x) for x in tree["refs"])
         self.epoch = int(meta.get("epoch", meta["step"]))
         self.segment = int(meta.get("segment", 0))
+        if "tables" in tree:
+            from repro.core import sparse
+
+            self._tables = sparse.AliasTables(
+                *(jnp.asarray(x) for x in tree["tables"]))
+            # mid-epoch (segment) checkpoints already carry this epoch's
+            # tables; epoch-boundary ones let _epoch_tables re-derive a due
+            # rebuild from the restored state — both replay bitwise. The α
+            # table is value-rebuilt at the next epoch start (deterministic
+            # from the restored α).
+            self._tables_built_at = self.epoch if self.segment > 0 else -1
+            self._tables_alpha = None
+        else:
+            # structurally a dense/pre-§9 checkpoint: an alias session never
+            # reaches here (checkpoint_like's template makes io.load fail
+            # loudly on the leaf-count mismatch — resuming a dense run with
+            # --sampler alias is a config change, not a recovery)
+            self._tables = None
 
     # --------------------------------------------------- train→serve export
 
@@ -553,6 +662,8 @@ class Trainer:
             "n_topics": cfg.n_topics,
             "mesh": {"pods": cfg.n_pods, "data": cfg.data_shards,
                      "model": cfg.model_shards},
+            "sampler": cfg.sampler,
+            "n_mh": cfg.n_mh if cfg.sampler == "alias" else None,
             "source": type(src).__name__ if src else None,
             "n_segments": src.n_segments if src else 1,
             "prefetch": bool(cfg.prefetch) if self._streaming else None,

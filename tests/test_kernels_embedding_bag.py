@@ -6,6 +6,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.embedding_bag import ops
 
+pytestmark = pytest.mark.kernels
+
 RNG = np.random.default_rng(11)
 
 

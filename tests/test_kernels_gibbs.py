@@ -12,6 +12,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core import prng
 from repro.kernels.gibbs import ops
 
+pytestmark = pytest.mark.kernels
+
 RNG = np.random.default_rng(7)
 
 
