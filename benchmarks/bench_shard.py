@@ -1,0 +1,140 @@
+"""Word-sharded model parallelism bench — DESIGN.md §10.
+
+Replicated (P=1) vs P ∈ {2, 4, 8} word-sharded epochs on the host mesh at
+FIXED global batch (same corpus, same data_shards, same seeds — the outputs
+are bitwise identical by the shard conformance suite, so this measures pure
+layout cost). Per configuration:
+
+  * per-device Φ+alias-table bytes (the HBM ceiling the layout breaks),
+  * tokens/s through the ring epoch,
+  * rotation overhead fraction vs the replicated baseline.
+
+Each configuration runs in a subprocess with its own
+``--xla_force_host_platform_device_count`` (the mesh is data_shards × P; the
+parent process must stay at 1 device like every other bench). Host-CPU
+caveat recorded in the JSON: fake devices share the same cores, so sharded
+tokens/s here prices the rotation collectives, not the P× HBM bandwidth a
+real pod adds.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DATA_SHARDS = 2
+N_EPOCHS = 3          # first epoch includes compile; timed epochs follow
+
+CHILD = """
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.data import synthetic, corpus as corpus_mod
+from repro.core import distributed as dist, sparse
+
+P = {p}
+D = {d}
+corpus, _ = synthetic.lda_corpus(seed=0, n_docs=480, n_topics=12,
+                                 vocab_size=360, doc_len_mean=12)
+K = 16
+sc = corpus_mod.shard_corpus(corpus, D, D, K, seed=1, n_model_shards=P)
+if P > 1:
+    mesh = jax.make_mesh((D, P), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+else:
+    mesh = jax.make_mesh((D, 1), ("data", "model"),
+                         devices=jax.devices()[:D],
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+phi, psi, wl, dl, uid, z = dist.device_arrays(sc, K)
+cap = sc.word_local.shape[2]
+doc_cap = sparse.suggest_cap(corpus.doc_lengths(), K)
+cfg = dist.RingConfig(
+    n_topics=K, vocab_size=corpus.vocab_size,
+    rows_per_shard=sc.rows_per_shard, docs_per_shard=sc.docs_per_shard,
+    cap=cap, package_len=cap, n_rounds=D, model_shards=P,
+    sampler="alias", n_mh=4, doc_topic_cap=doc_cap)
+epoch = dist.make_ring_epoch(mesh, cfg)
+alpha = jnp.full((K,), 50.0 / K, jnp.float32)
+beta = jnp.float32(0.01)
+wq, wp, wa = sparse.make_word_tables(phi, psi, beta, corpus.vocab_size)
+ap, aa = sparse.make_alpha_table(alpha)
+state = (phi, psi, wl, dl, uid, z)
+state = epoch(*state, alpha, beta, jnp.uint32(3), wq, wp, wa, ap, aa)
+jax.block_until_ready(state)                       # compile epoch
+t0 = time.perf_counter()
+for ep in range(1, {epochs}):
+    state = epoch(*state, alpha, beta, jnp.uint32(ep * 977 + 3),
+                  wq, wp, wa, ap, aa)
+jax.block_until_ready(state)
+dt = (time.perf_counter() - t0) / max(1, {epochs} - 1)
+# per-device model state: Φ (int32) + wq/wp (f32) + wa (int32) row slices
+rows_dev = sc.rows_per_shard // max(1, P)
+print(json.dumps({{
+    "p": P,
+    "epoch_s": dt,
+    "tokens_per_s": corpus.n_tokens / dt,
+    "phi_table_bytes_per_device": rows_dev * K * 16,
+    "rows_per_device": rows_dev,
+    "cap": cap,
+    "n_tokens": corpus.n_tokens,
+}}))
+"""
+
+
+def _run_config(p: int, epochs: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{DATA_SHARDS * max(1, p)}")
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-c", CHILD.format(p=p, d=DATA_SHARDS,
+                                            epochs=epochs)],
+        capture_output=True, text=True, timeout=900, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"P={p} child failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run():
+    quick = bool(os.environ.get("BENCH_QUICK"))
+    ps = [1, 2, 4] if quick else [1, 2, 4, 8]
+    epochs = 2 if quick else N_EPOCHS
+    t0 = time.perf_counter()
+    recs = [_run_config(p, epochs) for p in ps]
+    base = recs[0]
+    lines = []
+    for r in recs:
+        r["hbm_shrink_x"] = (base["phi_table_bytes_per_device"]
+                             / r["phi_table_bytes_per_device"])
+        r["rotation_overhead_frac"] = max(
+            0.0, 1.0 - base["epoch_s"] / r["epoch_s"]) if r["p"] > 1 else 0.0
+        lines.append((
+            f"shard.p{r['p']}", r["epoch_s"] * 1e6,
+            f"tokens_per_s={r['tokens_per_s']:.0f}|"
+            f"phi_tables_dev={r['phi_table_bytes_per_device']}|"
+            f"hbm_x{r['hbm_shrink_x']:.1f}|"
+            f"rot_frac={r['rotation_overhead_frac']:.2f}"))
+    record = {
+        "bench": "shard",
+        "data_shards": DATA_SHARDS,
+        "sampler": "alias",
+        "tokens_per_s": base["tokens_per_s"],
+        "configs": recs,
+        "note": ("host mesh: fake devices share cores, so sharded tokens/s "
+                 "prices rotation collectives only — real pods add P x HBM "
+                 "bandwidth; outputs bitwise-equal across P (tests/"
+                 "test_shard_model.py)"),
+        "wall_s_total": round(time.perf_counter() - t0, 3),
+    }
+    with open(os.path.join(REPO, "BENCH_shard.json"), "w") as f:
+        json.dump(record, f, indent=2)
+    return lines
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -42,6 +42,7 @@ MODULES = [
     ("train", "benchmarks.bench_train", "Trainer"),
     ("data", "benchmarks.bench_data", "Fig 3/4"),
     ("sampler", "benchmarks.bench_sampler", "§9 alias-MH"),
+    ("shard", "benchmarks.bench_shard", "§10 model parallel"),
 ]
 
 

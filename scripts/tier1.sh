@@ -7,6 +7,7 @@
 #   scripts/tier1.sh train    # training-driver smoke subset (-m trainer)
 #   scripts/tier1.sh data     # data-layer streaming subset (-m data)
 #   scripts/tier1.sh kernels  # Pallas kernel subset, interpret-mode (-m kernels)
+#   scripts/tier1.sh shard    # word-sharded model-parallel conformance (-m shard)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 case "${1:-}" in
@@ -22,5 +23,8 @@ case "${1:-}" in
     kernels)
         shift
         exec python -m pytest -x -q -m kernels "$@";;
+    shard)
+        shift
+        exec python -m pytest -x -q -m shard "$@";;
 esac
 exec python -m pytest -x -q "$@"

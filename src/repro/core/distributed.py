@@ -61,6 +61,11 @@ class RingConfig:
     package_len: int           # L — pipeline package size (§3.1.2)
     n_rounds: int              # = ring size M
     use_kernel: bool = False
+    model_shards: int = 1      # P — word-sharded model parallelism (§10):
+                               # P > 1 rotates the ring over "data" only and
+                               # keeps Φ row slices resident on "model";
+                               # rows_per_shard/cap stay the TOTAL per-coarse-
+                               # shard sizes (P·rpm / P·capb)
     # ---- sampler family (DESIGN.md §9) -----------------------------------
     sampler: str = "dense"     # "dense" = exact [T, K] plane scan;
                                # "alias" = sparsity-aware alias-table MH
@@ -205,8 +210,37 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
     ``pod_axis=None`` builds the single-pod body (phi [1, rows, K] views);
     naming the pod axis adds one leading singleton dim to every per-device
     view ([1, 1, rows, K] etc.) and decorrelates the sampler seed per pod.
+
+    ``cfg.model_shards = P > 1`` switches to word-sharded model parallelism
+    (DESIGN.md §10): the ring rotates over "data" only (M = data axis size),
+    "model" holds resident row slices of each coarse Φ shard, and per round
+    every device samples just its own bucket of the visiting sub-block
+    (capb = cap/P tokens against its rpm = rows/P resident Φ rows). Θ and the
+    sparse pairs still need the FULL visiting stack's (doc, z), which is
+    gathered with P−1 one-hop rotations around the model axis; Ψ deltas are
+    re-synced over "model" every round so round-start snapshots — and
+    therefore every sampled z — stay bitwise identical to the replicated
+    (P = 1) path, which doubles as the conformance oracle.
     """
-    M = ring_size(mesh)
+    Pm = cfg.model_shards
+    if Pm > 1:
+        M = int(mesh.shape[RING_AXES[0]])
+        assert int(mesh.shape[RING_AXES[1]]) == Pm, \
+            "mesh model axis must equal cfg.model_shards"
+        assert cfg.rows_per_shard % Pm == 0 and cfg.cap % Pm == 0, \
+            "rows/cap must be padded to model_shards (shard_corpus does this)"
+        assert cfg.package_len == cfg.cap, \
+            "word-sharded rounds sample one package (package_len must = cap)"
+        rot_axes = RING_AXES[0]        # stacks rotate over "data" only
+        rpm = cfg.rows_per_shard // Pm
+        capb = cfg.cap // Pm
+        # the per-device sampler sees its own bucket/slice geometry
+        cfg_l = dataclasses.replace(cfg, cap=capb, package_len=capb)
+        perm_m = ring_perm(Pm)
+    else:
+        M = ring_size(mesh)
+        rot_axes = RING_AXES
+        cfg_l = cfg
     assert cfg.n_rounds == M, "ring rounds must equal ring size"
     axis_sizes = (int(mesh.shape[RING_AXES[0]]), int(mesh.shape[RING_AXES[1]]))
     perm = ring_perm(M)
@@ -221,7 +255,8 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
         per-shard stale proposal state (wq, wp, wa sharded like phi; ap, aa
         replicated like alpha — rebuilt by the coordinator at aggregation
         boundaries, constant within an epoch)."""
-        me = flat_ring_index(axis_sizes)
+        me = (jax.lax.axis_index(RING_AXES[0]) if Pm > 1
+              else flat_ring_index(axis_sizes))
         seed = jnp.asarray(seed, jnp.uint32)
         if pod_axis is not None:
             # pods derive decorrelated seeds so replica samplers do not shadow
@@ -242,26 +277,58 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
         # (JAX 0.8 varying-manual-axes typing for shard_map scan carries)
         psi_l = jax.lax.pcast(psi_l, RING_AXES, to="varying")
 
+        def model_gather(a, mj):
+            """[M, capb] bucket view → [M, P·capb] full sub-blocks, rotating
+            the model ring P−1 hops; slot order is bucket-major — exactly the
+            replicated stack layout, so downstream scatters are bitwise."""
+            buf = jnp.zeros((Pm,) + a.shape, a.dtype)
+            buf = jax.lax.dynamic_update_slice(buf, a[None], (mj, 0, 0))
+            cur = a
+            for h in range(1, Pm):
+                cur = jax.lax.ppermute(cur, RING_AXES[1], perm_m)
+                # hop h delivers the bucket of model rank (mj − h) % P
+                buf = jax.lax.dynamic_update_slice(
+                    buf, cur[None], ((mj - h) % Pm, 0, 0))
+            return jnp.swapaxes(buf, 0, 1).reshape(
+                a.shape[0], Pm * a.shape[1])
+
         def round_fn(carry, r):
             phi_l, psi_l, stack = carry
             wl, dl, uid, z = stack
+            psi_r0 = psi_l            # round-start Ψ (model-resync baseline)
 
             # ship the immutable stack arrays for the NEXT round first — XLA
             # overlaps the collective-permute with this round's sampling
             # (pipeline, §3.1.2); z ships after sampling updates it.
             nxt = tuple(
-                jax.lax.ppermute(a, RING_AXES, perm) for a in (wl, dl, uid)
+                jax.lax.ppermute(a, rot_axes, perm) for a in (wl, dl, uid)
             )
 
             # Θ for the visiting shard's documents, rebuilt from the stack's z
-            flat_d = dl.reshape(-1)
-            flat_z = z.reshape(-1)
-            flat_w = wl.reshape(-1)
-            valid = (flat_w >= 0).astype(cfg.theta_dtype)
+            if Pm > 1:
+                # every slice holds only its bucket; Θ/pairs need the whole
+                # visiting stack's (doc, z) — gather it around the model
+                # axis, encoding the valid mask as doc = −1 so two arrays
+                # suffice (pads carry doc_local = 0, so max(·, 0) restores
+                # the replicated flat views exactly)
+                mj = jax.lax.axis_index(RING_AXES[1])
+                d_full = model_gather(jnp.where(wl >= 0, dl, -1), mj)
+                flat_d_enc = d_full.reshape(-1)
+                flat_z = model_gather(z, mj).reshape(-1)
+                flat_valid = flat_d_enc >= 0
+                flat_d = jnp.maximum(flat_d_enc, 0)
+            else:
+                flat_d = dl.reshape(-1)
+                flat_z = z.reshape(-1)
+                flat_valid = wl.reshape(-1) >= 0
+            valid = flat_valid.astype(cfg.theta_dtype)
 
             # my vocab sub-block of the visiting stack
             take = lambda a: jax.lax.dynamic_slice_in_dim(a, me, 1, axis=0)[0]
             w_sub, d_sub, u_sub, z_sub = take(wl), take(dl), take(uid), take(z)
+            if Pm > 1:
+                # resident rows are slice mj: rebase to [0, rpm)
+                w_sub = jnp.where(w_sub >= 0, w_sub - mj * rpm, w_sub)
 
             if alias:
                 # sparse Θ: capped (topic, count) pairs instead of a
@@ -270,10 +337,10 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
 
                 cap_p = cfg.doc_topic_cap or cfg.n_topics
                 pairs = sparse_mod.pairs_from_assignments(
-                    flat_d, flat_z, flat_w >= 0, cfg.docs_per_shard, cap_p)
+                    flat_d, flat_z, flat_valid, cfg.docs_per_shard, cap_p)
                 phi_l, psi_l, _, z_new = _sample_subblock_mh(
                     phi_l, psi_l, pairs, w_sub, d_sub, z_sub, u_sub,
-                    alpha, beta, seed, cfg, tabs)
+                    alpha, beta, seed, cfg_l, tabs)
             else:
                 if cfg.small_theta:
                     # Θ only for docs actually sampled this round: remap
@@ -281,11 +348,11 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
                     # absent docs hit the scratch row). Θ build cost:
                     # [cap+1, K] instead of [docs_per_shard, K] — and
                     # segment size no longer bounds Θ.
-                    inv = jnp.full((cfg.docs_per_shard,), cfg.cap, jnp.int32)
+                    inv = jnp.full((cfg.docs_per_shard,), cfg_l.cap, jnp.int32)
                     inv = inv.at[d_sub].set(
-                        jnp.arange(cfg.cap, dtype=jnp.int32))
+                        jnp.arange(cfg_l.cap, dtype=jnp.int32))
                     idx = inv[flat_d]
-                    theta = jnp.zeros((cfg.cap + 1, cfg.n_topics),
+                    theta = jnp.zeros((cfg_l.cap + 1, cfg.n_topics),
                                       cfg.theta_dtype).at[idx, flat_z].add(valid)
                     d_sub_local = inv[d_sub]
                 else:
@@ -295,22 +362,30 @@ def build_epoch_body(mesh, cfg: RingConfig, pod_axis=None):
 
                 phi_l, psi_l, _, z_new = _sample_subblock(
                     phi_l, psi_l, theta, w_sub, d_sub_local, z_sub, u_sub,
-                    alpha, beta, seed, cfg,
+                    alpha, beta, seed, cfg_l,
                 )
+            if Pm > 1:
+                # per-round Ψ resync over the model axis: each slice applied
+                # only its bucket's deltas; summing them restores the
+                # replicated round-end Ψ, so the next round's snapshot — and
+                # every z it samples — matches the P = 1 path bitwise
+                psi_l = psi_r0 + jax.lax.psum(psi_l - psi_r0, RING_AXES[1])
             # write updated z back into the (already-shipped view of the) stack:
             # the z we forward must include this round's update, so we update
             # BEFORE shipping in program order — instead we re-ship z only.
             z_upd = jax.lax.dynamic_update_slice_in_dim(z, z_new[None], me,
                                                         axis=0)
-            z_next = jax.lax.ppermute(z_upd, RING_AXES, perm)
+            z_next = jax.lax.ppermute(z_upd, rot_axes, perm)
             stack = (nxt[0], nxt[1], nxt[2], z_next)
             return (phi_l, psi_l, stack), None
 
         (phi_l, psi_l, stack), _ = jax.lax.scan(
             round_fn, (phi_l, psi_l, stack0), jnp.arange(M)
         )
-        # relaxed per-segment Ψ synchronization (Fig. 4)
-        psi_out = psi0 + jax.lax.psum(psi_l - psi0, RING_AXES)
+        # relaxed per-segment Ψ synchronization (Fig. 4); with model sharding
+        # the per-round resync already made model ranks replicas, so the
+        # epoch-end psum runs over the data ring only
+        psi_out = psi0 + jax.lax.psum(psi_l - psi0, rot_axes)
         unsq = lambda a: a.reshape((1,) * lead + a.shape)
         return (unsq(phi_l), psi_out.reshape((1,) * plead + psi_out.shape),
                 *(unsq(s) for s in stack))
@@ -326,15 +401,24 @@ def ring_epoch_parts(mesh, cfg: RingConfig):
       psi   [K]          int32  — replicated
       stack [S, M, cap]  int32  — word_local / doc_local / z (+uid uint32),
                                    sharded over the ring (leading dim)
+
+    With ``cfg.model_shards = P > 1`` (§10) the ring is "data"-only (M = data
+    axis size) and the same global shapes shard 2-D instead: phi/tables put
+    their row dim over "model" (each device holds [1, rows/P, K]) and the
+    stacks put their bucket-major cap dim over "model" ([1, M, cap/P]).
     """
     epoch = build_epoch_body(mesh, cfg)
-    sharded = shd.ring_spec()
-    in_specs = (sharded, P(), sharded, sharded, sharded, sharded, P(), P(), P())
+    if cfg.model_shards > 1:
+        phi_s = shd.wshard_spec()
+        stk_s = shd.wshard_stack_spec()
+    else:
+        phi_s = stk_s = shd.ring_spec()
+    in_specs = (phi_s, P(), stk_s, stk_s, stk_s, stk_s, P(), P(), P())
     if cfg.sampler == "alias":
         # stale proposal tables: wq/wp/wa ride the vocab sharding like phi,
         # the α table is replicated like alpha
-        in_specs = in_specs + (sharded, sharded, sharded, P(), P())
-    out_specs = (sharded, P(), sharded, sharded, sharded, sharded)
+        in_specs = in_specs + (phi_s, phi_s, phi_s, P(), P())
+    out_specs = (phi_s, P(), stk_s, stk_s, stk_s, stk_s)
     epoch_sm = jax.shard_map(epoch, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_vma=False)
     return epoch_sm, in_specs, out_specs

@@ -29,7 +29,7 @@ from jax.sharding import PartitionSpec as P
 from repro.dist.sharding import POD_AXIS, pod_ring_spec, pod_spec
 
 
-def make_aggregate(mesh, compressed: bool = False):
+def make_aggregate(mesh, compressed: bool = False, phi_spec=None):
     """jitted ΔΦ/ΔΨ merge over the pod axis.
 
     Arguments are (phi, psi, phi_ref, psi_ref[, seed]) where *_ref is the
@@ -39,8 +39,11 @@ def make_aggregate(mesh, compressed: bool = False):
     reduction (dist/collectives.compressed_psum — 2× less cross-pod DCN
     traffic than f32, 4× on int8-accumulating fabrics; Ψ and the tiny scales
     stay exact). Pass the aggregation-boundary index as ``seed`` so the
-    stochastic rounding decorrelates across boundaries.
+    stochastic rounding decorrelates across boundaries. ``phi_spec``
+    overrides the Φ layout — word-sharded sessions (§10) pass
+    ``pod_wshard_spec()``; the psum over "pod" is layout-agnostic.
     """
+    phi_spec = pod_ring_spec() if phi_spec is None else phi_spec
 
     def agg(phi, psi, phi_ref, psi_ref, seed):
         if compressed:
@@ -59,9 +62,9 @@ def make_aggregate(mesh, compressed: bool = False):
     agg_sm = jax.shard_map(
         agg,
         mesh=mesh,
-        in_specs=(pod_ring_spec(), pod_spec(), pod_ring_spec(), pod_spec(),
+        in_specs=(phi_spec, pod_spec(), phi_spec, pod_spec(),
                   P()),
-        out_specs=(pod_ring_spec(), pod_spec()),
+        out_specs=(phi_spec, pod_spec()),
         check_vma=False,
     )
     jitted = jax.jit(agg_sm)
@@ -72,7 +75,7 @@ def make_aggregate(mesh, compressed: bool = False):
     return call
 
 
-def make_elastic_aggregate(mesh):
+def make_elastic_aggregate(mesh, phi_spec=None):
     """§3.1.4 fault-tolerant ΔΦ/ΔΨ merge: aggregate over the *live* pods only.
 
     Like :func:`make_aggregate` but the call takes a per-pod liveness vector
@@ -86,9 +89,12 @@ def make_elastic_aggregate(mesh):
     The returned callable matches the ``agg_fn`` contract of
     :func:`run_hierarchical` (plus the ``live=`` kwarg) and records the
     number of live pods of the last boundary on ``call.last_n_live`` so the
-    coordinator can rescale or alarm.
+    coordinator can rescale or alarm. ``phi_spec`` as in
+    :func:`make_aggregate`.
     """
     from repro.dist.collectives import elastic_aggregate
+
+    phi_spec = pod_ring_spec() if phi_spec is None else phi_spec
 
     def agg(phi, psi, phi_ref, psi_ref, live):
         merged, n_live = elastic_aggregate(
@@ -99,9 +105,9 @@ def make_elastic_aggregate(mesh):
     agg_sm = jax.shard_map(
         agg,
         mesh=mesh,
-        in_specs=(pod_ring_spec(), pod_spec(), pod_ring_spec(), pod_spec(),
+        in_specs=(phi_spec, pod_spec(), phi_spec, pod_spec(),
                   P(POD_AXIS)),
-        out_specs=(pod_ring_spec(), pod_spec(), P(POD_AXIS)),
+        out_specs=(phi_spec, pod_spec(), P(POD_AXIS)),
         check_vma=False,
     )
     jitted = jax.jit(agg_sm)
@@ -118,13 +124,22 @@ def make_elastic_aggregate(mesh):
 
 
 def _pod_epoch_specs(cfg=None):
+    from repro.dist import sharding as shd
+
+    if cfg is not None and getattr(cfg, "model_shards", 1) > 1:
+        # word-sharded model parallelism (§10): Φ row slices over "model",
+        # stacks put the bucket-major cap dim over "model"
+        phi_s = shd.pod_wshard_spec()
+        stk_s = shd.pod_wshard_stack_spec()
+    else:
+        phi_s = stk_s = pod_ring_spec()
     specs_in = (
-        pod_ring_spec(),      # phi      [Pods, M, rows, K]
+        phi_s,                # phi      [Pods, M, rows, K]
         pod_spec(),           # psi      [Pods, K]
-        pod_ring_spec(),      # word     [Pods, S, M, cap]
-        pod_ring_spec(),      # doc
-        pod_ring_spec(),      # uid
-        pod_ring_spec(),      # z
+        stk_s,                # word     [Pods, S, M, cap]
+        stk_s,                # doc
+        stk_s,                # uid
+        stk_s,                # z
         P(),                  # alpha
         P(),                  # beta
         P(),                  # seed
@@ -132,8 +147,7 @@ def _pod_epoch_specs(cfg=None):
     if cfg is not None and getattr(cfg, "sampler", "dense") == "alias":
         # stale proposal tables (§9): wq/wp/wa shard like phi; the α table
         # is replicated (identical across pods — rebuilt from merged state)
-        specs_in = specs_in + (pod_ring_spec(), pod_ring_spec(),
-                               pod_ring_spec(), P(), P())
+        specs_in = specs_in + (phi_s, phi_s, phi_s, P(), P())
     specs_out = specs_in[:6]
     return specs_in, specs_out
 

@@ -117,6 +117,17 @@ class ShardedCorpus:
     ``word_local`` holds the row index within the owning vocab shard (-1 = pad);
     ``doc_local`` the document index within the data shard; ``uid`` a globally
     unique uint32 token id (the counter-based RNG key, stable across layouts).
+
+    Under word-sharded model parallelism (``n_model_shards = P > 1``,
+    DESIGN.md §10) each vocab shard's rows are further split into P model
+    slices: ``local_of_word``/``word_local`` already carry the slice-major row
+    permutation (coarse row r → slice ``r % P`` at in-slice position
+    ``r // P``), ``rows_per_shard`` is padded to ``P · ceil(rows_coarse / P)``
+    and each sub-block's ``cap`` positions are bucket-major — positions
+    ``[j·cap/P, (j+1)·cap/P)`` hold exactly the tokens whose words live in
+    slice j, so slicing the cap dim over the "model" mesh axis hands every
+    device precisely the tokens it owns Φ rows for. ``rows_coarse`` keeps the
+    pre-padding coarse row count (the resharding loader's pivot).
     """
 
     word_local: np.ndarray   # [S, M, cap] int32, -1 padding
@@ -131,6 +142,9 @@ class ShardedCorpus:
     n_vocab_shards: int
     vocab_size: int
     n_real_tokens: int
+    n_model_shards: int = 1
+    rows_coarse: int = 0         # coarse rows before slice padding (0 → same
+                                 # as rows_per_shard; set by shard_corpus)
 
 
 def shard_corpus(
@@ -145,20 +159,29 @@ def shard_corpus(
     min_docs_per_shard: int = 0,
     uids=None,
     probe_only: bool = False,
+    n_model_shards: int = 1,
 ) -> ShardedCorpus:
     """Shuffle docs (paper: randomize to balance blocks), round-robin them to data
     shards, split each shard's tokens by vocab shard, pad to one capacity.
 
     ``placement`` — optional shared (shard_of, local_of, rows) so that multiple
     segments / pod partitions agree on one vocabulary layout (phi shards must be
-    stable across them). ``min_cap``/``min_docs_per_shard`` force common static
-    shapes across partitions. ``uids`` — optional [n_tokens] global token ids
-    (default ``arange``): a segment/pod sub-corpus must pass the ids of its
-    tokens in the FULL corpus, or tokens in different partitions would share
-    counter-based RNG keys. ``probe_only=True`` returns just
-    ``(cap, docs_per_shard)`` — the static shapes — after the vectorized
-    counting, skipping the per-token stack build (the slow pure-Python pass);
-    the common-shape two-pass builders use it so they never shard twice.
+    stable across them); it is always the COARSE placement — the model-slice
+    permutation below is applied on top of it. ``min_cap``/
+    ``min_docs_per_shard`` force common static shapes across partitions.
+    ``uids`` — optional [n_tokens] global token ids (default ``arange``): a
+    segment/pod sub-corpus must pass the ids of its tokens in the FULL corpus,
+    or tokens in different partitions would share counter-based RNG keys.
+    ``probe_only=True`` returns just ``(cap, docs_per_shard)`` — the static
+    shapes — after the vectorized counting, skipping the per-token stack build
+    (the slow pure-Python pass); the common-shape two-pass builders use it so
+    they never shard twice.
+
+    ``n_model_shards = P > 1`` builds the word-sharded layout (DESIGN.md §10):
+    coarse row r moves to slice ``r % P`` (round-robin by frequency rank keeps
+    slices token-balanced, like the shards themselves), rows pad to
+    ``P · ceil(rows / P)``, and each sub-block's cap positions are bucket-major
+    (bucket j = slice-j tokens, padded per bucket to ``cap / P``).
     """
     rng = np.random.default_rng(seed)
     if placement is None:
@@ -166,6 +189,12 @@ def shard_corpus(
         shard_of, local_of, rows = vocab_placement(freq, n_vocab_shards)
     else:
         shard_of, local_of, rows = placement
+    P_ = max(1, int(n_model_shards))
+    rpm = (rows + P_ - 1) // P_              # rows per model slice
+    rows_total = P_ * rpm
+    # fold the slice permutation into the local row ids: with P_ = 1 this is
+    # the identity, so the replicated layout stays bit-for-bit what it was
+    local_eff = (local_of % P_) * rpm + local_of // P_
 
     doc_perm = rng.permutation(corpus.n_docs)
     data_shard_of_doc = np.empty(corpus.n_docs, np.int32)
@@ -177,12 +206,14 @@ def shard_corpus(
 
     tok_data_shard = data_shard_of_doc[corpus.doc_ids]
     tok_vocab_shard = shard_of[corpus.word_ids]
+    tok_slice = local_of[corpus.word_ids] % P_
 
-    counts = np.zeros((n_data_shards, n_vocab_shards), np.int64)
-    np.add.at(counts, (tok_data_shard, tok_vocab_shard), 1)
-    cap = max(int(counts.max()), min_cap)
-    cap = ((cap + cap_multiple - 1) // cap_multiple) * cap_multiple
-    cap = max(cap, cap_multiple)
+    counts = np.zeros((n_data_shards, n_vocab_shards, P_), np.int64)
+    np.add.at(counts, (tok_data_shard, tok_vocab_shard, tok_slice), 1)
+    capb = max(int(counts.max()), -(-min_cap // P_))
+    capb = ((capb + cap_multiple - 1) // cap_multiple) * cap_multiple
+    capb = max(capb, cap_multiple)
+    cap = P_ * capb
     if probe_only:
         return cap, docs_per_shard
 
@@ -192,26 +223,28 @@ def shard_corpus(
     uid = np.zeros((S, M, cap), np.uint32)
     z0 = np.zeros((S, M, cap), np.int32)
 
-    fill = np.zeros((S, M), np.int64)
+    fill = np.zeros((S, M, P_), np.int64)
     z_init = rng.integers(0, n_topics, corpus.n_tokens).astype(np.int32)
     if uids is None:
         uids = np.arange(corpus.n_tokens, dtype=np.uint32)
     for t in range(corpus.n_tokens):
         s = tok_data_shard[t]
         m = tok_vocab_shard[t]
-        p = fill[s, m]
-        word_local[s, m, p] = local_of[corpus.word_ids[t]]
+        j = tok_slice[t]
+        p = j * capb + fill[s, m, j]
+        word_local[s, m, p] = local_eff[corpus.word_ids[t]]
         doc_local[s, m, p] = doc_local_of_doc[corpus.doc_ids[t]]
         uid[s, m, p] = uids[t]
         z0[s, m, p] = z_init[t]
-        fill[s, m] += 1
+        fill[s, m, j] += 1
 
     return ShardedCorpus(
         word_local=word_local, doc_local=doc_local, uid=uid, z0=z0,
-        shard_of_word=shard_of, local_of_word=local_of,
-        rows_per_shard=rows, docs_per_shard=docs_per_shard,
+        shard_of_word=shard_of, local_of_word=local_eff,
+        rows_per_shard=rows_total, docs_per_shard=docs_per_shard,
         n_data_shards=S, n_vocab_shards=M, vocab_size=corpus.vocab_size,
         n_real_tokens=corpus.n_tokens,
+        n_model_shards=P_, rows_coarse=rows,
     )
 
 
@@ -260,7 +293,7 @@ def assign_segments(n_docs: int, n_segments: int, seed: int = 0) -> np.ndarray:
 
 def segment_corpus(
     corpus: Corpus, n_segments: int, n_data_shards: int, n_vocab_shards: int,
-    n_topics: int, seed: int = 0,
+    n_topics: int, seed: int = 0, n_model_shards: int = 1,
 ) -> Segments:
     """Split documents into segments (seeded permutation), shard each segment.
 
@@ -271,7 +304,9 @@ def segment_corpus(
     recompile.
     """
     if n_segments == 1:
-        return Segments([shard_corpus(corpus, n_data_shards, n_vocab_shards, n_topics, seed)])
+        return Segments([shard_corpus(corpus, n_data_shards, n_vocab_shards,
+                                      n_topics, seed,
+                                      n_model_shards=n_model_shards)])
     # one global vocab placement for every segment (phi shards must be stable)
     freq = np.bincount(corpus.word_ids, minlength=corpus.vocab_size)
     placement = vocab_placement(freq, n_vocab_shards)
@@ -289,7 +324,8 @@ def segment_corpus(
     # shape probe (vectorized counting only), then ONE build per segment
     probe = [
         shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + g,
-                     placement=placement, probe_only=True)
+                     placement=placement, probe_only=True,
+                     n_model_shards=n_model_shards)
         for g, s in enumerate(subs)
     ]
     cap = max(c for c, _ in probe)
@@ -297,7 +333,7 @@ def segment_corpus(
     return Segments([
         shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + g,
                      placement=placement, min_cap=cap, min_docs_per_shard=dps,
-                     uids=u)
+                     uids=u, n_model_shards=n_model_shards)
         for g, (s, u) in enumerate(zip(subs, guids))
     ])
 
@@ -309,6 +345,7 @@ def shard_corpus_pods(
     n_vocab_shards: int,
     n_topics: int,
     seed: int = 0,
+    n_model_shards: int = 1,
 ) -> List[ShardedCorpus]:
     """Partition documents across Peacock configurations (pods), with one shared
     vocab placement and common static shapes (cap, docs_per_shard) across pods."""
@@ -326,7 +363,8 @@ def shard_corpus_pods(
     # shape probe (vectorized counting only), then ONE build per pod
     probe = [
         shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + p,
-                     placement=placement, probe_only=True)
+                     placement=placement, probe_only=True,
+                     n_model_shards=n_model_shards)
         for p, s in enumerate(subs)
     ]
     cap = max(c for c, _ in probe)
@@ -334,6 +372,6 @@ def shard_corpus_pods(
     return [
         shard_corpus(s, n_data_shards, n_vocab_shards, n_topics, seed + p,
                      placement=placement, min_cap=cap, min_docs_per_shard=dps,
-                     uids=u)
+                     uids=u, n_model_shards=n_model_shards)
         for p, (s, u) in enumerate(zip(subs, guids))
     ]

@@ -80,6 +80,7 @@ class CorpusSource:
     n_segments: int
     n_data_shards: int
     n_vocab_shards: int
+    n_model_shards: int = 1     # word-sharded layout (DESIGN.md §10)
     seed: int
 
     def word_freq(self) -> np.ndarray:
@@ -117,7 +118,8 @@ class InMemorySource(CorpusSource):
     """
 
     def __init__(self, corpus: Corpus, n_segments: int, n_data_shards: int,
-                 n_vocab_shards: int, n_topics: int, seed: int = 0):
+                 n_vocab_shards: int, n_topics: int, seed: int = 0,
+                 n_model_shards: int = 1):
         self.corpus = corpus
         self.n_docs = int(corpus.n_docs)
         self.n_tokens = int(corpus.n_tokens)
@@ -126,6 +128,7 @@ class InMemorySource(CorpusSource):
         self.n_segments = int(n_segments)
         self.n_data_shards = int(n_data_shards)
         self.n_vocab_shards = int(n_vocab_shards)
+        self.n_model_shards = int(n_model_shards)
         self.seed = int(seed)
         self._segments = None
 
@@ -139,7 +142,8 @@ class InMemorySource(CorpusSource):
         if self._segments is None:
             self._segments = segment_corpus(
                 self.corpus, self.n_segments, self.n_data_shards,
-                self.n_vocab_shards, self.n_topics, seed=self.seed).segments
+                self.n_vocab_shards, self.n_topics, seed=self.seed,
+                n_model_shards=self.n_model_shards).segments
         return self._segments[g]
 
 
@@ -154,7 +158,7 @@ class SyntheticSource(InMemorySource):
     def __init__(self, n_docs: int, vocab_size: int, true_topics: int,
                  doc_len_mean: float, gen_seed: int, n_segments: int,
                  n_data_shards: int, n_vocab_shards: int, n_topics: int,
-                 seed: int = 0):
+                 seed: int = 0, n_model_shards: int = 1):
         from repro.data import synthetic
 
         corpus, truth = synthetic.lda_corpus(
@@ -163,7 +167,7 @@ class SyntheticSource(InMemorySource):
         self.truth = truth
         self.gen_seed = int(gen_seed)
         super().__init__(corpus, n_segments, n_data_shards, n_vocab_shards,
-                         n_topics, seed=seed)
+                         n_topics, seed=seed, n_model_shards=n_model_shards)
 
 
 def save_segments(source: CorpusSource, directory: str) -> str:
@@ -214,6 +218,9 @@ def save_segments(source: CorpusSource, directory: str) -> str:
         "rows_per_shard": int(sc0.rows_per_shard),
         "docs_per_shard": int(sc0.docs_per_shard),
         "cap": int(sc0.word_local.shape[-1]),
+        "n_model_shards": int(getattr(sc0, "n_model_shards", 1)),
+        "rows_coarse": int(getattr(sc0, "rows_coarse", 0)
+                           or sc0.rows_per_shard),
         "seed": int(source.seed),
         "segments": seg_meta,
     }
@@ -252,6 +259,10 @@ class DiskSource(CorpusSource):
         self.rows_per_shard = int(meta["rows_per_shard"])
         self.docs_per_shard = int(meta["docs_per_shard"])
         self.cap = int(meta["cap"])
+        # pre-§10 directories carry no layout keys: replicated defaults
+        self.n_model_shards = int(meta.get("n_model_shards", 1))
+        self.rows_coarse = int(meta.get("rows_coarse",
+                                        meta["rows_per_shard"]))
         pl = np.load(os.path.join(directory, PLACEMENT))
         self._shard_of = pl["shard_of_word"]
         self._local_of = pl["local_of_word"]
@@ -281,6 +292,8 @@ class DiskSource(CorpusSource):
             n_vocab_shards=self.n_vocab_shards,
             vocab_size=self.vocab_size,
             n_real_tokens=int(self._meta["segments"][g]["n_real_tokens"]),
+            n_model_shards=self.n_model_shards,
+            rows_coarse=self.rows_coarse,
         )
 
 

@@ -356,3 +356,51 @@ def sampler_epoch_bytes(n_tokens: float, n_topics: int, k_d: float,
         "alias_bytes_per_epoch": total,
         "dense_over_alias": dense / total if total else float("inf"),
     }
+
+
+def model_shard_report(n_topics: int, vocab: int, data_shards: int,
+                       model_shards: int, n_tokens: float,
+                       docs_per_shard: int = 0, doc_topic_cap: int = 0
+                       ) -> Dict[str, float]:
+    """Analytic per-device HBM + rotation traffic under word-sharded model
+    parallelism (DESIGN.md §10).
+
+    The ring over ``data_shards = M`` devices splits Φ into M vocab shards;
+    ``model_shards = P`` further splits each shard's rows into P resident
+    slices, so per-device model state is ``V·K / (M·P)`` rows × 16 B (int32
+    Φ + f32 wq + f32 wp + int32 wa — the alias path; the dense path carries
+    only the 4 B Φ plane). Doc-side state (θ pairs) stays data-parallel —
+    unchanged by P.
+
+    Rotation traffic per device per epoch: every resident token's 4-plane
+    metadata (wl, dl, uid + the z re-ship) makes M one-hop ``ppermute``s
+    around the data ring (``16·n_tokens/(M·P)·M = 16·n_tokens/P`` B), and
+    each round's θ/pair reconstruction gathers 2 planes over P−1 model-axis
+    hops (``8·(P−1)·n_tokens/P`` B) plus a K-sized ψ resync psum per round.
+    P divides the data-ring term too (each device now rotates only its
+    slice's bucket), so total link bytes stay within ~1.5× of replicated at
+    any P while model HBM shrinks ~P×.
+    """
+    M, P = int(data_shards), int(max(1, model_shards))
+    rows_dev = -(-int(vocab) // (M * P))
+    phi_b = rows_dev * n_topics * 4.0
+    tables_b = rows_dev * n_topics * 12.0
+    theta_b = (float(docs_per_shard) * 2.0 * doc_topic_cap * 4.0
+               if doc_topic_cap else float(docs_per_shard) * n_topics * 4.0)
+    tok_dev = float(n_tokens) / (M * P)        # resident tokens per device
+    stack_b = tok_dev * 4.0 * 4.0
+    rot_data = 16.0 * float(n_tokens) / P      # M hops × 4 planes × 4 B
+    rot_model = 8.0 * (P - 1) * float(n_tokens) / P
+    rot_psi = M * (P if P > 1 else 1) * n_topics * 4.0 * 2.0
+    return {
+        "data_shards": float(M), "model_shards": float(P),
+        "phi_bytes_per_device": phi_b,
+        "tables_bytes_per_device": tables_b,
+        "theta_bytes_per_device": theta_b,
+        "stack_bytes_per_device": stack_b,
+        "hbm_bytes_per_device": phi_b + tables_b + theta_b + stack_b,
+        "rotation_data_bytes_per_epoch": rot_data,
+        "rotation_model_bytes_per_epoch": rot_model,
+        "rotation_psi_bytes_per_epoch": rot_psi,
+        "rotation_bytes_per_epoch": rot_data + rot_model + rot_psi,
+    }

@@ -73,6 +73,43 @@ def pod_spec(*trailing) -> P:
     return P(POD_AXIS, *trailing)
 
 
+# --- word-sharded model parallelism (DESIGN.md §10) ------------------------
+# With n_model_shards = P > 1 the ring rotates over "data" ONLY (M = data
+# axis size) while "model" holds resident Φ row slices: phi/tables are
+# [M, P·rpm, K] with coarse shards over "data" and row slices over "model";
+# token stacks are [S, M, P·capb] with the bucket-major cap dim over "model"
+# (corpus.shard_corpus pre-buckets tokens by slice ownership).
+
+
+def data_ring_size(mesh) -> int:
+    """Ring length when the model axis holds resident Φ slices (= data size)."""
+    return int(mesh.shape[RING_AXES[0]])
+
+
+def model_axis_size(mesh) -> int:
+    return int(mesh.shape[RING_AXES[1]])
+
+
+def wshard_spec(*trailing) -> P:
+    """Φ/alias-table layout: coarse vocab shards over "data" (dim 0), row
+    slices over "model" (dim 1)."""
+    return P(RING_AXES[0], RING_AXES[1], *trailing)
+
+
+def wshard_stack_spec() -> P:
+    """[S, M, P·capb] token stacks: data shards over "data", the bucket-major
+    capacity dim over "model"."""
+    return P(RING_AXES[0], None, RING_AXES[1])
+
+
+def pod_wshard_spec(*trailing) -> P:
+    return P(POD_AXIS, RING_AXES[0], RING_AXES[1], *trailing)
+
+
+def pod_wshard_stack_spec() -> P:
+    return P(POD_AXIS, RING_AXES[0], None, RING_AXES[1])
+
+
 def replicated() -> P:
     return P()
 

@@ -23,6 +23,20 @@ VMEM capacity (~16 MB/core → rows·K ≲ 1M table entries per shard). The
 production-scale variant keeps tables in HBM and DMAs per-probe rows — the
 dispatch seam in ``ops.py`` is where that lands; CI exercises these kernels
 under ``interpret=True`` bitwise against ``ref.py``.
+
+HBM-resident tables (DESIGN.md §10, design gated on TPU): word-sharded
+model parallelism already divides rows·K per device by the slice count P, and
+``ops.mh_resample``'s by-word probe batching sorts each tile's probes so
+same-word runs share row fetches. The remaining step for shards that still
+exceed VMEM is binding ``wq``/``wp``/``wa``/``phi`` with
+``pltpu.MemorySpace.ANY`` (HBM) and double-buffering row windows via
+``pltpu.make_async_copy`` keyed on the scalar-prefetched, sorted word ids —
+a per-tile gather of the O(distinct words) rows the tile touches instead of
+the whole table. That variant changes only BlockSpecs + copy scheduling, not
+the per-token arithmetic, so the bitwise contract with ``ref.py`` (and hence
+the shard conformance suite) is unchanged; it stays behind the ``force``
+dispatch until TPU time is available because interpret mode cannot validate
+DMA overlap.
 """
 from __future__ import annotations
 

@@ -71,25 +71,46 @@ def mh_resample(
     phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
     w, d, z, uid, seed, beta,
     vocab_size: int, n_mh: int, *, force: str | None = None,
+    batch_by_word: bool | None = None,
 ):
     """n_mh alias-MH steps per token; returns z_new [T] int32.
 
     See ``ref.mh_resample_ref`` for the array contract and the proposal
     cycle. ``seed`` is the raw sweep seed — the MH salt is mixed here.
+
+    ``batch_by_word`` (default: on for the compiled kernel, off for the
+    oracles) stable-sorts the token stream by word id before dispatch and
+    scatters results back (DESIGN.md §10): same-word probes land in one
+    kernel tile, so every ``wq``/``wp``/``wa``/``phi`` row fetched from HBM
+    serves a whole run of probes instead of one. The reorder is bitwise-free
+    — every token samples independently against the round-start snapshots
+    with its own uid-keyed counter stream — which the shard conformance
+    suite asserts.
     """
     seed2 = prng.fmix32(jnp.asarray(seed, jnp.uint32)
                         ^ jnp.uint32(MH_SALT))
     alpha_sum = jnp.sum(alpha).astype(jnp.float32)
     mode = kernels_mod.kernel_mode(force)
+    if batch_by_word is None:
+        batch_by_word = mode == "pallas"
+    order = None
+    if batch_by_word:
+        order = jnp.argsort(w, stable=True).astype(jnp.int32)
+        w, d, z, uid = w[order], d[order], z[order], uid[order]
     if mode == "pallas":
-        return mh_resample_pallas(
+        out = mh_resample_pallas(
             phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
             w, d, z, uid, seed2, beta, alpha_sum, vocab_size, n_mh)
-    if mode == "interpret":
-        return mh_resample_pallas(
+    elif mode == "interpret":
+        out = mh_resample_pallas(
             phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
             w, d, z, uid, seed2, beta, alpha_sum, vocab_size, n_mh,
             interpret=True)
-    return mh_resample_ref(
-        phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
-        w, d, z, uid, seed2, jnp.float32(beta), alpha_sum, vocab_size, n_mh)
+    else:
+        out = mh_resample_ref(
+            phi, psi, doc_topic, doc_count, wq, wp, wa, alpha, ap, aa,
+            w, d, z, uid, seed2, jnp.float32(beta), alpha_sum, vocab_size,
+            n_mh)
+    if order is not None:
+        out = jnp.zeros_like(out).at[order].set(out)
+    return out

@@ -122,6 +122,40 @@ def run_cell(spec, shape: str, multi_pod: bool, skip_jaxpr: bool = False) -> dic
     return rec
 
 
+def print_shard_table(n_topics: int = 100_000, vocab: int = 1_000_000,
+                      data_shards: int = 16, out=None) -> list:
+    """Replicated-vs-word-sharded per-device HBM table at paper scale
+    (10⁵ topics × 10⁶ words; DESIGN.md §10) — the HBM win without hardware.
+
+    Token count is the paper's regime (~10⁹ queries × 4.5 tokens); it only
+    enters the rotation-traffic column, never the HBM fit."""
+    from repro.dist import analysis
+
+    n_tokens = 4.5e9
+    recs = []
+    print(f"# §10 word-sharded model parallelism @ K={n_topics:,} "
+          f"V={vocab:,} (data ring M={data_shards}):", flush=True)
+    print("#   P   phi+tables/dev      theta/dev      HBM/dev  <16GB  "
+          "rotation/dev/epoch", flush=True)
+    for p in (1, 2, 4, 8):
+        r = analysis.model_shard_report(
+            n_topics, vocab, data_shards, p, n_tokens,
+            docs_per_shard=4096, doc_topic_cap=64)
+        model = r["phi_bytes_per_device"] + r["tables_bytes_per_device"]
+        hbm = r["hbm_bytes_per_device"]
+        fits = hbm < 16e9
+        r["fits_16gb_hbm"] = bool(fits)
+        recs.append(r)
+        print(f"#  {p:2d}   {model/1e9:10.1f} GB   {r['theta_bytes_per_device']/1e9:8.3f} GB"
+              f"   {hbm/1e9:8.1f} GB   {'yes' if fits else ' no'}  "
+              f"{r['rotation_bytes_per_epoch']/1e9:12.1f} GB", flush=True)
+    if out:
+        with open(out, "a") as f:
+            for r in recs:
+                f.write(json.dumps({"shard_table": r}) + "\n")
+    return recs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -131,7 +165,14 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default=None, help="append JSONL records here")
     ap.add_argument("--skip-jaxpr", action="store_true")
+    ap.add_argument("--shard-table", action="store_true",
+                    help="print the replicated-vs-word-sharded per-device "
+                         "HBM/rotation table at paper scale (§10) and exit")
     args = ap.parse_args()
+
+    if args.shard_table:
+        print_shard_table(out=args.out)
+        return
 
     from repro.configs import all_specs, get_arch
 

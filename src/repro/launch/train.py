@@ -53,6 +53,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="double-buffer segment loads on a background thread")
     ap.add_argument("--data-shards", type=int, default=1)
     ap.add_argument("--model-shards", type=int, default=1)
+    ap.add_argument("--sharded-model", action="store_true",
+                    help="word-sharded model parallelism (DESIGN.md §10): "
+                         "the model axis holds resident V/P slices of "
+                         "Φ + alias tables instead of extending the "
+                         "flattened ring — breaks the replicated-Φ HBM "
+                         "ceiling; bitwise-identical to the replicated "
+                         "layout")
     ap.add_argument("--pods", type=int, default=1)
     ap.add_argument("--agg-every", type=int, default=3)
     ap.add_argument("--alpha-opt-from", type=int, default=10)
@@ -94,6 +101,8 @@ def config_from_args(args) -> "TrainerConfig":
         prefetch=args.prefetch,
         n_pods=args.pods, data_shards=args.data_shards,
         model_shards=args.model_shards,
+        n_model_shards=args.model_shards if getattr(args, "sharded_model",
+                                                    False) else 1,
         n_epochs=args.epochs, agg_every=args.agg_every,
         alpha_opt_from=args.alpha_opt_from, package_len=args.package_len,
         sampler=args.sampler, n_mh=args.n_mh,

@@ -157,7 +157,9 @@ class Checkpointing(TrainerCallback):
         n = trainer.n_segments
         step = epoch * n + segments_done
         self.manager.save(step, trainer.checkpoint_tree(),
-                          meta={"epoch": epoch, "segment": segments_done},
+                          meta={"epoch": epoch, "segment": segments_done,
+                                "n_model_shards":
+                                    trainer.config.n_model_shards},
                           pod=self.pod)
         return self.manager.step_dir(step, self.pod)
 

@@ -30,6 +30,12 @@ class TrainerConfig:
     n_pods: int = 1
     data_shards: int = 1
     model_shards: int = 1
+    n_model_shards: int = 1        # word-sharded model parallelism (§10):
+                                   # > 1 makes "model" a genuine vocabulary-
+                                   # slice axis (Φ/tables split into V/P row
+                                   # slices, ring over "data" only) instead
+                                   # of part of the flattened ring; must then
+                                   # equal model_shards
     # ---------------------------------------------------------- sampler ----
     sampler: str = "dense"         # inner-loop family (DESIGN.md §9):
                                    # "dense" = exact [T, K] plane scan,
@@ -93,6 +99,19 @@ class TrainerConfig:
                 f"'interpret' or 'ref', got {self.kernel_mode!r}")
         if self.resume and self.ckpt_dir is None:
             raise ValueError("TrainerConfig.resume requires ckpt_dir")
+        if self.n_model_shards < 1:
+            raise ValueError("TrainerConfig.n_model_shards must be >= 1")
+        if self.n_model_shards > 1:
+            if self.model_shards != self.n_model_shards:
+                raise ValueError(
+                    "word-sharded sessions put the model slices on the "
+                    f"'model' mesh axis: model_shards ({self.model_shards}) "
+                    f"must equal n_model_shards ({self.n_model_shards})")
+            if self.package_len != 0:
+                raise ValueError(
+                    "n_model_shards > 1 samples one package per round "
+                    "(bitwise conformance with the replicated path); "
+                    "package_len must stay 0 (= cap)")
         if self.n_pods > 1 and (self.n_segments > 1 or self.corpus_dir):
             raise ValueError(
                 "segment streaming is single-configuration: n_segments > 1 "
@@ -102,12 +121,20 @@ class TrainerConfig:
     # ------------------------------------------------------ derived --------
     @property
     def ring_size(self) -> int:
-        """M — devices per pod = data_shards × model_shards (ring length)."""
+        """M — ring length (= coarse vocab shards = rotation rounds).
+
+        The flattened ring spans data_shards × model_shards devices; under
+        word-sharded model parallelism (n_model_shards > 1) only the "data"
+        axis rotates — the model axis holds resident Φ slices (§10)."""
+        if self.n_model_shards > 1:
+            return self.data_shards
         return self.data_shards * self.model_shards
 
     @property
     def n_devices(self) -> int:
-        return self.n_pods * self.ring_size
+        # always the full mesh: under n_model_shards > 1 the ring shrinks to
+        # data_shards but the model axis still occupies real devices
+        return self.n_pods * self.data_shards * self.model_shards
 
     @property
     def multi_pod(self) -> bool:

@@ -116,7 +116,8 @@ class Trainer:
             elif self.corpus is not None:
                 self.source = data_sources.InMemorySource(
                     self.corpus, cfg.n_segments, M, M, K,
-                    seed=cfg.shard_seed)
+                    seed=cfg.shard_seed,
+                    n_model_shards=cfg.n_model_shards)
             else:
                 # the synthetic fallback is an EXPLICIT, logged source — a
                 # misconfigured corpus_dir raises in open_segments above
@@ -126,7 +127,8 @@ class Trainer:
                     true_topics=cfg.true_topics,
                     doc_len_mean=cfg.doc_len_mean, gen_seed=cfg.seed,
                     n_segments=cfg.n_segments, n_data_shards=M,
-                    n_vocab_shards=M, n_topics=K, seed=cfg.shard_seed)
+                    n_vocab_shards=M, n_topics=K, seed=cfg.shard_seed,
+                    n_model_shards=cfg.n_model_shards)
         src = self.source
         self.corpus = src.corpus
         if src.n_data_shards != M or src.n_vocab_shards != M:
@@ -137,6 +139,12 @@ class Trainer:
         if src.n_topics != K:
             raise ValueError(f"source was sharded for K={src.n_topics}, "
                              f"session has n_topics={K}")
+        if getattr(src, "n_model_shards", 1) != cfg.n_model_shards:
+            raise ValueError(
+                f"source was bucketed for n_model_shards="
+                f"{getattr(src, 'n_model_shards', 1)} but the session has "
+                f"n_model_shards={cfg.n_model_shards} (re-save the segments "
+                f"or match the config)")
         if cfg.corpus_dir and cfg.n_segments not in (1, src.n_segments):
             raise ValueError(
                 f"config n_segments={cfg.n_segments} but {cfg.corpus_dir!r} "
@@ -178,7 +186,8 @@ class Trainer:
                 ("pod", "data", "model"),
                 axis_types=(jax.sharding.AxisType.Auto,) * 3)
             self._scs = corpus_mod.shard_corpus_pods(
-                self.corpus, cfg.n_pods, M, M, K, seed=cfg.shard_seed)
+                self.corpus, cfg.n_pods, M, M, K, seed=cfg.shard_seed,
+                n_model_shards=cfg.n_model_shards)
             self.sc0 = self._scs[0]
             self.state = hierarchy.init_pod_state(self._scs, K)
         elif self._streaming:
@@ -213,7 +222,8 @@ class Trainer:
             rows_per_shard=self.sc0.rows_per_shard,
             docs_per_shard=self.sc0.docs_per_shard,
             cap=cap, package_len=cfg.package_len or cap, n_rounds=M,
-            sampler=cfg.sampler, n_mh=cfg.n_mh, doc_topic_cap=doc_cap)
+            sampler=cfg.sampler, n_mh=cfg.n_mh, doc_topic_cap=doc_cap,
+            model_shards=cfg.n_model_shards)
         elastic = any(isinstance(cb, ElasticLiveness) for cb in self.callbacks)
         if cfg.multi_pod:
             self._epoch_fn = hierarchy.make_pod_ring_epoch(self.mesh,
@@ -582,6 +592,18 @@ class Trainer:
     def load_checkpoint(self, tree: dict, meta: dict) -> None:
         import jax.numpy as jnp
 
+        ck_p = int(meta.get("n_model_shards", 1))
+        if ck_p != self.config.n_model_shards:
+            # the checkpoint was written under a different word-shard layout:
+            # permute Φ/tables/refs rows through the coarse vocabulary ids and
+            # rebuild the stacks from this session's sharding (§10)
+            from repro.training import reshard
+
+            scs = self._scs if self.config.multi_pod else [self.sc0]
+            tree = reshard.reshard_checkpoint(
+                tree, ck_p, self.config.n_model_shards, scs)
+            self.log(f"[ckpt] resharded checkpoint n_model_shards={ck_p} -> "
+                     f"{self.config.n_model_shards}")
         self.state = tuple(jnp.asarray(x) for x in tree["state"])
         self.alpha = jnp.asarray(tree["alpha"])
         if "z" in tree:
