@@ -8,6 +8,7 @@
 #   scripts/tier1.sh data     # data-layer streaming subset (-m data)
 #   scripts/tier1.sh kernels  # Pallas kernel subset, interpret-mode (-m kernels)
 #   scripts/tier1.sh shard    # word-sharded model-parallel conformance (-m shard)
+#   scripts/tier1.sh preflight # static-analysis launch gate (-m preflight)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 case "${1:-}" in
@@ -26,5 +27,8 @@ case "${1:-}" in
     shard)
         shift
         exec python -m pytest -x -q -m shard "$@";;
+    preflight)
+        shift
+        exec python -m pytest -x -q -m preflight "$@";;
 esac
 exec python -m pytest -x -q "$@"

@@ -1,0 +1,29 @@
+"""``repro.analysis`` — the static verification layer (DESIGN.md §11).
+
+Four launch-gate passes over a session's *abstract* form (jaxpr, compiled
+HLO text, BlockSpecs, AST) — no training state is ever allocated:
+
+* :mod:`repro.analysis.shardcheck` — the §10 sharding contract (rotation
+  ppermute counts, Φ-replication all-gathers, collective byte budgets);
+* :mod:`repro.analysis.vmem` — static per-kernel VMEM plans from the
+  actual Pallas BlockSpecs, against the ~16 MB/core budget;
+* :mod:`repro.analysis.determinism` — the bitwise kill→resume jaxpr audit
+  (float scatter-adds, jax.random, host callbacks);
+* :mod:`repro.analysis.repolint` — AST-enforced codebase invariants
+  (kernel oracles, frozen configs, confined backend probes).
+
+Entry points: ``python -m repro.analysis.preflight``,
+``launch/train.py --preflight``, ``launch/dryrun.py --verify``.
+
+Only :mod:`.report` and :mod:`.repolint` are imported eagerly — they are
+jax-free, so ``repro.analysis`` can be imported before ``XLA_FLAGS`` is
+set (the preflight CLI relies on that ordering).
+"""
+from repro.analysis.report import (ERROR, INFO, WARNING, Finding, PassResult,
+                                   PreflightReport, error, info,
+                                   merge_findings, warning)
+
+__all__ = [
+    "ERROR", "INFO", "WARNING", "Finding", "PassResult", "PreflightReport",
+    "error", "info", "merge_findings", "warning",
+]

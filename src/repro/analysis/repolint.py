@@ -1,0 +1,324 @@
+"""Repo lint pass: AST-enforced codebase invariants.
+
+These are the conventions the other three passes (and the test suite's
+bitwise contracts) quietly depend on. Each is cheap to check with ``ast``
+and expensive to discover broken at runtime:
+
+* **Every kernel ships its oracle.** ``kernels/<name>/kernel.py`` must have
+  a sibling ``ref.py`` (the pure-jnp reference the Pallas path is bitwise-
+  tested against) and a ``tests/test_kernels_<name>.py`` carrying the
+  ``kernels`` pytest marker — the `-m kernels` tier-1 lane is the
+  conformance suite; an unregistered kernel is an unverified kernel.
+
+* **Configs stay frozen dataclasses.** ``*Config`` classes are hashed,
+  compared and captured by jit closures across the codebase; a mutable
+  config silently changes under a compiled function's feet. Any
+  ``@dataclasses.dataclass`` class named ``*Config`` must pass
+  ``frozen=True``.
+
+* **Backend probes stay confined.** ``jax.default_backend()`` forces
+  backend initialization and is trace-unsafe inside jitted code; the one
+  sanctioned call site is ``repro.kernels.on_tpu`` (behind ``kernel_mode``).
+  Every other occurrence is a dispatch decision that belongs in
+  ``kernel_mode(force=...)``.
+
+Advisory (warnings, never fail the run): module-level imports never
+referenced in the file, and bare ``except:`` handlers. These overlap what
+``ruff`` flags in CI; the AST pass keeps the invariant checkable in
+containers where ruff is not installed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.report import Finding, error, info, warning
+
+# the one sanctioned jax.default_backend() call site (repo-relative)
+_BACKEND_ALLOWED = ("src/repro/kernels/__init__.py",)
+
+
+def find_repo_root(start: Optional[str] = None) -> str:
+    """Walk up from ``start`` (default: this package) to the directory
+    holding ``pyproject.toml``."""
+    here = os.path.abspath(start or os.path.dirname(__file__))
+    d = here
+    while True:
+        if os.path.exists(os.path.join(d, "pyproject.toml")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return here
+        d = parent
+
+
+def _py_files(root: str, subdirs: Tuple[str, ...]) -> Iterator[str]:
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def _parse(path: str) -> Optional[ast.AST]:
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            return ast.parse(fh.read(), filename=path)
+    except (OSError, SyntaxError):
+        return None
+
+
+def _rel(root: str, path: str) -> str:
+    return os.path.relpath(path, root)
+
+
+# ----------------------------------------------------- kernel/oracle pairs --
+
+
+def check_kernel_oracles(root: str) -> List[Finding]:
+    """kernels/<name>/kernel.py ⇒ sibling ref.py + marked bitwise test."""
+    findings: List[Finding] = []
+    kdir = os.path.join(root, "src", "repro", "kernels")
+    if not os.path.isdir(kdir):
+        return findings
+    names: List[str] = []
+    for name in sorted(os.listdir(kdir)):
+        pkg = os.path.join(kdir, name)
+        if not os.path.isdir(pkg) or \
+                not os.path.exists(os.path.join(pkg, "kernel.py")):
+            continue
+        names.append(name)
+        if not os.path.exists(os.path.join(pkg, "ref.py")):
+            findings.append(error(
+                "lint.kernel-oracle",
+                f"kernels/{name}/kernel.py has no ref.py oracle — every "
+                "Pallas kernel needs the pure-jnp reference its bitwise "
+                "conformance test compares against (see kernels/gibbs/"
+                "ref.py for the pattern)",
+                location=f"src/repro/kernels/{name}"))
+        test_path = os.path.join(root, "tests", f"test_kernels_{name}.py")
+        if not os.path.exists(test_path):
+            findings.append(error(
+                "lint.kernel-test",
+                f"kernels/{name} has no tests/test_kernels_{name}.py — "
+                "the `-m kernels` tier-1 lane is the conformance suite; "
+                "add a bitwise kernel-vs-ref test carrying "
+                "`pytestmark = pytest.mark.kernels`",
+                location=f"src/repro/kernels/{name}"))
+        else:
+            tree = _parse(test_path)
+            marked = tree is not None and "kernels" in _pytest_markers(tree)
+            if not marked:
+                findings.append(error(
+                    "lint.kernel-test",
+                    f"tests/test_kernels_{name}.py exists but does not "
+                    "carry the `kernels` pytest marker — it would not run "
+                    "in the `-m kernels` tier-1 lane",
+                    location=f"tests/test_kernels_{name}.py"))
+    if not any(f.severity == "error" for f in findings):
+        findings.append(info(
+            "lint.kernel-oracle",
+            f"all {len(names)} kernels ({', '.join(names)}) have ref.py "
+            "oracles and marked `-m kernels` bitwise tests",
+            location="src/repro/kernels"))
+    return findings
+
+
+def _pytest_markers(tree: ast.AST) -> Set[str]:
+    """Marker names from ``pytestmark = pytest.mark.X`` / list-of-marks /
+    ``@pytest.mark.X`` decorators."""
+    marks: Set[str] = set()
+
+    def mark_name(node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Call):
+            node = node.func
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Attribute) and \
+                node.value.attr == "mark":
+            return node.attr
+        return None
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            if any(isinstance(t, ast.Name) and t.id == "pytestmark"
+                   for t in node.targets):
+                vals = node.value.elts \
+                    if isinstance(node.value, (ast.List, ast.Tuple)) \
+                    else [node.value]
+                for v in vals:
+                    m = mark_name(v)
+                    if m:
+                        marks.add(m)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            for dec in node.decorator_list:
+                m = mark_name(dec)
+                if m:
+                    marks.add(m)
+    return marks
+
+
+# --------------------------------------------------------- frozen configs ---
+
+
+def _dataclass_frozen(dec: ast.AST) -> Optional[bool]:
+    """``frozen=`` value if ``dec`` is a dataclass decorator, else None."""
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    name = target.attr if isinstance(target, ast.Attribute) else \
+        target.id if isinstance(target, ast.Name) else ""
+    if name != "dataclass":
+        return None
+    if isinstance(dec, ast.Call):
+        for kw in dec.keywords:
+            if kw.arg == "frozen":
+                return bool(getattr(kw.value, "value", False))
+    return False
+
+
+def check_frozen_configs(root: str,
+                         subdirs: Tuple[str, ...] = ("src",)
+                         ) -> List[Finding]:
+    findings: List[Finding] = []
+    n_configs = 0
+    for path in _py_files(root, subdirs):
+        tree = _parse(path)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef) or \
+                    not node.name.endswith("Config"):
+                continue
+            verdicts = [v for v in (_dataclass_frozen(d)
+                                    for d in node.decorator_list)
+                        if v is not None]
+            if not verdicts:
+                continue               # not a dataclass — out of scope
+            n_configs += 1
+            if not any(verdicts):
+                findings.append(error(
+                    "lint.frozen-config",
+                    f"{node.name} is a mutable dataclass — *Config classes "
+                    "are hashed and captured by jit closures; declare "
+                    "@dataclasses.dataclass(frozen=True) and use "
+                    "dataclasses.replace for variants",
+                    location=f"{_rel(root, path)}:{node.lineno}",
+                    cls=node.name))
+    if not findings:
+        findings.append(info(
+            "lint.frozen-config",
+            f"all {n_configs} *Config dataclasses are frozen",
+            location="src"))
+    return findings
+
+
+# --------------------------------------------------- backend-probe bounds ---
+
+
+def check_backend_probes(root: str,
+                         subdirs: Tuple[str, ...] = ("src",)
+                         ) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in _py_files(root, subdirs):
+        rel = _rel(root, path).replace(os.sep, "/")
+        if rel in _BACKEND_ALLOWED:
+            continue
+        tree = _parse(path)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr == "default_backend":
+                findings.append(error(
+                    "lint.backend-probe",
+                    "jax.default_backend() outside repro.kernels.on_tpu — "
+                    "per-call backend probes force backend init and bypass "
+                    "the kernel_mode() dispatch contract; route the "
+                    "decision through kernel_mode(force=...) instead",
+                    location=f"{rel}:{node.lineno}"))
+    if not findings:
+        findings.append(info(
+            "lint.backend-probe",
+            "jax.default_backend() confined to repro.kernels.on_tpu",
+            location="src"))
+    return findings
+
+
+# ------------------------------------------------------------- advisories ---
+
+
+def _used_names(tree: ast.AST) -> Set[str]:
+    used: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            base = node
+            while isinstance(base, ast.Attribute):
+                base = base.value
+            if isinstance(base, ast.Name):
+                used.add(base.id)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            # string annotations / __all__ entries / doctest refs
+            used.update(w for w in
+                        node.value.replace(".", " ").replace("[", " ")
+                        .replace("]", " ").split())
+    return used
+
+
+def check_advisories(root: str,
+                     subdirs: Tuple[str, ...] = ("src", "tests")
+                     ) -> List[Finding]:
+    """Warnings only: unused module-level imports and bare excepts."""
+    findings: List[Finding] = []
+    for path in _py_files(root, subdirs):
+        if os.path.basename(path) == "__init__.py":
+            continue                   # re-export surface: imports ARE the API
+        tree = _parse(path)
+        if tree is None:
+            continue
+        used = _used_names(tree)
+        for node in tree.body:         # module level only
+            if isinstance(node, ast.Import):
+                names = [(a.asname or a.name.split(".")[0], a.name)
+                         for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                names = [(a.asname or a.name, a.name) for a in node.names
+                         if a.name != "*"]
+            else:
+                continue
+            for bound, orig in names:
+                if bound not in used and not bound.startswith("_"):
+                    findings.append(warning(
+                        "lint.unused-import",
+                        f"'{orig}' imported but unused",
+                        location=f"{_rel(root, path)}:{node.lineno}"))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ExceptHandler) and node.type is None:
+                findings.append(warning(
+                    "lint.bare-except",
+                    "bare `except:` catches SystemExit/KeyboardInterrupt — "
+                    "name the exceptions (or `except Exception:` at worst)",
+                    location=f"{_rel(root, path)}:{node.lineno}"))
+    return findings
+
+
+# ------------------------------------------------------------------ entry ---
+
+
+def lint_repo(root: Optional[str] = None,
+              advisories: bool = True) -> List[Finding]:
+    """All repo-lint findings for the tree at ``root`` (auto-detected)."""
+    root = root or find_repo_root()
+    findings = (check_kernel_oracles(root)
+                + check_frozen_configs(root)
+                + check_backend_probes(root))
+    if advisories:
+        findings += check_advisories(root)
+    return findings

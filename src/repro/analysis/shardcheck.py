@@ -1,0 +1,241 @@
+"""Sharding contract checker: the declared §10 layout, statically verified.
+
+Word-sharded model parallelism (DESIGN.md §10) is a *contract*, not a hint:
+Φ and the alias tables live as resident V/(M·P) row slices, pre-bucketed
+token sub-blocks rotate the data ring, and the only collectives an epoch is
+allowed are the rotation ``ppermute``s, the ψ-resync ``psum``s and the
+epoch-end reductions. Nothing in jax enforces that — a refactor that drops
+a ``wshard_spec`` or gathers Φ "just to simplify indexing" still compiles,
+still runs, and silently burns the P× HBM win plus an all-gather per round.
+At the paper's scale (10⁵ topics × 10⁶ words) that is the difference between
+13 GB/device and an OOM three hours in.
+
+This pass traces the epoch function abstractly (jaxpr) and optionally
+compiles it (HLO), then checks three things against analytics the repo
+already trusts (``repro.dist.analysis``, pinned by tests/test_shard_model):
+
+1. **ppermute count** equals the §10 rotation formula
+   ``M·4 + M·(P−1)·2`` — M rounds × (3 stack planes + z re-ship) data hops
+   plus M rounds × (P−1) model hops × 2 gathered planes. Too few means the
+   ring is not rotating (stale sub-blocks); too many means duplicated
+   traffic.
+
+2. **No Φ-shaped all-gather under P>1.** Any ``all_gather`` whose operand
+   looks like a Φ/table row slice ([..., rows/P·?, K]) reassembles the
+   model-sharded state — exactly the accidental replication the layout
+   exists to prevent.
+
+3. **Collective payload bytes within budget.** Compiled-HLO bytes
+   (``collective_bytes`` with scan-aware trip folding) must stay within
+   ``slack ×`` the ``model_shard_report`` rotation analytics evaluated at
+   the *padded* token count (S·M·cap — the static shapes actually shipped).
+   The analytic rotation terms reproduce the folded HLO bytes exactly on
+   the pinned geometry, so slack only absorbs compiler-introduced extras.
+
+Everything runs on ``ShapeDtypeStruct``s — no training state is allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.report import Finding, error, info
+from repro.dist.analysis import (Cost, _as_jaxpr, _sub_jaxprs,
+                                 collective_bytes, hlo_collective_counts,
+                                 model_shard_report, trace_cost)
+
+DEFAULT_SLACK = 1.5
+
+
+def expected_ppermutes(n_rounds: int, model_shards: int) -> int:
+    """§10: M rounds × 4 data-hop planes + M × (P−1) model hops × 2 planes.
+    P = 1 degenerates to the plain ring's M·4."""
+    M, P = int(n_rounds), int(max(1, model_shards))
+    return M * 4 + M * (P - 1) * 2
+
+
+# ------------------------------------------------------- Φ all-gather walk --
+
+
+def _walk_allgathers(jaxpr: Any, path: str,
+                     hits: List[Tuple[str, Tuple[int, ...], str]]) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "all_gather":
+            aval = getattr(eqn.invars[0], "aval", None)
+            shape = tuple(getattr(aval, "shape", ()) or ())
+            dtype = str(getattr(aval, "dtype", "?"))
+            hits.append((path or "<jaxpr>", shape, dtype))
+        if name == "cond":
+            for i, b in enumerate(eqn.params.get("branches", ())):
+                sub = _as_jaxpr(b)
+                if sub is not None:
+                    _walk_allgathers(sub, f"{path}/{name}[{i}]", hits)
+            continue
+        for sub in _sub_jaxprs(eqn.params):
+            _walk_allgathers(sub, f"{path}/{name}", hits)
+
+
+def find_phi_allgathers(closed_jaxpr: Any, n_topics: int,
+                        min_rows: int) -> List[Finding]:
+    """Findings for every ``all_gather`` whose operand is Φ/table-shaped:
+    trailing dim K and ≥ ``min_rows`` rows — i.e. a resident model slice
+    being reassembled. Small gathers (scalars, [K] rows) are left alone."""
+    jaxpr = _as_jaxpr(closed_jaxpr) or closed_jaxpr
+    hits: List[Tuple[str, Tuple[int, ...], str]] = []
+    _walk_allgathers(jaxpr, "", hits)
+    findings: List[Finding] = []
+    for path, shape, dtype in hits:
+        if len(shape) >= 2 and shape[-1] == n_topics \
+                and shape[-2] >= min_rows:
+            findings.append(error(
+                "sharding.phi-all-gather",
+                f"all_gather of a Φ/table-shaped operand {dtype}"
+                f"{list(shape)} under n_model_shards>1 — this reassembles "
+                "the resident model slice and reintroduces the replicated-Φ "
+                "HBM ceiling (§10); index the local slice and rotate "
+                "metadata instead (core/distributed.build_epoch_body)",
+                location=path, shape=list(shape), dtype=dtype))
+    return findings
+
+
+# ------------------------------------------------------------------ budget --
+
+
+def collective_budget(n_topics: int, vocab_rows: int, n_rounds: int,
+                      model_shards: int, padded_tokens: int,
+                      slack: float = DEFAULT_SLACK) -> Dict[str, float]:
+    """Per-epoch collective byte ceilings from the §10 analytics.
+
+    ``padded_tokens`` is the static token count actually shipped
+    (S·M·cap); on the pinned geometry the analytic rotation terms equal
+    the trip-folded HLO bytes exactly, so ``slack`` covers only compiler
+    extras. all-gather's ceiling is one Φ slice: anything that big IS the
+    replication the layout forbids (threshold, not an allowance).
+    """
+    rep = model_shard_report(n_topics, vocab_rows, n_rounds, model_shards,
+                             float(padded_tokens))
+    permute = (rep["rotation_data_bytes_per_epoch"]
+               + rep["rotation_model_bytes_per_epoch"])
+    return {
+        "collective-permute": slack * permute,
+        "all-reduce": slack * rep["rotation_psi_bytes_per_epoch"],
+        "all-gather": rep["phi_bytes_per_device"],
+        "all-to-all": rep["phi_bytes_per_device"],
+    }
+
+
+# ------------------------------------------------------------------ check ---
+
+
+@dataclasses.dataclass
+class ShardingAudit:
+    """Everything the pass measured (the --json payload)."""
+
+    n_rounds: int
+    model_shards: int
+    ppermute_expected: int
+    ppermute_traced: int
+    collectives_traced: Dict[str, float]
+    budget_bytes: Dict[str, float]
+    folded_bytes: Dict[str, int]
+    findings: List[Finding]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "n_rounds": self.n_rounds,
+            "model_shards": self.model_shards,
+            "ppermute_expected": self.ppermute_expected,
+            "ppermute_traced": self.ppermute_traced,
+            "collectives_traced": dict(self.collectives_traced),
+            "budget_bytes": {k: float(v)
+                             for k, v in self.budget_bytes.items()},
+            "folded_bytes": dict(self.folded_bytes),
+        }
+
+
+def check_epoch(epoch_fn: Any, abstract_args: Sequence[Any], *,
+                n_topics: int, rows_per_shard: int, n_rounds: int,
+                model_shards: int, padded_tokens: int,
+                hlo_text: Optional[str] = None,
+                slack: float = DEFAULT_SLACK) -> ShardingAudit:
+    """Audit one epoch function against the §10 contract.
+
+    ``epoch_fn`` is the shard_map'd (or pod-batched) epoch; ``abstract_args``
+    may be ShapeDtypeStructs. Pass the compiled module text as ``hlo_text``
+    to include the byte-budget check (compilation is the caller's choice —
+    it dominates preflight wall time).
+    """
+    import jax
+
+    M, P = int(n_rounds), int(max(1, model_shards))
+    findings: List[Finding] = []
+
+    closed = jax.make_jaxpr(epoch_fn)(*abstract_args)
+    cost: Cost = trace_cost(epoch_fn, *abstract_args)
+
+    # 1. rotation count -----------------------------------------------------
+    expect = expected_ppermutes(M, P)
+    got = int(cost.collectives.get("ppermute", 0))
+    if got != expect:
+        findings.append(error(
+            "sharding.ppermute-count",
+            f"epoch traces {got} ppermutes, §10 formula requires "
+            f"M·4 + M·(P−1)·2 = {expect} (M={M}, P={P}) — "
+            + ("the ring is under-rotating; stale sub-blocks break the "
+               "per-diagonal serialization" if got < expect else
+               "duplicated rotation traffic; a stack plane is being "
+               "shipped more than once per hop"),
+            location="epoch", expected=expect, traced=got))
+    else:
+        findings.append(info(
+            "sharding.ppermute-count",
+            f"rotation schedule verified: {got} ppermutes per epoch "
+            f"(= M·4 + M·(P−1)·2, M={M}, P={P})",
+            location="epoch", expected=expect, traced=got))
+
+    # 2. Φ replication ------------------------------------------------------
+    if P > 1:
+        min_rows = max(1, rows_per_shard // P)
+        phi_ag = find_phi_allgathers(closed, n_topics, min_rows)
+        findings.extend(phi_ag)
+        if not phi_ag:
+            findings.append(info(
+                "sharding.phi-all-gather",
+                "no Φ/table-shaped all_gather in the epoch jaxpr — "
+                "resident slices stay resident",
+                location="epoch"))
+
+    # 3. compiled byte budget ----------------------------------------------
+    budget = collective_budget(n_topics, M * rows_per_shard, M, P,
+                               padded_tokens, slack=slack)
+    folded: Dict[str, int] = {}
+    if hlo_text is not None:
+        counts = hlo_collective_counts(cost)
+        folded = collective_bytes(hlo_text, while_trips=counts)
+        for op, limit in budget.items():
+            got_b = folded.get(op, 0)
+            if got_b > limit:
+                findings.append(error(
+                    "sharding.collective-bytes",
+                    f"compiled HLO moves {got_b:,} B/epoch of {op}, over "
+                    f"the declared budget {limit:,.0f} B (analytics × "
+                    f"slack {slack}) — the layout is leaking traffic the "
+                    "§10 accounting does not predict; diff the HLO "
+                    "collectives against launch/dryrun.py --json",
+                    location=op, op=op, bytes=got_b, budget=float(limit)))
+        if not any(f.check == "sharding.collective-bytes" for f in findings):
+            findings.append(info(
+                "sharding.collective-bytes",
+                "compiled collective traffic within the §10 budget: "
+                + ", ".join(f"{op}={folded.get(op, 0):,}B"
+                            f"/{budget[op]:,.0f}B"
+                            for op in sorted(budget) if folded.get(op)),
+                location="hlo"))
+
+    return ShardingAudit(
+        n_rounds=M, model_shards=P, ppermute_expected=expect,
+        ppermute_traced=got,
+        collectives_traced={k: float(v)
+                            for k, v in cost.collectives.items()},
+        budget_bytes=budget, folded_bytes=folded, findings=findings)

@@ -22,7 +22,7 @@ from __future__ import annotations
 import os
 import re
 import shutil
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 from repro.checkpoint import io
 

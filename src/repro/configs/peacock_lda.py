@@ -18,9 +18,7 @@ from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec, Cell, sds

@@ -12,7 +12,6 @@ import functools
 from typing import Tuple
 
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec, RECSYS_SHAPES, build_recsys_cell, sds

@@ -13,7 +13,6 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.lda import phi_hat
 from repro.core.rtlda import RTLDAModel, rtlda_infer_batch
 
 

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict
+from typing import (Any, Callable, Dict, Iterator, List, Mapping, Optional,
+                    Set, Tuple, Union)
 
 import jax
 
@@ -36,11 +37,11 @@ _COLLECTIVE_PRIMS = {
 }
 
 
-def _is_jaxpr(x) -> bool:
+def _is_jaxpr(x: Any) -> bool:
     return hasattr(x, "eqns") and hasattr(x, "invars")
 
 
-def _as_jaxpr(x):
+def _as_jaxpr(x: Any) -> Optional[Any]:
     """Jaxpr from either an open Jaxpr or a ClosedJaxpr."""
     if _is_jaxpr(x):
         return x
@@ -48,7 +49,7 @@ def _as_jaxpr(x):
     return inner if inner is not None and _is_jaxpr(inner) else None
 
 
-def _sub_jaxprs(params):
+def _sub_jaxprs(params: Mapping[str, Any]) -> Iterator[Any]:
     for v in params.values():
         j = _as_jaxpr(v)
         if j is not None:
@@ -60,7 +61,7 @@ def _sub_jaxprs(params):
                     yield j
 
 
-def _dot_flops(eqn) -> float:
+def _dot_flops(eqn: Any) -> float:
     (lc, rc), (lb, _rb) = eqn.params["dimension_numbers"]
     lhs = eqn.invars[0].aval.shape
     rhs = eqn.invars[1].aval.shape
@@ -81,7 +82,7 @@ def _dot_flops(eqn) -> float:
     return 2.0 * batch * m * n * contract
 
 
-def _eqn_bytes(eqn) -> float:
+def _eqn_bytes(eqn: Any) -> float:
     total = 0.0
     for v in list(eqn.invars) + list(eqn.outvars):
         aval = getattr(v, "aval", None)
@@ -93,7 +94,7 @@ def _eqn_bytes(eqn) -> float:
     return total
 
 
-def _walk(jaxpr, mult: float, cost: Cost) -> None:
+def _walk(jaxpr: Any, mult: float, cost: Cost) -> None:
     for eqn in jaxpr.eqns:
         name = eqn.primitive.name
         if name == "scan":
@@ -102,7 +103,7 @@ def _walk(jaxpr, mult: float, cost: Cost) -> None:
             continue
         if name == "cond":
             # static trip unknown: charge the most expensive branch
-            branch_costs = []
+            branch_costs: List[Cost] = []
             for b in eqn.params.get("branches", ()):
                 sub = Cost()
                 _walk(_as_jaxpr(b), mult, sub)
@@ -126,7 +127,7 @@ def _walk(jaxpr, mult: float, cost: Cost) -> None:
         cost.bytes += mult * _eqn_bytes(eqn)
 
 
-def trace_cost(f, *args, **kwargs) -> Cost:
+def trace_cost(f: Callable[..., Any], *args: Any, **kwargs: Any) -> Cost:
     """Scan-aware flops/bytes/collective counts of ``f(*args)`` (abstract
     eval only — args may be ShapeDtypeStructs; nothing is executed)."""
     closed = jax.make_jaxpr(f)(*args, **kwargs)
@@ -176,7 +177,7 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES[dtype]
 
 
-def _iter_collectives(text: str):
+def _iter_collectives(text: str) -> Iterator[Tuple[str, int]]:
     """Yield ``(op_kind, payload_bytes)`` for every collective in ``text``
     (plain + tuple-shaped variadic forms, with the -start tuple rule)."""
     for m in _COLLECTIVE_RE.finditer(text):
@@ -204,7 +205,7 @@ _NAME_RE = re.compile(r"%?([\w.\-]+)")
 def _computation_blocks(hlo_text: str) -> Dict[str, str]:
     """Split HLO module text into per-computation blocks. Text outside any
     computation (raw op snippets, as the tests feed) lands under ``""``."""
-    blocks: Dict[str, list] = {"": []}
+    blocks: Dict[str, List[str]] = {"": []}
     name = ""
     for line in hlo_text.splitlines():
         m = _COMP_HEADER_RE.match(line)
@@ -216,12 +217,12 @@ def _computation_blocks(hlo_text: str) -> Dict[str, str]:
     return {k: "\n".join(v) for k, v in blocks.items()}
 
 
-def _while_computations(blocks: Dict[str, str]) -> set:
+def _while_computations(blocks: Dict[str, str]) -> Set[str]:
     """Computations executed per while-loop iteration: every ``body=`` /
     ``condition=`` target of a ``while(...)`` op, plus everything those
     computations call (fusions, to_apply reducers, nested whiles)."""
-    edges: Dict[str, set] = {}
-    roots: set = set()
+    edges: Dict[str, Set[str]] = {}
+    roots: Set[str] = set()
     for name, text in blocks.items():
         callees = set(_CALLEE_RE.findall(text))
         for m in _BRANCHES_RE.finditer(text):
@@ -230,7 +231,7 @@ def _while_computations(blocks: Dict[str, str]) -> set:
         for line in text.splitlines():
             if " while(" in line or line.lstrip().startswith("while("):
                 roots.update(_CALLEE_RE.findall(line))
-    seen: set = set()
+    seen: Set[str] = set()
     todo = list(roots)
     while todo:
         n = todo.pop()
@@ -260,7 +261,10 @@ def hlo_collective_counts(cost: Cost) -> Dict[str, float]:
     return out
 
 
-def collective_bytes(hlo_text: str, while_trips=None) -> Dict[str, int]:
+def collective_bytes(
+    hlo_text: str,
+    while_trips: Union[None, float, Mapping[str, float]] = None,
+) -> Dict[str, int]:
     """Payload bytes per collective op kind in compiled HLO text.
 
     ``-start`` forms count once (their ``-done`` halves carry no shape here).
@@ -305,7 +309,7 @@ def collective_bytes(hlo_text: str, while_trips=None) -> Dict[str, int]:
     result: Dict[str, int] = {}
     for op in set(out_bytes) | set(loop_bytes):
         trips = 1.0
-        if isinstance(while_trips, dict):
+        if isinstance(while_trips, Mapping):
             expected = while_trips.get(op)
             if expected is not None and loop_n.get(op, 0):
                 trips = max(1.0, (expected - out_n.get(op, 0))

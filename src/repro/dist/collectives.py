@@ -20,6 +20,8 @@ Both are shard_map bodies: they must run under a mesh with the target axis.
 """
 from __future__ import annotations
 
+from typing import Any, Tuple
+
 import jax
 import jax.numpy as jnp
 
@@ -29,7 +31,7 @@ from repro.dist.sharding import POD_AXIS
 _Q_MAX = 127.0  # int8 symmetric range
 
 
-def compressed_psum(tree, axis, seed: int = 0):
+def compressed_psum(tree: Any, axis: str, seed: int = 0) -> Any:
     """psum of a float pytree over ``axis`` with int8-quantized payload.
 
     Per leaf: scale = pmax(|leaf|)/127 (shared across the axis so shards add
@@ -65,7 +67,8 @@ def compressed_psum(tree, axis, seed: int = 0):
     return jax.tree.unflatten(treedef, out)
 
 
-def elastic_aggregate(state, state_ref, live, axis: str = POD_AXIS):
+def elastic_aggregate(state: Any, state_ref: Any, live: Any,
+                      axis: str = POD_AXIS) -> Tuple[Any, Any]:
     """Merge Δ = state − state_ref over the *live* shards of ``axis``.
 
     ``live`` is this shard's liveness flag (nonzero = alive); dead shards'
@@ -76,7 +79,7 @@ def elastic_aggregate(state, state_ref, live, axis: str = POD_AXIS):
     alive = (live != 0)
     n_live = jax.lax.psum(alive.astype(jnp.int32), axis)
 
-    def merge(s, r):
+    def merge(s: Any, r: Any) -> Any:
         delta = (s - r) * alive.astype(s.dtype)
         return r + jax.lax.psum(delta, axis)
 

@@ -26,7 +26,7 @@ unconditionally (smoke tests run un-meshed).
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Optional, Tuple, Union
+from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -41,34 +41,34 @@ RING_AXES: Tuple[str, str] = ("data", "model")
 POD_AXIS: str = "pod"
 
 
-def ring_size(mesh) -> int:
+def ring_size(mesh: Any) -> int:
     """Number of devices on the flattened intra-pod ring."""
     return int(mesh.shape[RING_AXES[0]] * mesh.shape[RING_AXES[1]])
 
 
-def ring_perm(n: int):
+def ring_perm(n: int) -> List[Tuple[int, int]]:
     """The one-hop rotation of the flattened ring (collective-permute pairs)."""
     return [(i, (i + 1) % n) for i in range(n)]
 
 
-def flat_ring_index(mesh_axis_sizes: Tuple[int, int]):
+def flat_ring_index(mesh_axis_sizes: Tuple[int, int]) -> Any:
     """This device's position on the flattened ring (inside shard_map)."""
     i = jax.lax.axis_index(RING_AXES[0])
     j = jax.lax.axis_index(RING_AXES[1])
     return i * mesh_axis_sizes[1] + j
 
 
-def ring_spec(*trailing) -> P:
+def ring_spec(*trailing: Any) -> P:
     """Leading dim sharded over the flattened ring; extra dims as given."""
     return P(RING_AXES, *trailing)
 
 
-def pod_ring_spec(*trailing) -> P:
+def pod_ring_spec(*trailing: Any) -> P:
     """[pods, ring, ...] layout: pod-leading, then ring-sharded."""
     return P(POD_AXIS, RING_AXES, *trailing)
 
 
-def pod_spec(*trailing) -> P:
+def pod_spec(*trailing: Any) -> P:
     """Leading dim sharded over pods only (per-configuration replicas)."""
     return P(POD_AXIS, *trailing)
 
@@ -81,16 +81,16 @@ def pod_spec(*trailing) -> P:
 # (corpus.shard_corpus pre-buckets tokens by slice ownership).
 
 
-def data_ring_size(mesh) -> int:
+def data_ring_size(mesh: Any) -> int:
     """Ring length when the model axis holds resident Φ slices (= data size)."""
     return int(mesh.shape[RING_AXES[0]])
 
 
-def model_axis_size(mesh) -> int:
+def model_axis_size(mesh: Any) -> int:
     return int(mesh.shape[RING_AXES[1]])
 
 
-def wshard_spec(*trailing) -> P:
+def wshard_spec(*trailing: Any) -> P:
     """Φ/alias-table layout: coarse vocab shards over "data" (dim 0), row
     slices over "model" (dim 1)."""
     return P(RING_AXES[0], RING_AXES[1], *trailing)
@@ -102,7 +102,7 @@ def wshard_stack_spec() -> P:
     return P(RING_AXES[0], None, RING_AXES[1])
 
 
-def pod_wshard_spec(*trailing) -> P:
+def pod_wshard_spec(*trailing: Any) -> P:
     return P(POD_AXIS, RING_AXES[0], RING_AXES[1], *trailing)
 
 
@@ -129,10 +129,10 @@ def dp_axes(multi_pod: Optional[bool] = None) -> Union[str, Tuple[str, str]]:
 # Ambient mesh + activation anchors
 # ---------------------------------------------------------------------------
 
-_AMBIENT = {"mesh": None, "multi_pod": False}
+_AMBIENT: Dict[str, Any] = {"mesh": None, "multi_pod": False}
 
 
-def set_ambient_mesh(mesh, multi_pod: bool = False) -> None:
+def set_ambient_mesh(mesh: Any, multi_pod: bool = False) -> None:
     """Declare the mesh that activation anchors target (trace-time state).
 
     Model code calls ``constrain*`` without threading the mesh through every
@@ -145,7 +145,7 @@ def set_ambient_mesh(mesh, multi_pod: bool = False) -> None:
 
 
 @contextlib.contextmanager
-def ambient_mesh_scope(mesh, multi_pod: bool = False):
+def ambient_mesh_scope(mesh: Any, multi_pod: bool = False) -> Iterator[None]:
     """Temporarily set the ambient mesh, restoring the previous one on exit —
     keeps un-meshed code paths (smoke tests) truly un-meshed afterwards."""
     prev = (_AMBIENT["mesh"], _AMBIENT["multi_pod"])
@@ -156,11 +156,11 @@ def ambient_mesh_scope(mesh, multi_pod: bool = False):
         _AMBIENT["mesh"], _AMBIENT["multi_pod"] = prev
 
 
-def ambient_mesh():
+def ambient_mesh() -> Any:
     return _AMBIENT["mesh"]
 
 
-def constrain(x, spec: P):
+def constrain(x: Any, spec: P) -> Any:
     """with_sharding_constraint against the ambient mesh (identity un-meshed)."""
     mesh = _AMBIENT["mesh"]
     if mesh is None:
@@ -168,14 +168,14 @@ def constrain(x, spec: P):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
-def constrain_batch_dim0(x):
+def constrain_batch_dim0(x: Any) -> Any:
     """Anchor dim 0 (the batch/row dim) to the data-parallel axes."""
     if _AMBIENT["mesh"] is None:
         return x
     return constrain(x, P(dp_axes(), *([None] * (x.ndim - 1))))
 
 
-def tree_named(mesh, spec_tree):
+def tree_named(mesh: Any, spec_tree: Any) -> Any:
     """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
@@ -185,7 +185,7 @@ def tree_named(mesh, spec_tree):
 # LM family: FSDP over the data axes × Megatron TP over "model"
 # ---------------------------------------------------------------------------
 
-def lm_param_specs(cfg) -> Any:
+def lm_param_specs(cfg: Any) -> Any:
     """Specs matching models.transformer.param_shapes(cfg)'s structure.
 
     Projection weights split their TP-natural dim over ``"model"`` (column
@@ -243,7 +243,7 @@ def lm_cache_spec(multi_pod: bool = False) -> P:
 # GNN family: pure data parallelism over nodes/edges
 # ---------------------------------------------------------------------------
 
-def gnn_param_specs(shapes) -> Any:
+def gnn_param_specs(shapes: Any) -> Any:
     """GraphSAGE weights are KB-scale: replicate everywhere."""
     return jax.tree.map(lambda s: P(), shapes,
                         is_leaf=lambda x: isinstance(x, tuple))
@@ -263,7 +263,7 @@ def divisible_rows_spec(n: int, mesh, multi_pod: bool = False) -> P:
     relying on GSPMD padding.
     """
     axes = ((POD_AXIS,) if multi_pod else ()) + RING_AXES
-    chosen: list = []
+    chosen: List[str] = []
     prod = 1
     for ax in axes:
         size = int(mesh.shape[ax])
@@ -277,11 +277,11 @@ def divisible_rows_spec(n: int, mesh, multi_pod: bool = False) -> P:
 # RecSys family: Peacock-style row-sharded tables, replicated dense MLPs
 # ---------------------------------------------------------------------------
 
-def recsys_param_specs(shapes) -> Any:
+def recsys_param_specs(shapes: Any) -> Any:
     """Embedding tables row-shard over "model" (the Φ vocab-shard story,
     models/recsys.py); per-row linear terms follow their table; dense MLPs
     replicate (they are MB-scale)."""
-    def spec(name: str, shape) -> P:
+    def spec(name: str, shape: Any) -> P:
         if name.endswith("table") or name == "linear_w":
             return P("model", *([None] * (len(shape) - 1)))
         return P()

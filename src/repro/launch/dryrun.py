@@ -123,7 +123,8 @@ def run_cell(spec, shape: str, multi_pod: bool, skip_jaxpr: bool = False) -> dic
 
 
 def print_shard_table(n_topics: int = 100_000, vocab: int = 1_000_000,
-                      data_shards: int = 16, out=None) -> list:
+                      data_shards: int = 16, out=None,
+                      as_json: bool = False) -> list:
     """Replicated-vs-word-sharded per-device HBM table at paper scale
     (10⁵ topics × 10⁶ words; DESIGN.md §10) — the HBM win without hardware.
 
@@ -133,10 +134,11 @@ def print_shard_table(n_topics: int = 100_000, vocab: int = 1_000_000,
 
     n_tokens = 4.5e9
     recs = []
-    print(f"# §10 word-sharded model parallelism @ K={n_topics:,} "
-          f"V={vocab:,} (data ring M={data_shards}):", flush=True)
-    print("#   P   phi+tables/dev      theta/dev      HBM/dev  <16GB  "
-          "rotation/dev/epoch", flush=True)
+    if not as_json:
+        print(f"# §10 word-sharded model parallelism @ K={n_topics:,} "
+              f"V={vocab:,} (data ring M={data_shards}):", flush=True)
+        print("#   P   phi+tables/dev      theta/dev      HBM/dev  <16GB  "
+              "rotation/dev/epoch", flush=True)
     for p in (1, 2, 4, 8):
         r = analysis.model_shard_report(
             n_topics, vocab, data_shards, p, n_tokens,
@@ -146,9 +148,21 @@ def print_shard_table(n_topics: int = 100_000, vocab: int = 1_000_000,
         fits = hbm < 16e9
         r["fits_16gb_hbm"] = bool(fits)
         recs.append(r)
-        print(f"#  {p:2d}   {model/1e9:10.1f} GB   {r['theta_bytes_per_device']/1e9:8.3f} GB"
-              f"   {hbm/1e9:8.1f} GB   {'yes' if fits else ' no'}  "
-              f"{r['rotation_bytes_per_epoch']/1e9:12.1f} GB", flush=True)
+        if not as_json:
+            print(f"#  {p:2d}   {model/1e9:10.1f} GB   "
+                  f"{r['theta_bytes_per_device']/1e9:8.3f} GB"
+                  f"   {hbm/1e9:8.1f} GB   {'yes' if fits else ' no'}  "
+                  f"{r['rotation_bytes_per_epoch']/1e9:12.1f} GB",
+                  flush=True)
+    if as_json:
+        # one parseable document: the shard table plus its inputs — CI and
+        # the preflight budget derivation consume this instead of scraping
+        # the `#` comment lines
+        print(json.dumps({"shard_table": {
+            "n_topics": n_topics, "vocab": vocab,
+            "data_shards": data_shards, "n_tokens": n_tokens,
+            "rows": recs,
+        }}, indent=2), flush=True)
     if out:
         with open(out, "a") as f:
             for r in recs:
@@ -168,10 +182,26 @@ def main() -> None:
     ap.add_argument("--shard-table", action="store_true",
                     help="print the replicated-vs-word-sharded per-device "
                          "HBM/rotation table at paper scale (§10) and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output only (suppresses the "
+                         "human `#` tables; with --shard-table emits one "
+                         "JSON document, with --verify the preflight "
+                         "report)")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the repro.analysis static contract checks "
+                         "(sharding/VMEM/determinism/lint) on the default "
+                         "P=2 alias session and exit 0/1")
     args = ap.parse_args()
 
+    if args.verify:
+        from repro.analysis import preflight as pf
+
+        report = pf.run_preflight(pf.SessionSpec())
+        print(report.to_json(indent=2) if args.json else report.render())
+        raise SystemExit(0 if report.ok else 1)
+
     if args.shard_table:
-        print_shard_table(out=args.out)
+        print_shard_table(out=args.out, as_json=args.json)
         return
 
     from repro.configs import all_specs, get_arch

@@ -87,6 +87,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="publish every N boundaries (needs --publish-dir)")
     ap.add_argument("--bench-out", default="BENCH_train.json",
                     help="machine-readable bench record ('' disables)")
+    ap.add_argument("--preflight", action="store_true",
+                    help="run the static contract checks (repro.analysis: "
+                         "sharding/VMEM/determinism/lint) against this "
+                         "session's geometry and exit — no training state "
+                         "is allocated; exit 0 iff every check passes")
+    ap.add_argument("--preflight-json", action="store_true",
+                    help="with --preflight: machine-readable report")
     return ap
 
 
@@ -124,6 +131,18 @@ def main(argv=None):
     if "XLA_FLAGS" not in os.environ and n_dev_needed > 1:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={n_dev_needed}")
+
+    if args.preflight:
+        # static launch gate: verify the session's contracts (sharding
+        # layout, kernel VMEM, determinism, repo invariants) on abstract
+        # shapes only, then exit — nothing is allocated, so this is safe
+        # to run in front of every multi-hour session
+        from repro.analysis import preflight as pf
+
+        report = pf.verify_trainer_config(config_from_args(args))
+        print(report.to_json(indent=2) if args.preflight_json
+              else report.render())
+        raise SystemExit(0 if report.ok else 1)
 
     from repro.training import (AlphaOptimizer, Checkpointing, KillSwitch,
                                 Metrics, ModelPublisher, Trainer)

@@ -16,8 +16,6 @@ a small [B, H] all-reduce instead of gathering S.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ see DESIGN.md §5. Distribution = data parallelism over nodes/edges.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,8 +14,7 @@ interleaving hot fields across shards).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,9 +8,8 @@ which keeps the weight vector sparse as L1 intends.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

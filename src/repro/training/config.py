@@ -11,7 +11,7 @@ away from the same Trainer that runs the tiny CI configs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +66,7 @@ class TrainerConfig:
     # ------------------------------------------------------------- bench ---
     bench_out: Optional[str] = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         positive = {
             "n_docs": self.n_docs, "vocab_size": self.vocab_size,
             "n_topics": self.n_topics, "true_topics": self.true_topics,
@@ -140,13 +140,13 @@ class TrainerConfig:
     def multi_pod(self) -> bool:
         return self.n_pods > 1
 
-    def replace(self, **kw) -> "TrainerConfig":
+    def replace(self, **kw: Any) -> "TrainerConfig":
         return dataclasses.replace(self, **kw)
 
     # -------------------------------------------------- derivations --------
     @classmethod
     def from_peacock_lda(cls, n_pods: int = 1, data_shards: int = 16,
-                         model_shards: int = 16, **overrides
+                         model_shards: int = 16, **overrides: Any
                          ) -> "TrainerConfig":
         """The paper's production session (configs/peacock_lda.py scale):
         V = 2.1e5 SOSO vocabulary, K = 1e5 topics, 4096-doc data shards on a
@@ -154,7 +154,7 @@ class TrainerConfig:
         overridden (n_epochs, ckpt_dir, ...)."""
         from repro.configs import peacock_lda as pl
 
-        base = dict(
+        base: Dict[str, Any] = dict(
             n_docs=data_shards * model_shards * pl.DOCS_PER_SHARD,
             vocab_size=pl.VOCAB,
             n_topics=pl.K_TOPICS,

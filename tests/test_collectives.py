@@ -1,5 +1,4 @@
 """Compressed all-reduce + elastic aggregation (subprocess multi-device)."""
-import pytest
 
 COMPRESSED_CODE = r"""
 import numpy as np, jax, jax.numpy as jnp

@@ -11,7 +11,6 @@ from repro.configs.gnn_archs import small_gnn
 from repro.configs.lm_archs import small_lm
 from repro.configs.recsys_archs import small_recsys
 from repro.models import gnn, recsys, transformer as tf
-from repro.optim.adamw import AdamW
 
 RNG = np.random.default_rng(9)
 

@@ -118,6 +118,71 @@ def test_jaxpr_cost_nested_scan_and_remat():
     assert cost.flops >= 5 * 3 * 2 * 16 ** 3
 
 
+def test_jaxpr_cost_cond_charges_worst_branch():
+    # static trip unknown → the analyzer charges the most expensive branch,
+    # not the sum of branches and not the cheap one
+    def f(pred, x):
+        return jax.lax.cond(pred, lambda a: a @ a, lambda a: a + a, x)
+
+    cost = analysis.trace_cost(
+        f, jax.ShapeDtypeStruct((), jnp.bool_),
+        jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    assert cost.flops == 2 * 32 ** 3
+
+
+def test_jaxpr_cost_cond_nested_scan_in_branch():
+    # branch costs are themselves walked recursively: a scan inside the
+    # taken-to-be-worst branch multiplies by its trip count
+    def f(pred, x):
+        def heavy(a):
+            def body(c, _):
+                return c @ c, None
+            c, _ = jax.lax.scan(body, a, None, length=4)
+            return c
+        return jax.lax.cond(pred, heavy, lambda a: a, x)
+
+    cost = analysis.trace_cost(
+        f, jax.ShapeDtypeStruct((), jnp.bool_),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32))
+    assert cost.flops == 4 * 2 * 16 ** 3
+
+
+def test_jaxpr_cost_custom_vjp_primal():
+    # custom_vjp primal call carries its body as call_jaxpr — the walker
+    # must descend instead of treating the call as a zero-flop leaf
+    @jax.custom_vjp
+    def f(a, b):
+        return a @ b
+
+    def fwd(a, b):
+        return a @ b, (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        return g @ b.T, a.T @ g
+
+    f.defvjp(fwd, bwd)
+    cost = analysis.trace_cost(
+        f, jax.ShapeDtypeStruct((8, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 4), jnp.float32))
+    assert cost.flops == 2 * 8 * 16 * 4
+
+
+def test_jaxpr_cost_remat_grad_counts_recompute():
+    # differentiating through jax.checkpoint re-runs the forward inside the
+    # backward pass: the traced grad must cost at least forward + the two
+    # backward matmuls (3× a single forward)
+    def loss(x):
+        return jax.checkpoint(lambda y: (y @ y).sum())(x)
+
+    fwd = analysis.trace_cost(
+        loss, jax.ShapeDtypeStruct((16, 16), jnp.float32))
+    grad = analysis.trace_cost(
+        jax.grad(loss), jax.ShapeDtypeStruct((16, 16), jnp.float32))
+    assert fwd.flops == 2 * 16 ** 3
+    assert grad.flops >= 3 * fwd.flops
+
+
 def test_collective_parse():
     hlo = """
   %ag = f32[8,128]{1,0} all-gather(%x), replica_groups={}
@@ -197,6 +262,58 @@ def test_collective_while_body_fold_jaxpr_counts():
                                  "collective-permute": 10.0})
     assert out["all-reduce"] == 10 * 128 * 4 + 64 * 4
     assert out["collective-permute"] == 10 * 16 * 4
+
+
+# an inner while nested inside an outer while's body: the in-loop set must
+# include the inner body transitively, and trip folding treats every in-loop
+# occurrence of a kind with one blended multiplier (documented estimate)
+_NESTED_WHILE_HLO = """
+%inner_body.5 (arg.6: (s32[], f32[32])) -> (s32[], f32[32]) {
+  %arg.6 = (s32[], f32[32]) parameter(0)
+  %ar.inner = f32[32]{0} all-reduce(%gte.i), to_apply=%add
+}
+
+%inner_cond.8 (arg.9: (s32[], f32[32])) -> pred[] {
+  %arg.9 = (s32[], f32[32]) parameter(0)
+}
+
+%outer_body.10 (arg.11: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %arg.11 = (s32[], f32[128]) parameter(0)
+  %ar.outer = f32[128]{0} all-reduce(%gte.o), to_apply=%add
+  %wi = (s32[], f32[32]) while(%t2), condition=%inner_cond.8, body=%inner_body.5
+}
+
+%outer_cond.20 (arg.21: (s32[], f32[128])) -> pred[] {
+  %arg.21 = (s32[], f32[128]) parameter(0)
+}
+
+ENTRY %main.30 (Arg_0.1: f32[128]) -> f32[128] {
+  %ar.entry = f32[64]{0} all-reduce(%x), to_apply=%add
+  %w = (s32[], f32[128]) while(%tuple), condition=%outer_cond.20, body=%outer_body.10
+}
+"""
+
+
+def test_collective_nested_while_counts_once_by_default():
+    out = analysis.collective_bytes(_NESTED_WHILE_HLO)
+    assert out["all-reduce"] == 32 * 4 + 128 * 4 + 64 * 4
+
+
+def test_collective_nested_while_scalar_trips():
+    # the inner body is transitively in the in-loop set, so both loop
+    # collectives scale; the entry one does not. One scalar applies to all
+    # loop bodies (nested trips are NOT compounded — documented estimate).
+    out = analysis.collective_bytes(_NESTED_WHILE_HLO, while_trips=3)
+    assert out["all-reduce"] == 3 * (32 * 4 + 128 * 4) + 64 * 4
+
+
+def test_collective_nested_while_fold_jaxpr_counts():
+    # jaxpr-walker totals: 1 outside + outer body ran 4× + inner ran 4·6 =
+    # 29 expected invocations over 2 in-loop occurrences → blended
+    # multiplier (29 − 1) / 2 = 14 on each in-loop payload
+    out = analysis.collective_bytes(
+        _NESTED_WHILE_HLO, while_trips={"all-reduce": 29.0})
+    assert out["all-reduce"] == 64 * 4 + 14 * (32 * 4 + 128 * 4)
 
 
 def test_collective_fold_from_traced_scan(subproc):

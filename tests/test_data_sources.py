@@ -6,7 +6,6 @@ between the resident (in-memory) and out-of-core (DiskSource, mmap,
 prefetch) paths; the explicit SyntheticSource fallback; and the
 (epoch, segment) resume boundary.
 """
-import os
 import tempfile
 
 import numpy as np

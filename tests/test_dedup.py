@@ -1,5 +1,4 @@
 """Topic de-duplication: asymmetric prior fixed point + L1 clustering."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

@@ -3,7 +3,6 @@ subprocess (8 fake devices, 4×2 and 2×2×2 meshes). The production 512-device
 sweep is launch/dryrun.py; this guards the plumbing in CI time."""
 import json
 
-import pytest
 
 CODE = r"""
 import os

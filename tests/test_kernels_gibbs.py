@@ -3,7 +3,6 @@
 The kernel and oracle share the counter-based RNG, so agreement is required to
 be EXACT (argmax over identical floats with identical tie-breaking).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
