@@ -9,6 +9,7 @@
 #   scripts/tier1.sh kernels  # Pallas kernel subset, interpret-mode (-m kernels)
 #   scripts/tier1.sh shard    # word-sharded model-parallel conformance (-m shard)
 #   scripts/tier1.sh preflight # static-analysis launch gate (-m preflight)
+#   scripts/tier1.sh concurrency # thread-contract analyzer + interleaving (-m concurrency)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 case "${1:-}" in
@@ -30,5 +31,8 @@ case "${1:-}" in
     preflight)
         shift
         exec python -m pytest -x -q -m preflight "$@";;
+    concurrency)
+        shift
+        exec python -m pytest -x -q -m concurrency "$@";;
 esac
 exec python -m pytest -x -q "$@"

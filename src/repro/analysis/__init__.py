@@ -1,7 +1,8 @@
-"""``repro.analysis`` — the static verification layer (DESIGN.md §11).
+"""``repro.analysis`` — the static verification layer (DESIGN.md §11–12).
 
-Four launch-gate passes over a session's *abstract* form (jaxpr, compiled
-HLO text, BlockSpecs, AST) — no training state is ever allocated:
+Five launch-gate passes over a session's *abstract* form (jaxpr, compiled
+HLO text, BlockSpecs, AST) — no training state is ever allocated and no
+thread is ever started:
 
 * :mod:`repro.analysis.shardcheck` — the §10 sharding contract (rotation
   ppermute counts, Φ-replication all-gathers, collective byte budgets);
@@ -9,15 +10,20 @@ HLO text, BlockSpecs, AST) — no training state is ever allocated:
   actual Pallas BlockSpecs, against the ~16 MB/core budget;
 * :mod:`repro.analysis.determinism` — the bitwise kill→resume jaxpr audit
   (float scatter-adds, jax.random, host callbacks);
+* :mod:`repro.analysis.concurrency` — the §12 thread contracts over every
+  thread-creating module (``_GUARDED_BY`` lock discipline, the cross-class
+  lock-order graph, thread lifecycle, wait/notify protocol);
 * :mod:`repro.analysis.repolint` — AST-enforced codebase invariants
-  (kernel oracles, frozen configs, confined backend probes).
+  (kernel oracles, frozen configs, confined backend probes, thread-contract
+  opt-in).
 
 Entry points: ``python -m repro.analysis.preflight``,
-``launch/train.py --preflight``, ``launch/dryrun.py --verify``.
+``launch/train.py --preflight``, ``launch/serve.py --preflight``,
+``launch/dryrun.py --verify``.
 
-Only :mod:`.report` and :mod:`.repolint` are imported eagerly — they are
-jax-free, so ``repro.analysis`` can be imported before ``XLA_FLAGS`` is
-set (the preflight CLI relies on that ordering).
+Only :mod:`.report` is imported eagerly; it and :mod:`.repolint` /
+:mod:`.concurrency` are jax-free, so ``repro.analysis`` can be imported
+before ``XLA_FLAGS`` is set (the preflight CLI relies on that ordering).
 """
 from repro.analysis.report import (ERROR, INFO, WARNING, Finding, PassResult,
                                    PreflightReport, error, info,

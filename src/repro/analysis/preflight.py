@@ -9,7 +9,14 @@ then runs four passes:
   ``sharding``     §10 layout contract (repro.analysis.shardcheck)
   ``vmem``         static per-kernel VMEM plans (repro.analysis.vmem)
   ``determinism``  bitwise kill→resume jaxpr audit (repro.analysis.determinism)
+  ``concurrency``  §12 thread contracts (repro.analysis.concurrency): lock
+                   discipline, lock-order graph, thread lifecycle,
+                   wait/notify protocol — AST only, zero threads started
   ``lint``         AST repo invariants (repro.analysis.repolint)
+
+``concurrency`` and ``lint`` need no abstract session (pure source
+analysis), so ``--passes concurrency`` gates the serving layer in well
+under a second.
 
 Exit code 0 iff no pass produced an ``error`` finding; ``--json`` emits the
 machine-readable report CI consumes. A P=2 alias session verifies end-to-end
@@ -33,7 +40,7 @@ from repro.analysis import repolint
 from repro.analysis.report import (PassResult, PreflightReport, error,
                                    info)
 
-PASSES = ("sharding", "vmem", "determinism", "lint")
+PASSES = ("sharding", "vmem", "determinism", "concurrency", "lint")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,6 +247,14 @@ def run_lint_pass(root: Optional[str] = None) -> PassResult:
     return PassResult("lint", findings, time.monotonic() - t0)
 
 
+def run_concurrency_pass(root: Optional[str] = None) -> PassResult:
+    from repro.analysis import concurrency
+
+    t0 = time.monotonic()
+    findings = concurrency.run(root)
+    return PassResult("concurrency", findings, time.monotonic() - t0)
+
+
 def run_preflight(spec: SessionSpec,
                   passes: Sequence[str] = PASSES,
                   compile_hlo: bool = True,
@@ -270,6 +285,8 @@ def run_preflight(spec: SessionSpec,
             report.add(run_vmem_pass(session))
         elif name == "determinism" and session is not None:
             report.add(run_determinism_pass(session))
+        elif name == "concurrency":
+            report.add(run_concurrency_pass(root))
         elif name == "lint":
             report.add(run_lint_pass(root))
     if session is not None:
@@ -292,7 +309,8 @@ def verify_trainer_config(cfg: Any, compile_hlo: bool = True,
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.preflight",
-        description="static sharding/VMEM/determinism/lint contract checks")
+        description="static sharding/VMEM/determinism/concurrency/lint "
+                    "contract checks")
     ap.add_argument("--topics", type=int, default=12)
     ap.add_argument("--vocab", type=int, default=96)
     ap.add_argument("--docs", type=int, default=120)
@@ -303,7 +321,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--n-mh", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--passes", default=",".join(PASSES),
-                    help=f"comma-separated subset of {','.join(PASSES)}")
+                    help=f"comma-separated subset of {','.join(PASSES)}; "
+                         "`--passes concurrency` runs only the §12 thread "
+                         "contracts (lock discipline / lock order / "
+                         "lifecycle / wait-notify) — pure AST, no session "
+                         "build, no threads started, sub-second")
     ap.add_argument("--no-compile", action="store_true",
                     help="skip HLO compilation (drops the collective-byte "
                          "budget check; jaxpr-level checks still run)")

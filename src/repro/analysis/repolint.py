@@ -22,6 +22,13 @@ and expensive to discover broken at runtime:
   Every other occurrence is a dispatch decision that belongs in
   ``kernel_mode(force=...)``.
 
+* **Threads opt into the concurrency contract.** Any ``threading.Thread``
+  creation site under ``src/`` must sit inside a class that declares
+  ``_GUARDED_BY`` (may be ``{}``) — presence of the annotation is what
+  opts the class into the four ``repro.analysis.concurrency`` passes
+  (DESIGN.md §12), so an unannotated thread is an *unanalyzed* thread.
+  This is the guard rail TopicFleet and the online-EM daemon land behind.
+
 Advisory (warnings, never fail the run): module-level imports never
 referenced in the file, and bare ``except:`` handlers. These overlap what
 ``ruff`` flags in CI; the AST pass keeps the invariant checkable in
@@ -248,6 +255,71 @@ def check_backend_probes(root: str,
     return findings
 
 
+# ------------------------------------------------- thread opt-in contract ---
+
+
+def _is_thread_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr == "Thread" and \
+            isinstance(f.value, ast.Name) and f.value.id == "threading"
+    return isinstance(f, ast.Name) and f.id == "Thread"
+
+
+def check_thread_conventions(root: str,
+                             subdirs: Tuple[str, ...] = ("src",)
+                             ) -> List[Finding]:
+    """Every ``threading.Thread(...)`` site must live inside a class that
+    declares ``_GUARDED_BY`` — the opt-in to the §12 concurrency passes."""
+    findings: List[Finding] = []
+    n_sites = 0
+    for path in _py_files(root, subdirs):
+        tree = _parse(path)
+        if tree is None:
+            continue
+        annotated_spans: List[Tuple[int, int, str]] = []
+        class_spans: List[Tuple[int, int, str]] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                span = (node.lineno, node.end_lineno or node.lineno,
+                        node.name)
+                class_spans.append(span)
+                if any(isinstance(st, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == "_GUARDED_BY"
+                        for t in st.targets) for st in node.body):
+                    annotated_spans.append(span)
+        for node in ast.walk(tree):
+            if not _is_thread_call(node):
+                continue
+            n_sites += 1
+            if any(lo <= node.lineno <= hi
+                   for lo, hi, _ in annotated_spans):
+                continue
+            owner = next((name for lo, hi, name in class_spans
+                          if lo <= node.lineno <= hi), None)
+            where = f"class {owner}" if owner else "module scope"
+            findings.append(error(
+                "lint.thread-contract",
+                f"threading.Thread created in {where} without a "
+                "_GUARDED_BY declaration — every thread-creating class "
+                "must opt into the concurrency contract (DESIGN.md §12): "
+                "declare `_GUARDED_BY = {...}` (or `{}` with `# atomic: "
+                "<rationale>` per lock-free shared field) so the "
+                "lock-discipline/lifecycle passes analyze it; threads "
+                "outside a class must move into one",
+                location=f"{_rel(root, path)}:{node.lineno}",
+                cls=owner))
+    if not any(f.severity == "error" for f in findings):
+        findings.append(info(
+            "lint.thread-contract",
+            f"all {n_sites} threading.Thread sites live in "
+            "_GUARDED_BY-annotated classes (concurrency passes cover them)",
+            location="src"))
+    return findings
+
+
 # ------------------------------------------------------------- advisories ---
 
 
@@ -318,7 +390,8 @@ def lint_repo(root: Optional[str] = None,
     root = root or find_repo_root()
     findings = (check_kernel_oracles(root)
                 + check_frozen_configs(root)
-                + check_backend_probes(root))
+                + check_backend_probes(root)
+                + check_thread_conventions(root))
     if advisories:
         findings += check_advisories(root)
     return findings

@@ -24,11 +24,17 @@ from repro.checkpoint import io
 
 
 class CheckpointManager:
+    # no lock: the manager is single-owner (the trainer thread). The writer
+    # thread only touches its own deep-copied host_tree + the filesystem,
+    # never manager state; _thread is the one shared handle and save()/wait()
+    # are only ever called from the owning thread (see # atomic: below)
+    _GUARDED_BY = {}
+
     def __init__(self, root: str, keep: int = 3, async_save: bool = False):
         self.root = root
         self.keep = keep
         self.async_save = async_save
-        self._thread: Optional[threading.Thread] = None
+        self._thread: Optional[threading.Thread] = None  # atomic: single-owner handle — only the trainer thread calls save()/wait(); save() joins the previous writer (self.wait()) before spawning the next, so at most one writer exists and no concurrent access to the handle is possible
         os.makedirs(root, exist_ok=True)
 
     # ------------------------------------------------------------- paths ----

@@ -46,10 +46,15 @@ class SegmentStream:
     it (``sources.initial_z`` builds it; checkpoints carry it).
     """
 
+    # no lock-guarded state: the worker/consumer handoff is entirely the
+    # epoch()-local queue + event + semaphore; z is the one field both sides
+    # touch and its contract is the disjoint-index partition below
+    _GUARDED_BY = {}
+
     def __init__(self, source: CorpusSource, z_host: np.ndarray,
                  prefetch: bool = True):
         self.source = source
-        self.z = z_host
+        self.z = z_host  # atomic: segments partition documents — the worker's LoadShard gather (z[host_uid]) and the consumer's SaveShard scatter touch disjoint uid index sets, and the depth-1 queue + slots semaphore order each segment's load strictly before its own commit
         self.prefetch = prefetch
         self.n_segments = source.n_segments
 

@@ -65,7 +65,30 @@ def main(argv=None):
                     help="hot-swap the model halfway through the run")
     ap.add_argument("--bench-out", type=str, default=None,
                     help="write a machine-readable JSON record here")
+    ap.add_argument("--preflight", action="store_true",
+                    help="run the serving-side static contract checks "
+                         "(repro.analysis: concurrency thread contracts + "
+                         "repo lint) and exit before building any engine — "
+                         "pure AST, no model trained, no thread started; "
+                         "exit 0 iff every check passes (parity with "
+                         "launch/train.py --preflight, which gates the "
+                         "jitted side)")
+    ap.add_argument("--preflight-json", action="store_true",
+                    help="with --preflight: machine-readable report")
     args = ap.parse_args(argv)
+
+    if args.preflight:
+        # static serving gate: verify the thread contracts of the engine /
+        # watcher / stream / checkpoint classes this driver is about to
+        # exercise, then exit — nothing is built, so the gate is safe (and
+        # sub-second) in front of every load run
+        from repro.analysis import preflight as pf
+
+        report = pf.run_preflight(pf.SessionSpec(),
+                                  passes=("concurrency", "lint"))
+        print(report.to_json(indent=2) if args.preflight_json
+              else report.render())
+        raise SystemExit(0 if report.ok else 1)
 
     import numpy as np
 

@@ -89,9 +89,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="machine-readable bench record ('' disables)")
     ap.add_argument("--preflight", action="store_true",
                     help="run the static contract checks (repro.analysis: "
-                         "sharding/VMEM/determinism/lint) against this "
-                         "session's geometry and exit — no training state "
-                         "is allocated; exit 0 iff every check passes")
+                         "sharding/VMEM/determinism/concurrency/lint) "
+                         "against this session's geometry and exit — no "
+                         "training state is allocated and no thread is "
+                         "started; exit 0 iff every check passes")
     ap.add_argument("--preflight-json", action="store_true",
                     help="with --preflight: machine-readable report")
     return ap

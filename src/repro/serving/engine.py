@@ -59,6 +59,17 @@ def _row_bucket(n: int, max_batch: int) -> int:
 class TopicEngine:
     """Async batched RT-LDA inference with deadlines, buckets and hot-swap."""
 
+    # concurrency contract (checked by repro.analysis.concurrency): every
+    # field below is touched by both the batching thread and public callers,
+    # and must only be accessed inside `with self._cv:`
+    _GUARDED_BY = {
+        "_pending": "_cv", "_est_ms": "_cv", "_next_id": "_cv",
+        "_seed": "_cv", "_stop": "_cv", "_t0": "_cv",
+        "_n_submitted": "_cv", "_n_completed": "_cv", "_n_truncated": "_cv",
+        "_n_missed": "_cv", "_n_deadlined": "_cv", "_per_bucket": "_cv",
+        "_lat_ms": "_cv", "_occupancy": "_cv",
+    }
+
     def __init__(self, model: RTLDAModel, *,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_batch: int = 256,
@@ -72,8 +83,10 @@ class TopicEngine:
         self.buckets: Tuple[int, ...] = tuple(sorted(int(b) for b in buckets))
         self.max_batch = int(max_batch)
         self.max_delay_ms = float(max_delay_ms)
-        self._model = model
-        self._model_version = 0
+        # (model, version) live in ONE reference so a single unlocked read
+        # yields a consistent pair — two separate fields could tear between
+        # a flush reading the model and stamping the version
+        self._model_ref = (model, 0)  # atomic: single-reference publish; flush + stats snapshot the (model, version) pair with one read, swap_model replaces the whole tuple under _cv
         self._infer = features.make_serving_fn(
             n_iters=n_iters, n_trials=n_trials, top_n=top_n)
         self._clock = clock
@@ -144,14 +157,13 @@ class TopicEngine:
         it; the SnapshotWatcher passes the snapshot version). ``None``
         auto-increments, so every swap is visible even unlabeled."""
         with self._cv:
+            # the lock serializes concurrent swaps (the auto-increment is a
+            # read-modify-write); readers never take it — they snapshot
+            # _model_ref once, lock-free
             if version is None:
-                prev = self._model_version
+                prev = self._model_ref[1]
                 version = (prev + 1) if isinstance(prev, int) else 0
-            # model + version stored together so stats() can never report a
-            # version the flush path isn't serving yet (each flush still
-            # reads the reference exactly once, without the lock)
-            self._model = model
-            self._model_version = version
+            self._model_ref = (model, version)
 
     def stats(self) -> EngineStats:
         with self._cv:
@@ -172,7 +184,7 @@ class TopicEngine:
                 mean_batch_occupancy=occ,
                 deadline_miss_rate=miss_rate,
                 per_bucket=dict(self._per_bucket),
-                model_version=self._model_version,
+                model_version=self._model_ref[1],
             )
 
     def reset_stats(self) -> None:
@@ -256,7 +268,9 @@ class TopicEngine:
         entries = [e for e in entries if e[1].set_running_or_notify_cancel()]
         if not entries:
             return
-        model = self._model          # ONE read: the hot-swap atomicity point
+        # ONE read: the hot-swap atomicity point — the whole batch runs
+        # against this model and is stamped with this version
+        model, model_version = self._model_ref
         rows = _row_bucket(len(entries), self.max_batch)
         q = np.full((rows, bucket), -1, np.int32)
         for i, (req, _, _, _) in enumerate(entries):
@@ -282,7 +296,8 @@ class TopicEngine:
                 request_id=req.request_id,
                 pkd=pkd[i], feature_ids=ids[i], feature_weights=w[i],
                 bucket=bucket, truncated=truncated,
-                latency_ms=latency_ms, deadline_missed=missed)))
+                latency_ms=latency_ms, deadline_missed=missed,
+                model_version=model_version)))
 
         with self._cv:
             # EWMA service estimate drives future requests' flush slack
@@ -313,7 +328,7 @@ class TopicEngine:
                     return
             self.pump()
 
-    def _wait_timeout(self, now: float) -> Optional[float]:
+    def _wait_timeout(self, now: float) -> Optional[float]:  # requires: _cv
         """Seconds until the next flush deadline; 0 if a flush is already
         due; None when nothing is queued (idle — poll slowly)."""
         soonest = None

@@ -62,6 +62,9 @@ class Response:
     truncated: bool             # tokens beyond the largest bucket were dropped
     latency_ms: float           # arrival → completion, engine clock
     deadline_missed: bool       # latency_ms > deadline_ms (False if no deadline)
+    model_version: Optional[int] = None  # version of the model that ran the
+    # batch — every response in one flush carries the same value (the engine
+    # reads its (model, version) reference exactly once per batch)
 
     def as_dict(self) -> dict:
         """Legacy ``BatchingServer.infer`` result-dict view."""

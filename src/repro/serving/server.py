@@ -39,7 +39,7 @@ class BatchingServer:
 
     @property
     def model(self) -> RTLDAModel:
-        return self.engine._model
+        return self.engine._model_ref[0]
 
     def infer(self, requests: Sequence) -> List[dict]:
         """Process all requests synchronously; returns result dicts in order

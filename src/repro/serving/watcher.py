@@ -13,6 +13,14 @@ background thread (``start()`` / context manager):
     with TopicEngine(model) as engine, \
          SnapshotWatcher(snap_dir, engine, poll_s=0.5) as watcher:
         ...   # traffic; every publish shows up within one poll interval
+
+Concurrency contract (checked by ``repro.analysis.concurrency``): the
+public counters (``version``/``swaps``/``poll_failures``/``last_error``)
+and the thread handle live under ``_lock``; the slow work — snapshot IO,
+``engine.swap_model`` (which takes the engine's own condition) and
+``Thread.join`` — always happens *outside* it, so the watcher's lock never
+nests into the engine's and a wedged filesystem can't wedge ``stats()``
+readers with it.
 """
 from __future__ import annotations
 
@@ -24,12 +32,20 @@ from repro.checkpoint import snapshots
 
 
 class SnapshotWatcher:
+    # every field here is read by operator threads (stats scraping,
+    # wait_for_version) while the poller thread writes it
+    _GUARDED_BY = {
+        "version": "_lock", "swaps": "_lock", "poll_failures": "_lock",
+        "last_error": "_lock", "_thread": "_lock",
+    }
+
     def __init__(self, snapshot_dir: str, engine, poll_s: float = 0.5,
                  on_swap: Optional[Callable[[int, dict], None]] = None):
         self.snapshot_dir = snapshot_dir
         self.engine = engine
         self.poll_s = float(poll_s)
         self.on_swap = on_swap
+        self._lock = threading.Lock()
         self.version: Optional[int] = None     # last version swapped in
         self.swaps = 0
         self.poll_failures = 0                 # consecutive failed reads
@@ -42,10 +58,18 @@ class SnapshotWatcher:
     def poll(self) -> Optional[int]:
         """One tick: if a newer complete version exists, load + swap it.
         Returns the swapped version, or None. A version rotated away between
-        listing and reading is skipped; the next tick re-resolves latest."""
+        listing and reading is skipped; the next tick re-resolves latest.
+
+        IO and the engine swap run without ``_lock`` held — only the
+        snapshot of ``version`` before and the counter updates after take
+        it. Concurrent polls (manual tick racing the background thread) are
+        safe: the final update is monotonic-max on ``version``, so a stale
+        poll can neither double-count a swap nor roll the version back.
+        """
+        with self._lock:
+            known = self.version
         latest = snapshots.latest_version(self.snapshot_dir)
-        if latest is None or (self.version is not None
-                              and latest <= self.version):
+        if latest is None or (known is not None and latest <= known):
             return None
         try:
             model, meta = snapshots.load_snapshot(self.snapshot_dir, latest)
@@ -54,14 +78,20 @@ class SnapshotWatcher:
             # failure (permissions, dead mount) is visible to operators as
             # a growing ``poll_failures`` streak + ``last_error`` — the
             # model going stale must not be silent.
-            self.poll_failures += 1
-            self.last_error = exc
+            with self._lock:
+                self.poll_failures += 1
+                self.last_error = exc
             return None
-        self.poll_failures = 0
-        self.last_error = None
+        # swap outside _lock: swap_model takes the engine's condition, and
+        # nesting watcher._lock -> engine._cv would put this lock above the
+        # engine's in the global order for no benefit
         self.engine.swap_model(model, version=latest)
-        self.version = latest
-        self.swaps += 1
+        with self._lock:
+            self.poll_failures = 0
+            self.last_error = None
+            if self.version is None or latest > self.version:
+                self.version = latest
+                self.swaps += 1
         if self.on_swap is not None:
             self.on_swap(latest, meta)
         return latest
@@ -69,24 +99,35 @@ class SnapshotWatcher:
     # --------------------------------------------------------- background --
 
     def start(self) -> "SnapshotWatcher":
-        if self._thread is not None:
-            return self
-        self._stop.clear()
-        self._thread = threading.Thread(target=self._run,
-                                        name="snapshot-watcher", daemon=True)
-        self._thread.start()
+        """Idempotent: a live poller is kept, a dead handle (stopped, or
+        previously wedged and since exited) is replaced — ``stop()`` then
+        ``start()`` always yields a running poller."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._stop.clear()
+            t = threading.Thread(target=self._run,
+                                 name="snapshot-watcher", daemon=True)
+            self._thread = t
+        t.start()
         return self
 
     def stop(self) -> None:
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=10)
-            # keep the handle if the thread is wedged (e.g. a hung
-            # filesystem inside poll): start() then refuses to spawn a
-            # duplicate poller, and the wedged thread exits at its next
-            # tick because _stop stays set
-            if not self._thread.is_alive():
-                self._thread = None
+        with self._lock:
+            t = self._thread
+        if t is not None:
+            # join OUTSIDE _lock: a wedged poller (hung filesystem inside
+            # poll) must not hold up every stats()/wait_for_version reader
+            # for the whole join timeout
+            t.join(timeout=10)
+            with self._lock:
+                # keep a wedged handle: start() would otherwise spawn a
+                # duplicate poller while the old one still runs; the wedged
+                # thread exits at its next tick because _stop stays set,
+                # after which start() sees a dead handle and respawns
+                if not t.is_alive() and self._thread is t:
+                    self._thread = None
 
     def _run(self) -> None:
         while not self._stop.is_set():
@@ -98,12 +139,16 @@ class SnapshotWatcher:
         inline when the background thread isn't running."""
         deadline = timeout_s + time.monotonic()
         while time.monotonic() < deadline:
-            if self.version is not None and self.version >= version:
+            with self._lock:
+                current, t = self.version, self._thread
+            if current is not None and current >= version:
                 return True
-            if self._thread is None:
+            if t is None:
                 self.poll()
-            if self.version is not None and self.version >= version:
-                return True
+                with self._lock:
+                    current = self.version
+                if current is not None and current >= version:
+                    return True
             self._stop.wait(min(self.poll_s, 0.05))
         return False
 

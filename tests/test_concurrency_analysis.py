@@ -1,0 +1,619 @@
+"""Mutation tests for the §12 concurrency contract analyzer.
+
+Every pass must (a) pass the unmodified repo clean and (b) catch a seeded
+violation with an actionable message naming the class/field/lock — a
+static analyzer that can't detect the bug class it exists for is worse
+than none, because it certifies broken code.
+
+All seeding goes through :func:`analyze_source` (in-memory modules) or a
+tmp-dir fake repo — the real tree is only ever analyzed, never mutated.
+The analyzer itself must start zero threads (it reasons about ``Thread``
+call sites by AST; executing them would make the gate as racy as the code
+it checks).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import pytest
+
+from repro.analysis import report, repolint
+from repro.analysis import concurrency as cc
+
+pytestmark = pytest.mark.concurrency
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def errors(src):
+    return [f for f in cc.analyze_source(textwrap.dedent(src), "seeded.py")
+            if f.severity == report.ERROR]
+
+
+# ------------------------------------------------------------ clean repo ----
+
+
+def test_unmodified_repo_passes_clean():
+    findings = cc.run(REPO)
+    errs = [f for f in findings if f.severity == report.ERROR]
+    assert errs == [], [f.message for f in errs]
+    # the four production thread owners are all under analysis
+    inventory = next(f for f in findings
+                     if f.check == "concurrency.inventory")
+    for cls in ("TopicEngine", "SnapshotWatcher", "SegmentStream",
+                "CheckpointManager"):
+        assert cls in inventory.message
+
+
+def test_analyzer_starts_zero_threads():
+    before = threading.active_count()
+    cc.run(REPO)
+    assert threading.active_count() == before
+
+
+# ------------------------------------------- pass 1: lock discipline --------
+
+
+def _guard_module(extra_method=""):
+    return """
+        import threading
+
+        class C:
+            _GUARDED_BY = {"_count": "_lock"}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._count = 0
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                while not self.stopped():
+                    with self._lock:
+                        self._count += 1
+
+            def close(self):
+                self._t.join()
+""" + extra_method
+
+
+def test_guard_catches_unguarded_write():
+    errs = errors(_guard_module("""
+            def bump(self):
+                self._count += 1
+"""))
+    guard = [f for f in errs if f.check == "concurrency.guard"]
+    assert len(guard) == 1, [f.message for f in errs]
+    msg = guard[0].message
+    assert "C.bump" in msg and "_count" in msg and "_lock" in msg
+    assert "with self._lock:" in msg          # actionable fix, not just a nag
+    assert guard[0].location.startswith("seeded.py:")
+
+
+def test_guard_allows_init_before_thread_start_and_locked_access():
+    assert errors(_guard_module()) == []
+
+
+def test_guard_catches_undeclared_shared_field():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._stuff = []
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                while not self.closed():
+                    self._stuff.append(1)
+
+            def drain(self):
+                out = list(self._stuff)
+                self._stuff.clear()
+                return out
+
+            def close(self):
+                self._t.join()
+    """)
+    shared = [f for f in errs if f.check == "concurrency.undeclared-shared"]
+    assert len(shared) == 1, [f.message for f in errs]
+    assert "_stuff" in shared[0].message
+    assert "_run" in shared[0].message and "drain" in shared[0].message
+    assert "_GUARDED_BY" in shared[0].message
+
+
+def test_guard_checks_requires_contract_at_call_sites():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {"_q": "_lock"}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._q = []
+
+            def _peek(self):  # requires: _lock
+                return len(self._q)
+
+            def good(self):
+                with self._lock:
+                    return self._peek()
+
+            def bad(self):
+                return self._peek()
+    """)
+    assert len(errs) == 1
+    assert "C.bad" in errs[0].message and "_peek" in errs[0].message
+    assert "requires" in errs[0].message
+
+
+def test_atomic_needs_rationale_and_excludes_guarded():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {"_x": "_lock"}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._x = 0  # atomic:
+    """)
+    checks = [f.check for f in errs]
+    assert "concurrency.config" in checks
+    assert any("rationale" in f.message for f in errs)
+
+
+def test_guarded_by_must_name_a_real_lock():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {"_x": "_mutex"}
+
+            def __init__(self):
+                self._x = 0
+    """)
+    assert any(f.check == "concurrency.config"
+               and "_mutex" in f.message for f in errs)
+
+
+# ------------------------------------- pass 2: lock order / blocking --------
+
+
+def test_lock_order_catches_cross_class_cycle():
+    errs = errors("""
+        import threading
+
+        class A:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._la = threading.Lock()
+
+            def ping(self, other):
+                with self._la:
+                    other.pong_b(self)
+
+            def pong_a(self, other):
+                with self._la:
+                    pass
+
+        class B:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._lb = threading.Lock()
+
+            def pong_b(self, other):
+                with self._lb:
+                    other.pong_a(self)
+    """)
+    cyc = [f for f in errs if f.check == "concurrency.lock-order"]
+    assert len(cyc) == 1, [f.message for f in errs]
+    assert "A._la" in cyc[0].message and "B._lb" in cyc[0].message
+    assert "deadlock" in cyc[0].message
+
+
+def test_lock_order_catches_nonreentrant_self_acquire():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def outer(self):
+                with self._lock:
+                    with self._lock:
+                        pass
+    """)
+    assert any("re-acquires" in f.message and "self-deadlock"
+               in f.message for f in errs)
+
+
+def test_rlock_reentry_is_allowed():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._lock = threading.RLock()
+
+            def outer(self):
+                with self._lock:
+                    with self._lock:
+                        pass
+    """)
+    assert errs == []
+
+
+def test_blocking_join_while_locked():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._cv = threading.Condition()
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                while not self.stopped():
+                    with self._cv:
+                        self._cv.wait(0.1)
+
+            def close(self):
+                with self._cv:
+                    self._t.join()
+    """)
+    blk = [f for f in errs
+           if f.check == "concurrency.blocking-while-locked"]
+    assert len(blk) == 1, [f.message for f in errs]
+    assert ".join()" in blk[0].message and "_cv" in blk[0].message
+
+
+def test_blocking_future_result_and_queue_put_while_locked():
+    errs = errors("""
+        import threading
+        import queue
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._q = queue.Queue(maxsize=1)
+
+            def a(self, fut):
+                with self._lock:
+                    return fut.result()
+
+            def b(self, item):
+                with self._lock:
+                    self._q.put(item)
+
+            def ok(self, item):
+                with self._lock:
+                    self._q.put(item, timeout=0.1)
+    """)
+    blk = [f for f in errs
+           if f.check == "concurrency.blocking-while-locked"]
+    assert len(blk) == 2, [f.message for f in errs]
+    assert any("Future.result()" in f.message for f in blk)
+    assert any("Queue.put" in f.message for f in blk)
+
+
+# ------------------------------------------- pass 3: thread lifecycle -------
+
+
+def test_lifecycle_catches_joinless_thread():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                while not self.stop_flag():
+                    pass
+    """)
+    join = [f for f in errs if f.check == "concurrency.thread-join"]
+    assert len(join) == 1, [f.message for f in errs]
+    assert "self._t" in join[0].message and "never joined" in join[0].message
+
+
+def test_lifecycle_catches_unstoppable_loop():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                while True:
+                    self.tick()
+
+            def tick(self):
+                pass
+
+            def close(self):
+                self._t.join()
+    """)
+    stop = [f for f in errs if f.check == "concurrency.thread-stop"]
+    assert len(stop) == 1, [f.message for f in errs]
+    assert "stop signal" in stop[0].message
+
+
+def test_lifecycle_run_to_completion_thread_needs_no_stop():
+    # CheckpointManager._async shape: no loop in the target → nothing to stop
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._t = None
+
+            def save(self, x):
+                self.wait()
+
+                def _async():
+                    self.write(x)
+
+                self._t = threading.Thread(target=_async)
+                self._t.start()
+
+            def write(self, x):
+                pass
+
+            def wait(self):
+                if self._t is not None:
+                    self._t.join()
+                    self._t = None
+    """)
+    assert errs == [], [f.message for f in errs]
+
+
+def test_lifecycle_catches_unguarded_double_start():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._t = None
+
+            def start(self):
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def _run(self):
+                while not self.stopped():
+                    pass
+
+            def close(self):
+                self._t.join()
+    """)
+    dbl = [f for f in errs if f.check == "concurrency.double-start"]
+    assert len(dbl) == 1, [f.message for f in errs]
+    assert "C.start" in dbl[0].message and "_t" in dbl[0].message
+
+
+# --------------------------------------------- pass 4: wait / notify --------
+
+
+def test_wait_outside_loop_is_flagged():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._cv = threading.Condition()
+
+            def poke(self):
+                with self._cv:
+                    self._cv.wait()
+    """)
+    wl = [f for f in errs if f.check == "concurrency.wait-loop"]
+    assert len(wl) == 1, [f.message for f in errs]
+    assert "C.poke" in wl[0].message
+    assert "while" in wl[0].message and "spurious" in wl[0].message
+
+
+def test_wait_without_holding_condition_is_flagged():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._cv = threading.Condition()
+
+            def bad(self):
+                while self.pending():
+                    self._cv.wait(0.1)
+    """)
+    assert any(f.check == "concurrency.wait-loop"
+               and "without" in f.message for f in errs)
+
+
+def test_notify_without_lock_is_flagged():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._cv = threading.Condition()
+
+            def kick(self):
+                self._cv.notify()
+    """)
+    nu = [f for f in errs if f.check == "concurrency.notify-unlocked"]
+    assert len(nu) == 1
+    assert "miss the wakeup" in nu[0].message
+
+
+def test_event_wait_loop_without_stop_or_deadline_is_flagged():
+    errs = errors("""
+        import threading
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._ev = threading.Event()
+
+            def spin(self):
+                while True:
+                    self._ev.wait(0.1)
+    """)
+    ew = [f for f in errs if f.check == "concurrency.event-wait-loop"]
+    assert len(ew) == 1
+    assert "stop" in ew[0].message
+
+
+def test_event_wait_deadline_bounded_loop_is_clean():
+    errs = errors("""
+        import threading
+        import time
+
+        class C:
+            _GUARDED_BY = {}
+
+            def __init__(self):
+                self._ev = threading.Event()
+
+            def wait_for(self, deadline):
+                while time.monotonic() < deadline:
+                    self._ev.wait(0.05)
+    """)
+    assert errs == []
+
+
+# --------------------------------------------- repolint thread opt-in -------
+
+
+def _thread_repo(tmp_path, src):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "mod.py").write_text(textwrap.dedent(src))
+    return str(tmp_path)
+
+
+def test_repolint_catches_unannotated_thread(tmp_path):
+    """Mutation: a future module spawning a thread without opting into the
+    contract must fail lint — the TopicFleet guard rail."""
+    root = _thread_repo(tmp_path, """
+        import threading
+
+        class Fleet:
+            def start(self):
+                self._t = threading.Thread(target=self._route)
+                self._t.start()
+    """)
+    errs = [f for f in repolint.check_thread_conventions(root)
+            if f.severity == report.ERROR]
+    assert len(errs) == 1
+    assert "class Fleet" in errs[0].message
+    assert "_GUARDED_BY" in errs[0].message
+    assert errs[0].location.startswith(os.path.join("src", "repro"))
+
+
+def test_repolint_catches_module_level_thread(tmp_path):
+    root = _thread_repo(tmp_path, """
+        import threading
+
+        t = threading.Thread(target=print)
+    """)
+    errs = [f for f in repolint.check_thread_conventions(root)
+            if f.severity == report.ERROR]
+    assert len(errs) == 1 and "module scope" in errs[0].message
+
+
+def test_repolint_annotated_thread_is_clean(tmp_path):
+    root = _thread_repo(tmp_path, """
+        import threading
+
+        class Fleet:
+            _GUARDED_BY = {}
+
+            def start(self):
+                self._t = threading.Thread(target=self._route)
+                self._t.start()
+    """)
+    findings = repolint.check_thread_conventions(root)
+    assert [f.severity for f in findings] == [report.INFO]
+
+
+def test_repolint_real_repo_thread_contract_clean():
+    findings = repolint.check_thread_conventions(REPO)
+    errs = [f for f in findings if f.severity == report.ERROR]
+    assert errs == [], [f.message for f in errs]
+
+
+# --------------------------------------------------- CLI acceptance ---------
+
+
+def _run_cli(argv, timeout=120):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, *argv], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+
+
+def test_preflight_cli_concurrency_pass_fast_and_threadless():
+    """Acceptance: `--passes concurrency` exits 0 in <5s having started
+    zero threads (it never builds a session or imports the serving code)."""
+    t0 = time.monotonic()
+    proc = _run_cli(["-m", "repro.analysis.preflight",
+                     "--passes", "concurrency", "--json"])
+    wall = time.monotonic() - t0
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert wall < 5.0, f"concurrency pass took {wall:.1f}s"
+    doc = json.loads(proc.stdout)
+    assert doc["ok"] is True
+    assert [p["pass"] for p in doc["passes"]] == ["concurrency"]
+    checks = {f["check"] for p in doc["passes"] for f in p["findings"]}
+    assert {"concurrency.guards", "concurrency.lock-order",
+            "concurrency.lifecycle", "concurrency.wait-notify"} <= checks
+
+
+def test_serve_preflight_gate():
+    """launch/serve.py --preflight parity: runs concurrency + lint and
+    exits before building an engine (no warmup/bench output)."""
+    proc = _run_cli(["-m", "repro.launch.serve", "--preflight"])
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert "[preflight] OK" in proc.stdout
+    assert "concurrency" in proc.stdout and "lint" in proc.stdout
+    assert "QPS" not in proc.stdout            # the load driver never ran

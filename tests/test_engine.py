@@ -215,6 +215,69 @@ def test_hot_swap_under_concurrent_submits():
         assert (np.diff(r.feature_weights) <= 1e-7).all()
 
 
+@pytest.mark.concurrency
+def test_swap_mid_flush_keeps_batch_on_one_version():
+    """Torn-batch regression: a swap published while a batch is on-device
+    must not split the batch across versions — every response of one flush
+    carries exactly the version whose model ran it (the engine reads its
+    (model, version) reference once per batch, so the pair can't tear)."""
+    clock = FakeClock()
+    model_b = _model(seed=9)
+    eng = _engine(clock)
+    eng.swap_model(_model(seed=0), version=100)
+
+    real_infer = eng._infer
+
+    def swapping_infer(model, q, seed):
+        # worst-case interleaving, made deterministic: the new model is
+        # published after the flush claimed its reference
+        eng.swap_model(model_b, version=200)
+        return real_infer(model, q, seed)
+
+    eng._infer = swapping_infer
+    futs = [eng.submit([1, 2, 3]), eng.submit([4, 5])]  # one bucket-4 batch
+    eng.flush_all()
+    versions = {f.result(timeout=5).model_version for f in futs}
+    assert versions == {100}          # no torn batch: one version, the old one
+
+    eng._infer = real_infer
+    out = eng.infer([[1, 2]])         # the NEXT batch sees the swap
+    assert out[0].model_version == 200
+    assert eng.stats().model_version == 200
+
+
+@pytest.mark.concurrency
+def test_close_during_inflight_flush_resolves_all_futures():
+    """close() racing an in-flight flush: the gate blocks a batch on-device,
+    close() runs concurrently, and every future — in-flight and still
+    queued — must resolve (no strand, no deadlock)."""
+    entered, release = threading.Event(), threading.Event()
+    eng = TopicEngine(_model(), buckets=(4,), max_batch=2, n_iters=1,
+                      n_trials=1, top_n=3, max_delay_ms=0.0)
+    real_infer = eng._infer
+
+    def gated(model, q, seed):
+        entered.set()
+        assert release.wait(timeout=30)
+        return real_infer(model, q, seed)
+
+    eng._infer = gated
+    f1 = eng.submit([1, 2])
+    f2 = eng.submit([3, 4])           # full bucket-4 batch → flushes now
+    assert entered.wait(timeout=30)   # batch is "on device", blocked in gate
+    f3 = eng.submit([5, 6])           # still queued behind the gated batch
+
+    closer = threading.Thread(target=eng.close)
+    closer.start()
+    release.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive()      # close() came back
+    for f in (f1, f2, f3):
+        r = f.result(timeout=10)      # nothing stranded
+        assert np.isfinite(r.pkd).all()
+        assert r.model_version == 0
+
+
 # ---------------------------------------------------------------- stats
 
 def test_stats_counters_and_reset():

@@ -353,7 +353,7 @@ report = pf.run_preflight(pf.SessionSpec(), compile_hlo=True)
 assert report.ok, report.render()
 doc = json.loads(report.to_json())
 assert [p["pass"] for p in doc["passes"]] == \\
-    ["sharding", "vmem", "determinism", "lint"]
+    ["sharding", "vmem", "determinism", "concurrency", "lint"]
 sharding = doc["session"]["sharding"]
 assert sharding["ppermute_traced"] == sharding["ppermute_expected"] == 12
 assert sharding["folded_bytes"]["collective-permute"] > 0
@@ -364,7 +364,7 @@ print("PREFLIGHT_OK")
 
 
 def test_full_preflight_clean_repo(subproc):
-    """The unmodified repo passes all four passes, budgets included."""
+    """The unmodified repo passes all five passes, budgets included."""
     out = subproc(FULL_PREFLIGHT_CODE, n_devices=4, timeout=600)
     assert "PREFLIGHT_OK" in out, out
 
@@ -386,7 +386,7 @@ def test_preflight_cli_json():
     doc = json.loads(proc.stdout)
     assert doc["ok"] is True
     assert {p["pass"] for p in doc["passes"]} == \
-        {"sharding", "vmem", "determinism", "lint"}
+        {"sharding", "vmem", "determinism", "concurrency", "lint"}
 
 
 def test_preflight_cli_rejects_unknown_pass():
