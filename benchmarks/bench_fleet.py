@@ -1,0 +1,191 @@
+"""Serving fleet bench — DESIGN.md §13 (fleet-of-4 vs a single engine).
+
+Open-loop Poisson offered-load ladder against (a) one bare ``TopicEngine``
+and (b) a ``TopicFleet`` of 4 replicas with the hot-query result cache, on
+the SAME model, shape grid and Zipf(1.0) query mix. **Sustained QPS** is the
+highest ladder level whose end-to-end deadline-miss rate stays within the
+budget (p99 story, not mean throughput) — the honest serving metric, since
+an open loop exposes queueing collapse instead of hiding it behind
+submit-wait-repeat.
+
+What the fleet buys on the host mesh: the cache absorbs the power-law head
+(Zipf(1.0) over a 512-query pool concentrates ~70% of traffic in the warm
+head) so the engines spend their batch capacity on the tail, and 4 replicas
+drain that tail concurrently. Host-CPU caveat recorded in the JSON: the
+replicas share the same cores, so the speedup here prices cache + routing +
+queueing, not the N× device bandwidth a real pod adds.
+
+Writes ``BENCH_fleet.json``; acceptance (ISSUE 9): fleet sustained ≥ 2.5×
+single-engine sustained at the same miss budget, cache hit-rate ≥ 60%.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+BENCH_OUT = "BENCH_fleet.json"
+
+# 200 ms budget: the widest-bucket full-batch service time on host CPU is
+# ~50 ms, so a 50 ms deadline is infeasible at ANY load — the budget must
+# price queueing, not the floor. Both configs run the same budget.
+DEADLINE_MS = 200.0
+MISS_BUDGET = 0.01          # ≤1% deadline misses = "sustained"
+# pool ≫ cache capacity (~1.2k entries/MB): the cache holds the Zipf head,
+# the tail genuinely misses — a pool the cache can swallow whole would
+# degenerate to a 100% hit rate and bench the driver loop, not the fleet
+ZIPF_POOL = 4096
+CACHE_MB = 1.0
+LADDER = (35, 50, 70, 100, 140, 200, 280, 400, 560, 800, 1120, 1600,
+          2240, 3200, 4480, 6400, 9000, 12800)
+
+
+def _quick() -> bool:
+    return bool(os.environ.get("BENCH_QUICK"))
+
+
+def _drive(target, traffic, qps: float, duration_s: float, seed: int):
+    """One open-loop Poisson level; returns (miss_rate, p99_ms, achieved_qps,
+    n_shed).
+
+    Requests ride best-effort (``deadline_ms=None`` → ``max_delay_ms``
+    batching slack) and the 200 ms budget is judged from MEASURED latency.
+    Submitting the budget as the per-request deadline would make the engine
+    deliberately batch right up to it (flush slack = deadline − EWMA est),
+    pinning p99 ≈ deadline at every load — the miss rate would then measure
+    EWMA prediction error, not capacity, and no ladder level distinguishes
+    an idle system from a saturated one.
+    """
+    import numpy as np
+
+    from repro.serving import ShedResponse
+
+    n = max(1, int(qps * duration_s))
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(traffic), size=n)   # traffic is pre-weighted
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, size=n))
+    futs = []
+    t0 = time.monotonic()
+    for i in range(n):
+        lag = t0 + arrivals[i] - time.monotonic()
+        if lag > 0:
+            time.sleep(lag)
+        futs.append(target.submit(traffic[idx[i]]))
+    results = [f.result(timeout=120) for f in futs]
+    wall = time.monotonic() - t0
+    responses = [r for r in results if not isinstance(r, ShedResponse)]
+    n_shed = len(results) - len(responses)
+    if not responses:
+        return 1.0, float("inf"), 0.0, n_shed
+    lat = np.array([r.latency_ms for r in responses])
+    # sheds count against the budget: a rejected request is not "served
+    # within deadline" — without this a shedding fleet would bench as fast
+    miss = (int((lat > DEADLINE_MS).sum()) + n_shed) / len(results)
+    return float(miss), float(np.quantile(lat, 0.99)), len(results) / wall, \
+        n_shed
+
+
+def _sustained(target, traffic, duration_s: float, label: str):
+    """Walk the ladder; return the record of the last level within budget."""
+    best = None
+    for li, qps in enumerate(LADDER):
+        target.reset_stats()
+        # low levels stretch the window so the p99 has ≥~150 samples behind
+        # it — 1.5 s at 50 qps would make the tail a coin flip
+        window_s = max(duration_s, 150.0 / qps)
+        miss, p99, achieved, n_shed = _drive(
+            target, traffic, qps, window_s, seed=100 + li)
+        st = target.stats()
+        hit_rate = getattr(st, "hit_rate", None)    # fleet-only
+        print(f"# fleet: {label} offered {qps} → achieved {achieved:,.0f} "
+              f"qps, p99 {p99:.1f} ms, miss {miss:.2%}"
+              + (f", hit {hit_rate:.1%}" if hit_rate is not None else ""),
+              flush=True)
+        level = {"offered_qps": qps, "achieved_qps": achieved,
+                 "p99_ms": p99, "miss_rate": miss, "shed": n_shed,
+                 "hit_rate": hit_rate}
+        if miss <= MISS_BUDGET:
+            best = level
+        else:
+            break
+        if achieved < 0.8 * qps:
+            break               # the driver itself saturated: stop climbing
+    if best is None:            # never met the budget, even at the floor
+        return {"offered_qps": 0, "achieved_qps": 0.0,
+                "p99_ms": level["p99_ms"], "miss_rate": level["miss_rate"],
+                "shed": level["shed"], "hit_rate": level["hit_rate"]}
+    return best
+
+
+def run():
+    import numpy as np
+
+    from repro.launch.serve import build_model, make_zipf_traffic, \
+        warm_shape_grid
+    from repro.serving import TopicEngine, TopicFleet
+
+    quick = _quick()
+    topics, vocab = (16, 300) if quick else (32, 600)
+    batch = 64 if quick else 128
+    buckets = (4, 8, 16) if quick else (8, 16, 32, 64)
+    duration_s = 1.0 if quick else 1.5
+    pool = 1024 if quick else ZIPF_POOL
+    cache_mb = 0.5 if quick else CACHE_MB
+
+    model, _ = build_model(topics, vocab, train_iters=10 if quick else 25)
+    # ~4x the pool: the Zipf weighting is baked into the sample so _drive
+    # can index uniformly
+    traffic = make_zipf_traffic(4 * pool, pool, vocab, buckets, seed=1)
+
+    single = TopicEngine(model, buckets=buckets, max_batch=batch, n_trials=2)
+    warm_shape_grid(single, buckets, batch, vocab)
+    s_rec = _sustained(single, traffic, duration_s, "single")
+    single.close()
+
+    fleet = TopicFleet(model, n_replicas=4, buckets=buckets, max_batch=batch,
+                       n_trials=2, cache_mb=cache_mb, shed=False,
+                       deadline_budget_ms=DEADLINE_MS)
+    warm_shape_grid(fleet, buckets, batch, vocab)
+    fleet.cache.clear()          # the ladder itself warms the cache
+    f_rec = _sustained(fleet, traffic, duration_s, "fleet4")
+    hit_rate = f_rec["hit_rate"] or 0.0   # at the sustained level
+    routed = list(fleet.stats().routed)
+    fleet.close()
+
+    speedup = (f_rec["offered_qps"] / s_rec["offered_qps"]
+               if s_rec["offered_qps"] else float("inf"))
+    record = {
+        "bench": "fleet",
+        "deadline_ms": DEADLINE_MS,
+        "miss_budget": MISS_BUDGET,
+        "zipf_pool": pool,
+        "zipf_s": 1.0,
+        "replicas": 4,
+        "cache_mb": cache_mb,
+        "single": s_rec,
+        "fleet4": f_rec,
+        "fleet_vs_single_sustained": round(speedup, 2),
+        "cache_hit_rate": round(hit_rate, 4),
+        "routed": routed,
+        "host_cpu_caveat": "replicas share host cores; speedup prices "
+                           "cache + routing + queueing, not device count",
+        "acceptance": {
+            "sustained_speedup_ge_2p5": speedup >= 2.5,
+            "hit_rate_ge_0p6": hit_rate >= 0.6,
+        },
+    }
+    with open(BENCH_OUT, "w") as f:
+        json.dump(record, f, indent=2)
+    return [
+        ("serve_single_sustained", 1e6 / max(s_rec["offered_qps"], 1e-9),
+         f"qps={s_rec['offered_qps']} p99={s_rec['p99_ms']:.1f}ms"),
+        ("serve_fleet4_sustained", 1e6 / max(f_rec["offered_qps"], 1e-9),
+         f"qps={f_rec['offered_qps']} p99={f_rec['p99_ms']:.1f}ms"),
+        ("serve_fleet4_speedup", speedup * 1e3, f"{speedup:.2f}x"),
+        ("serve_fleet4_cache_hit", hit_rate * 1e3, f"{hit_rate:.1%}"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(*row, sep=",")

@@ -43,6 +43,7 @@ MODULES = [
     ("data", "benchmarks.bench_data", "Fig 3/4"),
     ("sampler", "benchmarks.bench_sampler", "§9 alias-MH"),
     ("shard", "benchmarks.bench_shard", "§10 model parallel"),
+    ("fleet", "benchmarks.bench_fleet", "§13 serving fleet"),
 ]
 
 

@@ -10,6 +10,7 @@
 #   scripts/tier1.sh shard    # word-sharded model-parallel conformance (-m shard)
 #   scripts/tier1.sh preflight # static-analysis launch gate (-m preflight)
 #   scripts/tier1.sh concurrency # thread-contract analyzer + interleaving (-m concurrency)
+#   scripts/tier1.sh fleet    # multi-replica fleet: routing/shedding/cache (-m fleet)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 case "${1:-}" in
@@ -34,5 +35,8 @@ case "${1:-}" in
     concurrency)
         shift
         exec python -m pytest -x -q -m concurrency "$@";;
+    fleet)
+        shift
+        exec python -m pytest -x -q -m fleet "$@";;
 esac
 exec python -m pytest -x -q "$@"

@@ -13,12 +13,23 @@ either complete (manifest + payload present — :func:`io.is_complete` is the
 completeness marker) or invisible; a crash mid-publish never strands a
 half-written model in front of a serving fleet.
 
+**Delta snapshots**: at paper scale Φ is V×K ≈ 10⁵×10⁵ — full publishes
+would stall the fleet's refresh cadence on serialization alone, while one
+epoch of Gibbs sweeps touches only the rows whose words appeared in the
+shard. :func:`save_delta_snapshot` writes just the changed Φ rows plus the
+(small) alpha/r_topic/r_value vectors, with a ``base_version`` pointer in
+the manifest; :func:`load_snapshot` transparently reconstructs the full
+model by walking the base chain (bounded by the publisher's ``full_every``
+fallback cadence). :func:`rotate_snapshots` keeps base versions alive
+transitively — a delta whose base was rotated away would be unservable.
+
 This module sits in ``repro.checkpoint`` — not training, not serving — so
 the training side can write and the serving side can read without either
 importing the other.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import shutil
@@ -27,9 +38,11 @@ from typing import List, Optional
 from repro.checkpoint import io
 
 _SNAP_RE = re.compile(r"v_(\d+)")
-# dict payload (not the RTLDAModel dataclass) so readers can build the
+# dict payloads (not the RTLDAModel dataclass) so readers can build the
 # ``like`` tree without knowing leaf shapes up front
 _LIKE = {"pvk": 0, "alpha": 0, "r_topic": 0, "r_value": 0}
+_DELTA_LIKE = {"row_idx": 0, "rows": 0,
+               "alpha": 0, "r_topic": 0, "r_value": 0}
 
 
 def snapshot_path(root: str, version: int) -> str:
@@ -67,10 +80,53 @@ def save_snapshot(root: str, version: int, model, meta: dict | None = None
     return path
 
 
+def save_delta_snapshot(root: str, version: int, model, base_version: int,
+                        base_pvk, meta: dict | None = None) -> str:
+    """Atomically publish only the Φ rows that changed against
+    ``base_pvk`` (the payload of ``base_version``). The small per-topic /
+    per-word vectors ship in full — they are O(V+K), the matrix is O(V·K).
+    The manifest records ``meta["delta"] = {base_version, n_rows,
+    n_rows_total}`` so readers (and rotation) can walk the base chain.
+
+    Raises ``ValueError`` on a Φ shape change (topic count moved under
+    dedup/merge) — the caller must fall back to a full snapshot.
+    """
+    import numpy as np
+
+    new = np.asarray(model.pvk)
+    base = np.asarray(base_pvk)
+    if new.shape != base.shape:
+        raise ValueError(
+            f"delta base shape {base.shape} != new shape {new.shape}; "
+            "publish a full snapshot instead")
+    row_idx = np.flatnonzero(np.any(new != base, axis=1)).astype(np.int32)
+    meta = dict(meta or {})
+    meta["version"] = int(version)
+    meta["delta"] = {"base_version": int(base_version),
+                     "n_rows": int(row_idx.size),
+                     "n_rows_total": int(new.shape[0])}
+    tree = {"row_idx": row_idx, "rows": new[row_idx],
+            "alpha": model.alpha, "r_topic": model.r_topic,
+            "r_value": model.r_value}
+    path = snapshot_path(root, version)
+    io.save(path, tree, meta)
+    return path
+
+
+def read_meta(root: str, version: int) -> dict:
+    """Manifest ``meta`` of one complete snapshot (cheap: no payload read)."""
+    with open(os.path.join(snapshot_path(root, version), io.MANIFEST)) as f:
+        return json.load(f)["meta"]
+
+
 def load_snapshot(root: str, version: Optional[int] = None):
     """Load one published model. Returns ``(RTLDAModel, meta)``; ``version``
-    defaults to the latest complete snapshot."""
+    defaults to the latest complete snapshot. Delta snapshots are resolved
+    transparently: the base chain is walked (depth bounded by the
+    publisher's full-snapshot cadence) and changed rows are applied over
+    the reconstructed base — callers never see the difference."""
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.core.rtlda import RTLDAModel
 
@@ -78,20 +134,54 @@ def load_snapshot(root: str, version: Optional[int] = None):
         version = latest_version(root)
         if version is None:
             raise FileNotFoundError(f"no complete snapshots under {root}")
-    tree, meta = io.load(snapshot_path(root, version), _LIKE)
+    meta = read_meta(root, version)
+    if "delta" not in meta:
+        tree, meta = io.load(snapshot_path(root, version), _LIKE)
+        model = RTLDAModel(
+            pvk=jnp.asarray(tree["pvk"]), alpha=jnp.asarray(tree["alpha"]),
+            r_topic=jnp.asarray(tree["r_topic"]),
+            r_value=jnp.asarray(tree["r_value"]))
+        return model, meta
+    base_version = int(meta["delta"]["base_version"])
+    if not io.is_complete(snapshot_path(root, base_version)):
+        raise FileNotFoundError(
+            f"delta snapshot v_{version:06d} needs base v_{base_version:06d} "
+            f"which is missing under {root} (rotated without its delta?)")
+    base_model, _ = load_snapshot(root, base_version)
+    tree, meta = io.load(snapshot_path(root, version), _DELTA_LIKE)
+    pvk = np.array(base_model.pvk)          # writable copy of the base Φ
+    pvk[tree["row_idx"]] = tree["rows"]
     model = RTLDAModel(
-        pvk=jnp.asarray(tree["pvk"]), alpha=jnp.asarray(tree["alpha"]),
+        pvk=jnp.asarray(pvk), alpha=jnp.asarray(tree["alpha"]),
         r_topic=jnp.asarray(tree["r_topic"]),
         r_value=jnp.asarray(tree["r_value"]))
     return model, meta
 
 
 def rotate_snapshots(root: str, keep: int) -> List[int]:
-    """Delete all but the newest ``keep`` versions; returns deleted versions.
-    Readers tolerate this: a version vanishing mid-poll just re-resolves to
-    the (newer) latest."""
+    """Delete all but the newest ``keep`` versions — plus, transitively, any
+    older version still referenced as a delta base by a kept one (deleting a
+    base would strand every delta built on it). Returns deleted versions.
+    Readers tolerate rotation: a version vanishing mid-poll just re-resolves
+    to the (newer) latest."""
     versions = snapshot_versions(root)
-    drop = versions[: max(0, len(versions) - keep)] if keep > 0 else []
+    if keep <= 0:
+        return []
+    present = set(versions)
+    keepset = set(versions[-keep:])
+    frontier = list(keepset)
+    while frontier:
+        try:
+            meta = read_meta(root, frontier.pop())
+        except OSError:
+            continue                 # raced a concurrent rotation; harmless
+        delta = meta.get("delta")
+        if delta is not None:
+            base = int(delta["base_version"])
+            if base in present and base not in keepset:
+                keepset.add(base)
+                frontier.append(base)
+    drop = [v for v in versions if v not in keepset]
     for v in drop:
         shutil.rmtree(snapshot_path(root, v), ignore_errors=True)
     return drop

@@ -1,13 +1,19 @@
-"""RT-LDA serving: async deadline-aware engine + legacy sync facade.
+"""RT-LDA serving: async deadline-aware engine + fleet front + sync facade.
 
 DESIGN.md §3.5: queue → bucketer → compiled programs → futures.
 The SnapshotWatcher closes the publish pipeline (DESIGN.md §4): it feeds
 ``ModelPublisher`` snapshots into ``TopicEngine.swap_model`` live.
+DESIGN.md §13: ``TopicFleet`` fronts N engine replicas with routing,
+admission control and a version-tagged hot-query ``ResultCache``.
 """
+from repro.serving.cache import ResultCache
 from repro.serving.engine import TopicEngine
-from repro.serving.protocol import EngineStats, Request, Response
+from repro.serving.fleet import TopicFleet
+from repro.serving.protocol import (EngineStats, FleetStats, Request,
+                                    Response, ShedResponse)
 from repro.serving.server import BatchingServer
 from repro.serving.watcher import SnapshotWatcher
 
-__all__ = ["TopicEngine", "EngineStats", "Request", "Response",
-           "BatchingServer", "SnapshotWatcher"]
+__all__ = ["TopicEngine", "TopicFleet", "ResultCache",
+           "EngineStats", "FleetStats", "Request", "Response",
+           "ShedResponse", "BatchingServer", "SnapshotWatcher"]

@@ -33,6 +33,7 @@ tested without sleeping.
 from __future__ import annotations
 
 import collections
+import functools
 import threading
 import time
 from concurrent.futures import Future
@@ -76,6 +77,8 @@ class TopicEngine:
                  n_iters: int = 5, n_trials: int = 2, top_n: int = 30,
                  max_delay_ms: float = 5.0,
                  service_estimate_ms: float = 2.0,
+                 infer_fn=None,
+                 chunk_long: bool = True,
                  clock=time.monotonic,
                  start: bool = True):
         if not buckets:
@@ -83,12 +86,17 @@ class TopicEngine:
         self.buckets: Tuple[int, ...] = tuple(sorted(int(b) for b in buckets))
         self.max_batch = int(max_batch)
         self.max_delay_ms = float(max_delay_ms)
+        self.chunk_long = bool(chunk_long)
         # (model, version) live in ONE reference so a single unlocked read
         # yields a consistent pair — two separate fields could tear between
         # a flush reading the model and stamping the version
         self._model_ref = (model, 0)  # atomic: single-reference publish; flush + stats snapshot the (model, version) pair with one read, swap_model replaces the whole tuple under _cv
-        self._infer = features.make_serving_fn(
-            n_iters=n_iters, n_trials=n_trials, top_n=top_n)
+        # ``infer_fn`` lets a fleet of replicas share ONE jitted program grid
+        # (the executables are keyed on shapes, not on the engine instance) —
+        # N replicas then pay one compile per shape, not N
+        self._infer = infer_fn if infer_fn is not None else \
+            features.make_serving_fn(
+                n_iters=n_iters, n_trials=n_trials, top_n=top_n)
         self._clock = clock
 
         self._cv = threading.Condition()
@@ -120,8 +128,19 @@ class TopicEngine:
     # ------------------------------------------------------------------ API
 
     def submit(self, tokens, deadline_ms: Optional[float] = None) -> Future:
-        """Enqueue one query; resolves to a :class:`Response`."""
+        """Enqueue one query; resolves to a :class:`Response`.
+
+        Queries longer than the widest bucket are **continuously batched**
+        (``chunk_long``, default on): split into widest-bucket chunks that
+        ride the normal batching path as sub-batches, with the results
+        folded back into ONE response — no token is ever silently dropped
+        and ``truncated`` stays False. Engine counters count the chunks
+        (they are what the device actually ran); the folded parent is the
+        caller-visible unit.
+        """
         toks = np.asarray(tokens, np.int32).reshape(-1)
+        if self.chunk_long and len(toks) > self.buckets[-1]:
+            return self._submit_chunked(toks, deadline_ms)
         now = self._clock()
         bucket, truncated = select_bucket(len(toks), self.buckets)
         with self._cv:
@@ -140,6 +159,92 @@ class TopicEngine:
                 (req, fut, now + slack_ms / 1e3, truncated))
             self._cv.notify()
         return fut
+
+    def _submit_chunked(self, toks: np.ndarray,
+                        deadline_ms: Optional[float]) -> Future:
+        """Continuous batching for over-long queries: widest-bucket chunks
+        submitted as ordinary sub-batches, folded into one Response when the
+        last chunk lands. The parent future resolves with the fold (or the
+        first chunk failure); cancelling the parent abandons the fold but
+        never the chunks (they still count in engine stats)."""
+        widest = self.buckets[-1]
+        chunks = [toks[i:i + widest] for i in range(0, len(toks), widest)]
+        arrival = self._clock()
+        parent: Future = Future()
+        fold_lock = threading.Lock()   # guards the fold state below only
+        state = {"left": len(chunks), "parts": [None] * len(chunks),
+                 "failed": False}
+
+        def on_chunk_done(i: int, fut: Future) -> None:
+            # fut is done — result()/exception() below never block
+            exc = fut.exception() if not fut.cancelled() else \
+                RuntimeError("sub-batch cancelled")
+            if exc is not None:
+                with fold_lock:
+                    first = not state["failed"]
+                    state["failed"] = True
+                if first and parent.set_running_or_notify_cancel():
+                    parent.set_exception(exc)
+                return
+            with fold_lock:
+                state["parts"][i] = fut.result()
+                state["left"] -= 1
+                ready = state["left"] == 0 and not state["failed"]
+            if ready:
+                resp = self._fold_chunks(state["parts"], toks, arrival,
+                                         deadline_ms)
+                if parent.set_running_or_notify_cancel():
+                    parent.set_result(resp)
+
+        futs = [self.submit(c, deadline_ms) for c in chunks]
+        for i, f in enumerate(futs):
+            f.add_done_callback(functools.partial(on_chunk_done, i))
+        return parent
+
+    def _fold_chunks(self, parts: List[Response], toks: np.ndarray,
+                     arrival: float,
+                     deadline_ms: Optional[float]) -> Response:
+        """Fold chunk responses into one: P(k|d) is the token-count-weighted
+        mixture (renormalized), Eq.-5 features merge by summing each id's
+        weight across chunks and re-taking the top-n."""
+        lengths = np.asarray(self._chunk_lengths(len(toks)), np.float64)
+        w_chunk = lengths / lengths.sum()
+        pkd = np.zeros_like(np.asarray(parts[0].pkd, np.float64))
+        for wc, p in zip(w_chunk, parts):
+            pkd = pkd + wc * np.asarray(p.pkd, np.float64)
+        s = pkd.sum()
+        if s > 0:
+            pkd = pkd / s
+        top_n = int(parts[0].feature_ids.shape[0])
+        merged: Dict[int, float] = {}
+        for wc, p in zip(w_chunk, parts):
+            for fid, fw in zip(np.asarray(p.feature_ids),
+                               np.asarray(p.feature_weights)):
+                if fid >= 0:
+                    merged[int(fid)] = merged.get(int(fid), 0.0) \
+                        + float(wc) * float(fw)
+        ranked = sorted(merged.items(), key=lambda kv: (-kv[1], kv[0]))
+        ids = np.full((top_n,), -1, np.int32)
+        ws = np.zeros((top_n,), np.float32)
+        for j, (fid, fw) in enumerate(ranked[:top_n]):
+            ids[j], ws[j] = fid, fw
+        latency_ms = (self._clock() - arrival) * 1e3
+        versions = {p.model_version for p in parts}
+        # chunks that straddled a hot-swap ran on mixed models: the fold has
+        # no single version (None) — a result cache must not admit it
+        model_version = versions.pop() if len(versions) == 1 else None
+        return Response(
+            request_id=parts[0].request_id,
+            pkd=pkd.astype(np.float32), feature_ids=ids, feature_weights=ws,
+            bucket=int(self.buckets[-1]), truncated=False,
+            latency_ms=latency_ms,
+            deadline_missed=(deadline_ms is not None
+                             and latency_ms > deadline_ms),
+            model_version=model_version)
+
+    def _chunk_lengths(self, n: int) -> List[int]:
+        widest = self.buckets[-1]
+        return [min(widest, n - i) for i in range(0, n, widest)]
 
     def infer(self, requests: Sequence, deadline_ms: Optional[float] = None
               ) -> List[Response]:
@@ -164,6 +269,21 @@ class TopicEngine:
                 prev = self._model_ref[1]
                 version = (prev + 1) if isinstance(prev, int) else 0
             self._model_ref = (model, version)
+
+    @property
+    def model_version(self):
+        """Version label of the live model — ONE lock-free read of the
+        published ``(model, version)`` reference, cheap enough for a router
+        to consult on every request."""
+        return self._model_ref[1]
+
+    def route_state(self) -> Dict[int, Tuple[int, float]]:
+        """Cheap routing snapshot for a fleet front: per shape bucket, the
+        queue depth and the EWMA service estimate (ms). One short critical
+        section — no percentile math, unlike :meth:`stats`."""
+        with self._cv:
+            return {b: (len(self._pending[b]), self._est_ms[b])
+                    for b in self.buckets}
 
     def stats(self) -> EngineStats:
         with self._cv:

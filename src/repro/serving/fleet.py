@@ -1,0 +1,416 @@
+"""``TopicFleet`` — routed, cached, load-shedding serving across N replicas.
+
+Peacock serves hundreds of millions of users from fleets of backend
+inference servers (§3.2, Fig. 5A); one :class:`TopicEngine` behind one
+:class:`SnapshotWatcher` is a single replica of that story. The fleet front
+owns N engine replicas and exposes the *same* ``submit(tokens, deadline_ms)
+-> Future`` surface as one engine, with three mechanisms between the caller
+and the devices:
+
+* **Routing** — occupancy- and deadline-aware replica selection, not
+  round-robin. Each engine exports a cheap :meth:`TopicEngine.route_state`
+  snapshot (per-bucket queue depth + EWMA service estimate); the router
+  scores every replica's *predicted completion* for the request's shape
+  bucket — full batches already queued ahead cost whole service quanta, a
+  forming partial batch is a discount (the request tops it off and rides a
+  flush that is coming anyway) — and picks the minimum, deterministically
+  (lowest index wins ties, which is what the fake-clock tests pin).
+* **Admission control / load shedding** — the fleet tracks a live p99
+  estimate over engine-served completions. When p99 slack (deadline budget −
+  p99 estimate) goes negative the fleet flips to *shedding* and resolves
+  new submissions immediately with a typed :class:`ShedResponse` instead of
+  queueing them into guaranteed misses. Hysteresis prevents flap: shedding
+  exits only when p99 drops below ``budget · (1 − hysteresis)``, and every
+  ``probe_every``-th request is admitted as a probe so the estimate can
+  actually observe recovery (shed-everything would freeze the estimator at
+  its panic value forever).
+* **Hot-query result cache** — query traffic is power-law, so a
+  :class:`ResultCache` (segmented LRU, byte-budgeted) serves the repeating
+  head while the engines batch the long tail. Entries are keyed on
+  ``(token bytes, bucket)`` and version-tagged: a hit is only legal while
+  the entry's ``model_version`` equals the *fleet-wide live version* (the
+  min over replicas' lock-free version reads), so a cached result can never
+  cross a snapshot hot-swap — mid-rollout (replicas briefly divergent) the
+  fleet conservatively serves misses rather than risk staleness. Every hit
+  still stamps ``Response.model_version`` (and ``cached=True``).
+
+Snapshot fan-out: :meth:`attach_watchers` gives every replica its own
+:class:`SnapshotWatcher` on the shared snapshot directory, so a publish
+rolls across the fleet within one poll interval with zero dropped requests
+(each engine's swap atomicity does the per-replica work); the watcher's
+``on_swap`` hook eagerly drops newly-stale cache entries.
+
+Concurrency contract (checked by ``repro.analysis.concurrency``): all fleet
+counters and the shed state machine live under ``_lock``; the fleet never
+holds ``_lock`` while calling into an engine, a watcher or the cache (each
+has its own lock — no nesting, no fleet edge in the lock-order graph), and
+completion bookkeeping runs in the engines' callback threads through the
+same guarded paths as submitters.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import features
+from repro.core.rtlda import DEFAULT_BUCKETS, RTLDAModel, select_bucket
+from repro.serving.cache import ResultCache
+from repro.serving.engine import TopicEngine
+from repro.serving.protocol import (FleetStats, Response, ShedResponse,
+                                    percentiles)
+from repro.serving.watcher import SnapshotWatcher
+
+_LAT_WINDOW = 2048    # fleet-level latency window (p50/p99 + shed estimate)
+_P99_EVERY = 32       # recompute the shed p99 estimate every N completions
+
+
+class TopicFleet:
+    """N ``TopicEngine`` replicas behind one ``submit`` — routing, admission
+    control and a hot-query cache between callers and the devices."""
+
+    # concurrency contract: every mutable fleet field is written from both
+    # submitter threads and the engines' completion-callback threads
+    _GUARDED_BY = {
+        "_n_submitted": "_lock", "_n_completed": "_lock",
+        "_n_failed": "_lock", "_n_shed": "_lock",
+        "_n_cache_hits": "_lock", "_n_cache_misses": "_lock",
+        "_lat_ms": "_lock", "_p99_est_ms": "_lock", "_shedding": "_lock",
+        "_since_probe": "_lock", "_since_p99": "_lock",
+        "_routed": "_lock", "_next_id": "_lock", "_t0": "_lock",
+        "_closed": "_lock",
+    }
+
+    def __init__(self, model: Optional[RTLDAModel] = None,
+                 n_replicas: int = 4, *,
+                 engines: Optional[Sequence[TopicEngine]] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_batch: int = 256,
+                 n_iters: int = 5, n_trials: int = 2, top_n: int = 30,
+                 max_delay_ms: float = 5.0,
+                 service_estimate_ms: float = 2.0,
+                 cache_mb: float = 64.0,
+                 cache: Optional[ResultCache] = None,
+                 shed: bool = True,
+                 deadline_budget_ms: float = 50.0,
+                 shed_hysteresis: float = 0.25,
+                 probe_every: int = 8,
+                 clock=time.monotonic,
+                 start: bool = True):
+        if engines is not None:
+            if not engines:
+                raise ValueError("need at least one engine replica")
+            self.engines: Tuple[TopicEngine, ...] = tuple(engines)
+        else:
+            if model is None:
+                raise ValueError("TopicFleet needs a model or engines=")
+            if n_replicas <= 0:
+                raise ValueError("n_replicas must be > 0")
+            # ONE shared jitted program grid: executables key on shapes, so
+            # N replicas pay one compile per (rows, bucket), not N
+            infer_fn = features.make_serving_fn(
+                n_iters=n_iters, n_trials=n_trials, top_n=top_n)
+            self.engines = tuple(
+                TopicEngine(model, buckets=buckets, max_batch=max_batch,
+                            max_delay_ms=max_delay_ms,
+                            service_estimate_ms=service_estimate_ms,
+                            infer_fn=infer_fn, clock=clock, start=start)
+                for _ in range(n_replicas))
+        self.buckets = self.engines[0].buckets
+        self.max_batch = self.engines[0].max_batch
+        self.shed = bool(shed)
+        self.deadline_budget_ms = float(deadline_budget_ms)
+        if not 0.0 < shed_hysteresis < 1.0:
+            raise ValueError("shed_hysteresis must be in (0, 1)")
+        self.shed_hysteresis = float(shed_hysteresis)
+        self.probe_every = max(2, int(probe_every))
+        if cache is not None:
+            self.cache: Optional[ResultCache] = cache
+        else:
+            self.cache = ResultCache(capacity_mb=cache_mb) \
+                if cache_mb > 0 else None
+        self._clock = clock
+        self._watchers: List[SnapshotWatcher] = []
+
+        self._lock = threading.Lock()
+        self._t0 = clock()
+        self._next_id = 0
+        self._n_submitted = 0
+        self._n_completed = 0
+        self._n_failed = 0
+        self._n_shed = 0
+        self._n_cache_hits = 0
+        self._n_cache_misses = 0
+        self._lat_ms = collections.deque(maxlen=_LAT_WINDOW)
+        self._p99_est_ms = 0.0
+        self._since_p99 = 0
+        self._shedding = False
+        self._since_probe = 0
+        self._routed = [0] * len(self.engines)
+        self._closed = False
+
+    # ----------------------------------------------------------------- API
+
+    def submit(self, tokens, deadline_ms: Optional[float] = None) -> Future:
+        """Same contract as ``TopicEngine.submit``: resolves to a
+        :class:`Response` — or, when admission control is shedding, to a
+        :class:`ShedResponse` immediately (reject-fast, never queue-to-miss).
+        """
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        now = self._clock()
+        bucket, _ = select_bucket(len(toks), self.buckets)
+        # over-widest queries are chunk-folded by the engine and may blend
+        # model versions across a swap — they bypass the cache entirely
+        cacheable = self.cache is not None and len(toks) <= self.buckets[-1]
+        key = (toks.tobytes(), bucket) if cacheable else None
+        live = self.live_version()
+
+        if key is not None:
+            entry = self.cache.get(key, live)
+            if entry is not None:
+                with self._lock:
+                    if self._closed:
+                        raise RuntimeError("TopicFleet is closed")
+                    self._n_submitted += 1
+                    self._n_cache_hits += 1
+                    rid = self._next_id
+                    self._next_id += 1
+                fut: Future = Future()
+                fut.set_result(Response(
+                    request_id=rid, pkd=entry.pkd,
+                    feature_ids=entry.feature_ids,
+                    feature_weights=entry.feature_weights,
+                    bucket=bucket, truncated=False,
+                    latency_ms=(self._clock() - now) * 1e3,
+                    deadline_missed=False,
+                    model_version=entry.version, cached=True))
+                return fut
+
+        budget = deadline_ms if deadline_ms is not None \
+            else self.deadline_budget_ms
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("TopicFleet is closed")
+            self._n_submitted += 1
+            if key is not None:
+                self._n_cache_misses += 1
+            rid = self._next_id
+            self._next_id += 1
+            shed_now = False
+            if self.shed and self._shedding:
+                self._since_probe += 1
+                # every probe_every-th request rides through so the p99
+                # estimate can observe recovery; the rest reject fast
+                shed_now = self._since_probe % self.probe_every != 0
+            if shed_now:
+                self._n_shed += 1
+                p99 = self._p99_est_ms
+        if shed_now:
+            fut = Future()
+            fut.set_result(ShedResponse(
+                request_id=rid, reason="p99-slack", p99_est_ms=p99,
+                deadline_ms=deadline_ms,
+                retry_after_ms=max(0.0, p99 - budget)))
+            return fut
+
+        idx = self._route(bucket, deadline_ms)
+        with self._lock:
+            self._routed[idx] += 1
+        efut = self.engines[idx].submit(toks, deadline_ms)
+        efut.add_done_callback(
+            functools.partial(self._on_engine_done, key))
+        return efut
+
+    def infer(self, requests: Sequence,
+              deadline_ms: Optional[float] = None) -> List[Response]:
+        """Sync convenience: submit all, drain every replica, return in
+        order (mirrors ``TopicEngine.infer``)."""
+        futs = [self.submit(r, deadline_ms) for r in requests]
+        self.flush_all()
+        return [f.result() for f in futs]
+
+    def swap_model(self, model: RTLDAModel, version=None) -> None:
+        """Broadcast a new model to every replica (manual path; production
+        uses :meth:`attach_watchers`). The cache drops stale entries once
+        the fleet-wide version converges."""
+        for eng in self.engines:
+            eng.swap_model(model, version=version)
+        live = self.live_version()
+        if self.cache is not None and live is not None:
+            self.cache.drop_stale(live)
+
+    def attach_watchers(self, snapshot_dir: str, poll_s: float = 0.5,
+                        start: bool = True) -> List[SnapshotWatcher]:
+        """Per-replica snapshot fan-out: one ``SnapshotWatcher`` per engine
+        on the shared snapshot dir. Returns the watchers (also kept for
+        :meth:`close`)."""
+        ws = []
+        for eng in self.engines:
+            w = SnapshotWatcher(snapshot_dir, eng, poll_s=poll_s,
+                                on_swap=self._on_swap)
+            if start:
+                w.start()
+            ws.append(w)
+        self._watchers.extend(ws)
+        return ws
+
+    def wait_for_version(self, version: int, timeout_s: float = 30.0) -> bool:
+        """Block until every replica's watcher has ``version`` (or newer)."""
+        return all(w.wait_for_version(version, timeout_s)
+                   for w in self._watchers)
+
+    def stats(self) -> FleetStats:
+        per = tuple(eng.stats() for eng in self.engines)   # outside _lock
+        cache_stats = self.cache.stats() if self.cache is not None else None
+        live = self.live_version()
+        with self._lock:
+            now = self._clock()
+            p50, p99 = percentiles(self._lat_ms)
+            elapsed = max(now - self._t0, 1e-9)
+            served = self._n_completed + self._n_cache_hits
+            lookups = self._n_cache_hits + self._n_cache_misses
+            return FleetStats(
+                submitted=self._n_submitted,
+                completed=self._n_completed,
+                shed=self._n_shed,
+                cache_hits=self._n_cache_hits,
+                cache_misses=self._n_cache_misses,
+                qps=served / elapsed,
+                p50_ms=p50, p99_ms=p99,
+                p99_est_ms=self._p99_est_ms,
+                hit_rate=self._n_cache_hits / lookups if lookups else 0.0,
+                shed_rate=(self._n_shed / self._n_submitted
+                           if self._n_submitted else 0.0),
+                shedding=self._shedding,
+                model_version=live,
+                routed=tuple(self._routed),
+                per_replica=per,
+                cache=cache_stats)
+
+    def reset_stats(self) -> None:
+        """Zero fleet counters/windows (after warmup); the shed state machine
+        and the cache contents are kept — they are operating state."""
+        for eng in self.engines:
+            eng.reset_stats()
+        with self._lock:
+            self._t0 = self._clock()
+            self._n_submitted = self._n_completed = self._n_failed = 0
+            self._n_shed = self._n_cache_hits = self._n_cache_misses = 0
+            self._lat_ms.clear()
+            self._routed = [0] * len(self.engines)
+
+    def live_version(self) -> Optional[int]:
+        """Fleet-wide live model version: the min over replicas' lock-free
+        version reads. None when any replica's label is non-integral —
+        mid-rollout the min is the *oldest still-serving* version, which is
+        exactly the only version a cache hit is safe against."""
+        versions = [eng.model_version for eng in self.engines]
+        if any(not isinstance(v, int) for v in versions):
+            return None
+        return min(versions)
+
+    def pump(self, force: bool = False) -> int:
+        """Manual drive (fake-clock tests): pump every replica."""
+        return sum(eng.pump(force) for eng in self.engines)
+
+    def flush_all(self) -> int:
+        return sum(eng.flush_all() for eng in self.engines)
+
+    def close(self) -> None:
+        """Stop watchers first (no new swaps), then close every replica
+        (each drains its queue)."""
+        with self._lock:
+            self._closed = True
+        for w in self._watchers:
+            w.stop()
+        for eng in self.engines:
+            eng.close()
+
+    def __enter__(self) -> "TopicFleet":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # ------------------------------------------------------------- routing
+
+    def _route(self, bucket: int, deadline_ms: Optional[float]) -> int:
+        """Pick the replica with the best predicted completion for this
+        bucket. Score (ms) = est · (1 + full batches queued ahead), minus a
+        top-off discount when a partial batch is forming (the request rides
+        a flush that is already coming), plus a small whole-replica pressure
+        term so ties break toward the least busy replica — then lowest
+        index. Replicas predicted past the deadline are heavily penalized
+        (still selectable: someone must serve the request or admission
+        control sheds it)."""
+        best_idx, best_score = 0, None
+        for i, eng in enumerate(self.engines):
+            state = eng.route_state()
+            qlen, est = state[bucket]
+            total_queued = sum(q for q, _ in state.values())
+            batches_ahead = qlen // eng.max_batch
+            score = est * (1.0 + batches_ahead)
+            if 0 < qlen % eng.max_batch:
+                score -= 0.25 * est          # top off the forming batch
+            score += 1e-3 * est * total_queued
+            if deadline_ms is not None and score > deadline_ms:
+                score += 1e6                 # predicted miss: last resort
+            if best_score is None or score < best_score:
+                best_idx, best_score = i, score
+        return best_idx
+
+    # ----------------------------------------------------------- completion
+
+    def _on_engine_done(self, key, fut: Future) -> None:
+        """Runs in the completing engine's thread: latency bookkeeping, the
+        shed state machine, and cache admission. Never raises."""
+        if fut.cancelled():
+            return
+        if fut.exception() is not None:
+            with self._lock:
+                self._n_failed += 1
+            return
+        resp = fut.result()
+        with self._lock:
+            self._n_completed += 1
+            self._lat_ms.append(resp.latency_ms)
+            self._since_p99 += 1
+            if self._since_p99 >= _P99_EVERY or self._shedding:
+                self._since_p99 = 0
+                _, p99 = percentiles(self._lat_ms)
+                self._p99_est_ms = p99
+                if self.shed:
+                    self._update_shed_state(p99)
+        if key is not None and resp.model_version is not None \
+                and resp.model_version == self.live_version():
+            # admit only results still current fleet-wide: an entry computed
+            # on a replica that already swapped ahead (or behind) must not
+            # be served to callers while the fleet's live version differs
+            self.cache.put(key, resp.model_version, resp.pkd,
+                           resp.feature_ids, resp.feature_weights,
+                           resp.bucket)
+
+    def _update_shed_state(self, p99: float) -> None:  # requires: _lock
+        """Hysteresis band: enter shedding when p99 exceeds the budget
+        (slack < 0), exit only below budget · (1 − hysteresis) — inside the
+        band the current state holds, so the fleet cannot flap on noise."""
+        if not self._shedding and p99 > self.deadline_budget_ms:
+            self._shedding = True
+            self._since_probe = 0
+        elif self._shedding and \
+                p99 < self.deadline_budget_ms * (1.0 - self.shed_hysteresis):
+            self._shedding = False
+
+    def _on_swap(self, version: int, meta: dict) -> None:
+        """Watcher hook (runs in watcher threads): once the fleet-wide live
+        version converges past a swap, eagerly reclaim stale cache bytes.
+        Correctness never depends on this — ``get`` re-checks versions."""
+        live = self.live_version()
+        if self.cache is not None and live is not None:
+            self.cache.drop_stale(live)

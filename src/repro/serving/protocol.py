@@ -64,7 +64,11 @@ class Response:
     deadline_missed: bool       # latency_ms > deadline_ms (False if no deadline)
     model_version: Optional[int] = None  # version of the model that ran the
     # batch — every response in one flush carries the same value (the engine
-    # reads its (model, version) reference exactly once per batch)
+    # reads its (model, version) reference exactly once per batch); a folded
+    # long-query response whose chunks straddled a hot-swap carries None
+    cached: bool = False        # served from the fleet's result cache (the
+    # model_version is the version the cached entry was computed under — a
+    # hit is only legal while that version is still live fleet-wide)
 
     def as_dict(self) -> dict:
         """Legacy ``BatchingServer.infer`` result-dict view."""
@@ -95,6 +99,58 @@ class EngineStats:
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["per_bucket"] = {str(k): v for k, v in self.per_bucket.items()}
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class ShedResponse:
+    """Typed fast-reject: admission control refused the request.
+
+    When the fleet's p99 slack goes negative, queueing one more request can
+    only convert its deadline into a miss *and* push everyone behind it
+    later — so the fleet resolves the future immediately with this instead.
+    Callers distinguish it from a :class:`Response` by type (or the ``shed``
+    marker after ``as_dict``) and should back off ``retry_after_ms``.
+    """
+
+    request_id: int
+    reason: str                 # e.g. "p99-slack"
+    p99_est_ms: float           # the estimate that tripped admission control
+    deadline_ms: Optional[float]  # the request's budget (None = fleet default)
+    retry_after_ms: float       # back-off hint: estimated time for slack > 0
+    shed: bool = True
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class FleetStats:
+    """Aggregate fleet counters: the autoscaler/dashboard view of N replicas
+    plus the result cache and admission control."""
+
+    submitted: int              # fleet-level requests (cached hits included)
+    completed: int              # engine-served completions observed
+    shed: int                   # fast-rejected by admission control
+    cache_hits: int
+    cache_misses: int           # submits that went to an engine (cacheable)
+    qps: float                  # completed+hits / wall seconds
+    p50_ms: float               # engine-served latency window (hits are ~0)
+    p99_ms: float
+    p99_est_ms: float           # admission control's live p99 estimate
+    hit_rate: float             # hits / (hits + misses)
+    shed_rate: float            # shed / submitted
+    shedding: bool              # admission control currently rejecting
+    model_version: Optional[int]  # fleet-wide live version (min over
+    # replicas; None while any replica's version is unknown)
+    routed: Tuple[int, ...]     # engine-served requests per replica
+    per_replica: Tuple[EngineStats, ...]
+    cache: Optional[dict] = None  # ResultCache.stats() when a cache is on
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["routed"] = list(self.routed)
+        d["per_replica"] = [s.as_dict() for s in self.per_replica]
         return d
 
 

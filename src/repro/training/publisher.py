@@ -42,14 +42,26 @@ class ModelPublisher(TrainerCallback):
       at_end: publish the final model on ``on_train_end``.
       merge_l1 / dup_l1: dedup thresholds forwarded to
         ``Trainer.export_model`` (default: the TrainerConfig values).
+      delta: publish row-diffs against the previous published Φ instead of
+        full payloads (``snapshots.save_delta_snapshot``) — at K=10⁵ a full
+        V×K serialization per boundary would stall the fleet's refresh
+        cadence, while one epoch touches only the rows its shard saw.
+        Readers reconstruct transparently via the manifest's base pointer.
+      full_every: with ``delta``, still write a full snapshot every M-th
+        publish (bounds the reconstruction chain and caps what rotation
+        must keep alive). A Φ shape change (dedup moved K) also forces a
+        full snapshot.
     """
 
     def __init__(self, snapshot_dir: str, every: int = 1, keep: int = 3,
                  at_start: bool = False, at_end: bool = True,
                  merge_l1: Optional[float] = None,
-                 dup_l1: Optional[float] = None):
+                 dup_l1: Optional[float] = None,
+                 delta: bool = False, full_every: int = 8):
         if every <= 0:
             raise ValueError("ModelPublisher.every must be > 0")
+        if full_every <= 1:
+            raise ValueError("ModelPublisher.full_every must be > 1")
         self.snapshot_dir = snapshot_dir
         self.every = every
         self.keep = keep
@@ -57,8 +69,13 @@ class ModelPublisher(TrainerCallback):
         self.at_end = at_end
         self.merge_l1 = merge_l1
         self.dup_l1 = dup_l1
+        self.delta = bool(delta)
+        self.full_every = int(full_every)
         self._boundaries = 0
         self._last_publish_epoch: Optional[int] = None
+        self._base_pvk = None               # Φ of the last published version
+        self._base_version: Optional[int] = None
+        self._since_full = 0                # deltas since the last full
         self.last_version: Optional[int] = None
         self.last_path: Optional[str] = None
 
@@ -89,19 +106,41 @@ class ModelPublisher(TrainerCallback):
 
     def publish(self, trainer, epoch: int) -> int:
         """Export + write one snapshot now; returns the new version."""
+        import numpy as np
+
         t0 = time.perf_counter()
         model, info = trainer.export_model(merge_l1=self.merge_l1,
                                            dup_l1=self.dup_l1)
         latest = snapshots.latest_version(self.snapshot_dir)
         version = 0 if latest is None else latest + 1
         meta = {"epoch": epoch + 1, **info}
-        path = snapshots.save_snapshot(self.snapshot_dir, version, model, meta)
+        pvk = np.asarray(model.pvk)
+        as_delta = (self.delta and self._base_pvk is not None
+                    and self._since_full < self.full_every - 1
+                    and pvk.shape == self._base_pvk.shape)
+        if as_delta:
+            path = snapshots.save_delta_snapshot(
+                self.snapshot_dir, version, model,
+                self._base_version, self._base_pvk, meta)
+            self._since_full += 1
+        else:
+            path = snapshots.save_snapshot(
+                self.snapshot_dir, version, model, meta)
+            self._since_full = 0
+        # next publish diffs against THIS payload (delta-over-delta chains
+        # are fine: the loader walks bases, full_every bounds the depth)
+        self._base_pvk, self._base_version = pvk.copy(), version
         snapshots.rotate_snapshots(self.snapshot_dir, self.keep)
         latency = time.perf_counter() - t0
         trainer.metrics["publish_s"].append(latency)
         self.last_version, self.last_path = version, path
         self._last_publish_epoch = epoch + 1
-        trainer.log(f"[publish] v_{version:06d} @ epoch {epoch + 1}: "
+        if as_delta:
+            d = snapshots.read_meta(self.snapshot_dir, version)["delta"]
+            kind = f"delta {d['n_rows']}/{d['n_rows_total']} rows"
+        else:
+            kind = "full"
+        trainer.log(f"[publish] v_{version:06d} @ epoch {epoch + 1} ({kind}): "
                     f"K {info['n_topics_raw']} → {info['n_topics']} "
                     f"(dup {info['duplicate_fraction']:.2f}) "
                     f"in {latency * 1e3:.0f} ms")

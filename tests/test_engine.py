@@ -59,12 +59,18 @@ def test_bucket_selection_no_silent_truncation():
     lengths = [1, 4, 5, 9, 16, 30]
     out = eng.infer([rng.integers(0, V, size=n) for n in lengths])
     assert [r.bucket for r in out] == [4, 4, 8, 16, 16, 16]
-    # zero silent truncation: only the over-largest-bucket query is flagged
-    assert [r.truncated for r in out] == [False] * 5 + [True]
+    # zero truncation at all: the over-largest-bucket query (30 tokens) is
+    # chunk-folded across widest-bucket sub-batches, not clipped
+    assert [r.truncated for r in out] == [False] * 6
     assert len({r.bucket for r in out}) == 3       # ≥3 shape buckets served
     for r in out:
         assert np.isfinite(r.pkd).all()
         np.testing.assert_allclose(r.pkd.sum(), 1.0, rtol=1e-5)
+
+    # with chunking off, the legacy clip + truncated flag comes back
+    eng2 = _engine(chunk_long=False)
+    (r30,) = eng2.infer([rng.integers(0, V, size=30)])
+    assert r30.bucket == 16 and r30.truncated
 
 
 # ------------------------------------------------- deadline-aware flushing
@@ -286,9 +292,11 @@ def test_stats_counters_and_reset():
     rng = np.random.default_rng(1)
     eng.infer([rng.integers(0, V, size=n) for n in (2, 6, 30, 3)])
     s = eng.stats()
-    assert s.submitted == s.completed == 4
-    assert s.truncated == 1
-    assert s.per_bucket[4] == 2 and s.per_bucket[8] == 1 and s.per_bucket[16] == 1
+    # the 30-token query rides as two widest-bucket chunks: counters count
+    # the chunks (the work the engine actually did), not the folded parent
+    assert s.submitted == s.completed == 5
+    assert s.truncated == 0
+    assert s.per_bucket[4] == 2 and s.per_bucket[8] == 1 and s.per_bucket[16] == 2
     assert s.p50_ms >= 0 and s.p99_ms >= s.p50_ms
     eng.reset_stats()
     s2 = eng.stats()
@@ -301,8 +309,9 @@ def test_batching_server_routes_long_queries_instead_of_truncating():
     srv = BatchingServer(_model(), batch=4, query_len=4, n_trials=1,
                          n_iters=2, top_n=3)
     rng = np.random.default_rng(3)
-    # ladder: 4, 8, 16, 32 — length 20 routes to 32, only length 40 truncates
+    # ladder: 4, 8, 16, 32 — length 20 routes to 32; length 40 exceeds the
+    # widest rung and is chunk-folded (32 + 8), so nothing truncates
     out = srv.infer([rng.integers(0, V, size=n) for n in (3, 20, 40)])
-    assert [d["truncated"] for d in out] == [False, False, True]
+    assert [d["truncated"] for d in out] == [False, False, False]
     for d in out:
         np.testing.assert_allclose(d["pkd"].sum(), 1.0, rtol=1e-5)

@@ -1,0 +1,441 @@
+"""Fleet-scope serving tests: routing, admission control, the result cache,
+and hot-swap safety across N replicas (DESIGN.md §13).
+
+Determinism idiom matches test_engine.py: engines are built with
+``start=False`` and a shared ``FakeClock``; the tests drive batching with
+``pump()``/``flush_all()`` so every routing/shed decision is reproducible.
+The one real-thread test (watcher fan-out) uses the actual snapshot dir
+publish path end-to-end.
+"""
+import os
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import concurrency as cc
+from repro.analysis import report
+from repro.checkpoint import snapshots
+from repro.core import rtlda
+from repro.serving import (ResultCache, Response, ShedResponse, TopicEngine,
+                           TopicFleet)
+
+pytestmark = pytest.mark.fleet
+
+K, V = 6, 40
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FLEET_PY = os.path.join(REPO, "src", "repro", "serving", "fleet.py")
+
+
+def _model(seed=0):
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(rng.integers(0, 20, (V, K)).astype(np.int32))
+    alpha = jnp.full((K,), 0.5, jnp.float32)
+    return rtlda.build_model(phi, jnp.float32(0.01), alpha)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _fleet(clock=None, n=2, model=None, **kw):
+    """Fleet over manually-pumped fake-clock engines (deterministic)."""
+    clock = clock or FakeClock()
+    model = model if model is not None else _model()
+    engines = [TopicEngine(model, buckets=(4, 8, 16), max_batch=4,
+                           n_iters=2, n_trials=1, top_n=3,
+                           clock=clock, start=False)
+               for _ in range(n)]
+    kw.setdefault("cache_mb", 1.0)
+    kw.setdefault("deadline_budget_ms", 50.0)
+    return TopicFleet(engines=engines, clock=clock, **kw)
+
+
+def _q(rng, n=3):
+    return rng.integers(0, V, size=n).astype(np.int32)
+
+
+# ------------------------------------------------------------------ routing
+
+
+def test_routing_tops_off_forming_batch_then_spills():
+    """Occupancy-aware routing, not round-robin: requests 1–4 top off the
+    batch forming on replica 0 (a flush that is already coming), request 5
+    sees a full batch queued ahead and spills to replica 1."""
+    fleet = _fleet(cache_mb=0.0, shed=False)
+    rng = np.random.default_rng(0)
+    futs = [fleet.submit(_q(rng)) for _ in range(8)]
+    assert fleet.stats().routed == (4, 4)
+    e0, e1 = (e.route_state()[4][0] for e in fleet.engines)
+    assert (e0, e1) == (4, 4)
+    # 9th request: both replicas hold one full batch — deterministic
+    # lowest-index tie-break
+    futs.append(fleet.submit(_q(rng)))
+    assert fleet.stats().routed == (5, 4)
+    fleet.flush_all()
+    for f in futs:
+        r = f.result(timeout=10)
+        assert isinstance(r, Response) and np.isfinite(r.pkd).all()
+    fleet.close()
+
+
+def test_routing_prefers_emptier_replica_under_load():
+    """A replica with whole batches queued ahead costs full service quanta;
+    new arrivals route around it."""
+    fleet = _fleet(cache_mb=0.0, shed=False)
+    rng = np.random.default_rng(1)
+    # preload replica 0 with two full batches, bypassing the router
+    for _ in range(8):
+        fleet.engines[0].submit(_q(rng))
+    f = fleet.submit(_q(rng))
+    assert fleet.stats().routed == (0, 1)
+    fleet.flush_all()
+    assert isinstance(f.result(timeout=10), Response)
+    fleet.close()
+
+
+# -------------------------------------------------------- admission control
+
+
+def test_shed_on_negative_slack_with_probe_admission():
+    clock = FakeClock()
+    fleet = _fleet(clock, cache_mb=0.0, deadline_budget_ms=50.0,
+                   probe_every=4)
+    rng = np.random.default_rng(2)
+    # 32 completions at 100 ms — the p99 estimator recomputes and trips
+    futs = [fleet.submit(_q(rng)) for _ in range(32)]
+    clock.advance_ms(100.0)
+    fleet.flush_all()
+    for f in futs:
+        f.result(timeout=10)
+    st = fleet.stats()
+    assert st.shedding and st.p99_est_ms > 50.0
+
+    # shedding: rejects are typed + immediate, every 4th rides as a probe
+    results = []
+    for _ in range(8):
+        fut = fleet.submit(_q(rng))
+        if fut.done() and isinstance(fut.result(), ShedResponse):
+            results.append("shed")
+        else:
+            results.append("probe")
+            fleet.flush_all()
+            fut.result(timeout=10)
+    assert results == ["shed", "shed", "shed", "probe"] * 2
+    shed_resp = fleet.submit(_q(rng)).result()
+    assert isinstance(shed_resp, ShedResponse)
+    assert shed_resp.shed and shed_resp.reason == "p99-slack"
+    assert shed_resp.p99_est_ms > 50.0 and shed_resp.retry_after_ms > 0
+    fleet.close()
+
+
+def test_shed_hysteresis_band_prevents_flap():
+    fleet = _fleet(cache_mb=0.0, deadline_budget_ms=50.0,
+                   shed_hysteresis=0.25)
+    with fleet._lock:
+        fleet._update_shed_state(49.0)      # below budget: stays clear
+        assert not fleet._shedding
+        fleet._update_shed_state(51.0)      # slack < 0: enter
+        assert fleet._shedding
+        fleet._update_shed_state(45.0)      # inside the band: no flap
+        assert fleet._shedding
+        fleet._update_shed_state(49.0)      # still inside (exit is 37.5)
+        assert fleet._shedding
+        fleet._update_shed_state(37.0)      # below budget·(1−h): exit
+        assert not fleet._shedding
+    fleet.close()
+
+
+def test_shed_recovery_end_to_end():
+    """Probes complete fast after the overload clears → estimator sees the
+    recovery → admission reopens."""
+    clock = FakeClock()
+    fleet = _fleet(clock, cache_mb=0.0, deadline_budget_ms=50.0,
+                   probe_every=2)
+    rng = np.random.default_rng(3)
+    futs = [fleet.submit(_q(rng)) for _ in range(32)]
+    clock.advance_ms(100.0)
+    fleet.flush_all()
+    for f in futs:
+        f.result(timeout=10)
+    assert fleet.stats().shedding
+    fleet.reset_stats()                     # overload window cleared
+    # every 2nd submission probes; probes complete at ~0 ms on the fake
+    # clock, the estimator recomputes per-completion while shedding
+    for _ in range(4):
+        fut = fleet.submit(_q(rng))
+        if not fut.done():
+            fleet.flush_all()
+            fut.result(timeout=10)
+    st = fleet.stats()
+    assert not st.shedding
+    fut = fleet.submit(_q(rng))             # admission reopened
+    assert not fut.done()
+    fleet.flush_all()
+    assert isinstance(fut.result(timeout=10), Response)
+    fleet.close()
+
+
+# ------------------------------------------------------------------- cache
+
+
+def test_cache_hit_stamps_version_and_skips_engines():
+    fleet = _fleet(shed=False)
+    rng = np.random.default_rng(4)
+    q = _q(rng)
+    f1 = fleet.submit(q)
+    fleet.flush_all()
+    r1 = f1.result(timeout=10)
+    assert not r1.cached and r1.model_version == 0
+    routed_before = fleet.stats().routed
+    f2 = fleet.submit(q)
+    assert f2.done()                        # resolved without an engine
+    r2 = f2.result()
+    assert r2.cached and r2.model_version == 0
+    np.testing.assert_array_equal(r2.pkd, r1.pkd)
+    st = fleet.stats()
+    assert st.routed == routed_before and st.cache_hits == 1
+    assert st.hit_rate == pytest.approx(0.5)
+    fleet.close()
+
+
+def test_cache_invalidated_across_hot_swap():
+    """No stale ``model_version`` is ever served: after a fleet-wide swap,
+    the cached v0 entry is dropped, the query re-runs on v1."""
+    fleet = _fleet(shed=False)
+    rng = np.random.default_rng(5)
+    q = _q(rng)
+    f1 = fleet.submit(q)
+    fleet.flush_all()
+    assert f1.result(timeout=10).model_version == 0
+    fleet.swap_model(_model(seed=9), version=1)
+    assert fleet.live_version() == 1
+    f2 = fleet.submit(q)
+    assert not f2.done()                    # NOT a cache hit
+    fleet.flush_all()
+    r2 = f2.result(timeout=10)
+    assert not r2.cached and r2.model_version == 1
+    assert fleet.cache.stats()["stale_drops"] >= 1
+    fleet.close()
+
+
+def test_cache_conservative_while_replicas_diverge():
+    """Mid-rollout the fleet-wide live version is the MIN over replicas (the
+    oldest still-serving version): v0 hits stay legal while any replica
+    still serves v0, v1 results are NOT admitted yet, and completing the
+    rollout retires v0 entries before any v1 hit is served."""
+    fleet = _fleet(shed=False)
+    rng = np.random.default_rng(6)
+    q, q2 = _q(rng), _q(rng, 5)
+    f1 = fleet.submit(q)
+    fleet.flush_all()
+    f1.result(timeout=10)
+    fleet.engines[0].swap_model(_model(seed=9), version=1)  # partial rollout
+    assert fleet.live_version() == 0        # v0 is still serving somewhere
+    f2 = fleet.submit(q)
+    assert f2.done() and f2.result().model_version == 0     # legal v0 hit
+    # a fresh query served by the swapped replica (v1 ≠ live) must NOT be
+    # admitted — a v1 entry would cross the boundary for v0-routed callers
+    f3 = fleet.submit(q2)
+    fleet.flush_all()
+    if f3.result(timeout=10).model_version == 1:
+        f3b = fleet.submit(q2)
+        assert not f3b.done()               # not cached
+        fleet.flush_all()
+        f3b.result(timeout=10)
+    # completing the rollout retires v0: the old entry is never served again
+    fleet.engines[1].swap_model(_model(seed=9), version=1)
+    assert fleet.live_version() == 1
+    f4 = fleet.submit(q)
+    assert not f4.done()                    # stale v0 entry dropped, re-runs
+    fleet.flush_all()
+    r4 = f4.result(timeout=10)
+    assert not r4.cached and r4.model_version == 1
+    f5 = fleet.submit(q)
+    assert f5.done() and f5.result().cached
+    assert f5.result().model_version == 1
+    fleet.close()
+
+
+def test_cache_slru_protects_hot_head_from_scans():
+    cache = ResultCache(capacity_mb=0.01, protected_frac=0.5)
+    pkd = np.full((K,), 1.0 / K, np.float32)
+    ids = np.arange(3, dtype=np.int32)
+    w = np.ones(3, np.float32)
+
+    hot = (b"hot", 4)
+    cache.put(hot, 0, pkd, ids, w, 4)
+    assert cache.get(hot, 0) is not None    # promoted to protected
+    # a scan of one-hit wonders floods probation far past the budget
+    for i in range(200):
+        cache.put((f"scan{i}".encode(), 4), 0, pkd, ids, w, 4)
+    assert cache.get(hot, 0) is not None    # the head survived the scan
+    st = cache.stats()
+    assert st["evictions"] > 0 and st["bytes"] <= st["capacity_bytes"]
+
+
+def test_cache_refuses_unknown_version():
+    cache = ResultCache(capacity_mb=1.0)
+    pkd = np.full((K,), 1.0 / K, np.float32)
+    ids = np.arange(3, dtype=np.int32)
+    w = np.ones(3, np.float32)
+    assert not cache.put((b"x", 4), None, pkd, ids, w, 4)
+    cache.put((b"x", 4), 3, pkd, ids, w, 4)
+    assert cache.get((b"x", 4), None) is None   # unknown live → miss
+    assert cache.get((b"x", 4), 3) is None      # ... and the entry is gone
+    assert cache.stats()["stale_drops"] == 1
+
+
+# ------------------------------------------------- swap racing flush (fleet)
+
+
+def test_swap_racing_flush_at_fleet_scope():
+    """Requests queued before a fleet-wide swap still complete (no drops),
+    each stamped with the version of the model that actually ran it; the
+    post-swap cache never mixes versions."""
+    fleet = _fleet(shed=False)
+    rng = np.random.default_rng(7)
+    qs = [_q(rng, n) for n in (2, 3, 5, 9)]
+    futs = [fleet.submit(q) for q in qs]    # queued, not yet flushed
+    fleet.swap_model(_model(seed=9), version=1)
+    fleet.flush_all()
+    for f in futs:
+        r = f.result(timeout=10)            # zero dropped in-flight requests
+        assert r.model_version == 1         # swap happened before the flush
+        assert np.isfinite(r.pkd).all()
+    # the completions were admitted under the live version → instant hits
+    f = fleet.submit(qs[0])
+    assert f.done() and f.result().model_version == 1
+    fleet.close()
+
+
+def test_watcher_fanout_hot_swap_over_live_fleet():
+    """Real threads end-to-end: per-replica watcher fan-out from a shared
+    snapshot dir; a publish rolls across every replica."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as snap_dir:
+        snapshots.save_snapshot(snap_dir, 0, _model(seed=0), {"epoch": 1})
+        fleet = TopicFleet(_model(seed=0), n_replicas=2, buckets=(4, 8, 16),
+                           max_batch=4, n_iters=2, n_trials=1, top_n=3,
+                           cache_mb=1.0, shed=False)
+        try:
+            fleet.attach_watchers(snap_dir, poll_s=0.05)
+            assert fleet.wait_for_version(0, timeout_s=10)
+            rng = np.random.default_rng(8)
+            out = fleet.infer([_q(rng) for _ in range(8)])
+            assert all(r.model_version == 0 for r in out)
+            snapshots.save_snapshot(snap_dir, 1, _model(seed=9), {"epoch": 2})
+            assert fleet.wait_for_version(1, timeout_s=10)
+            assert fleet.live_version() == 1
+            out = fleet.infer([_q(rng) for _ in range(8)])
+            assert all(r.model_version == 1 for r in out)
+            assert fleet.stats().completed == 16    # nothing dropped
+        finally:
+            fleet.close()
+
+
+# ----------------------------------------------------- delta snapshot path
+
+
+def test_delta_snapshot_roundtrip_and_base_keeping():
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        m0 = _model(seed=0)
+        snapshots.save_snapshot(d, 0, m0, {"epoch": 1})
+        pvk1 = np.array(m0.pvk)
+        pvk1[[2, 7]] += 1
+        m1 = rtlda.RTLDAModel(pvk=jnp.asarray(pvk1), alpha=m0.alpha,
+                              r_topic=m0.r_topic, r_value=m0.r_value)
+        snapshots.save_delta_snapshot(d, 1, m1, 0, m0.pvk, {"epoch": 2})
+        meta = snapshots.read_meta(d, 1)
+        assert meta["delta"] == {"base_version": 0, "n_rows": 2,
+                                 "n_rows_total": V}
+        loaded, _ = snapshots.load_snapshot(d, 1)
+        np.testing.assert_array_equal(np.asarray(loaded.pvk), pvk1)
+        # rotation keeps the base alive: keep=1 cannot drop v0 under v1
+        assert snapshots.rotate_snapshots(d, 1) == []
+        assert snapshots.snapshot_versions(d) == [0, 1]
+        # shape change refuses delta (caller falls back to full)
+        wide = rtlda.RTLDAModel(
+            pvk=jnp.zeros((V, K + 1), jnp.float32), alpha=jnp.zeros(K + 1),
+            r_topic=m0.r_topic, r_value=m0.r_value)
+        with pytest.raises(ValueError):
+            snapshots.save_delta_snapshot(d, 2, wide, 1, pvk1)
+
+
+def test_watcher_swaps_delta_snapshot_transparently():
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        m0 = _model(seed=0)
+        snapshots.save_snapshot(d, 0, m0, {"epoch": 1})
+        pvk1 = np.array(m0.pvk)
+        pvk1[[1, 3]] += 2
+        m1 = rtlda.RTLDAModel(pvk=jnp.asarray(pvk1), alpha=m0.alpha,
+                              r_topic=m0.r_topic, r_value=m0.r_value)
+        clock = FakeClock()
+        eng = TopicEngine(m0, buckets=(4, 8, 16), max_batch=4, n_iters=2,
+                          n_trials=1, top_n=3, clock=clock, start=False)
+        from repro.serving import SnapshotWatcher
+        w = SnapshotWatcher(d, eng, poll_s=0.01)
+        assert w.poll() == 0
+        snapshots.save_delta_snapshot(d, 1, m1, 0, m0.pvk, {"epoch": 2})
+        assert w.poll() == 1                # delta resolved on load
+        assert eng.model_version == 1
+        np.testing.assert_array_equal(np.asarray(eng._model_ref[0].pvk),
+                                      pvk1)
+
+
+# -------------------------------------------- concurrency contract mutation
+
+
+def test_analyzer_catches_unguarded_fleet_counter():
+    """§13 is built ON the §12 contract: strip the lock from one fleet
+    counter write and the analyzer must refuse the module."""
+    with open(FLEET_PY) as f:
+        src = f.read()
+    guarded = ("with self._lock:\n"
+               "            self._routed[idx] += 1")
+    assert guarded in src, "fleet.py routing counter changed; update test"
+    clean = [f for f in cc.analyze_source(src, "fleet.py")
+             if f.severity == report.ERROR]
+    assert clean == [], [f.message for f in clean]
+    mutated = src.replace(guarded, "self._routed[idx] += 1")
+    errs = [f for f in cc.analyze_source(mutated, "fleet.py")
+            if f.severity == report.ERROR]
+    assert errs, "unguarded _routed write was not caught"
+    assert any("_routed" in f.message for f in errs)
+
+
+def test_analyzer_catches_unguarded_cache_counter():
+    cache_py = os.path.join(REPO, "src", "repro", "serving", "cache.py")
+    with open(cache_py) as f:
+        src = f.read()
+    mutated = src + textwrap.dedent("""
+        def _racy_bump(cache):
+            cache._hits += 1
+    """)
+    # module-level helper writing a guarded field lock-free: must NOT slip
+    # through just because it's outside the class body
+    errs = [f for f in cc.analyze_source(mutated, "cache.py")
+            if f.severity == report.ERROR]
+    if not errs:
+        # analyzer scopes to class methods: seed the violation in-class
+        mutated = src.replace(
+            "    def clear(self) -> None:",
+            "    def _racy_bump(self) -> None:\n"
+            "        self._hits += 1\n\n"
+            "    def clear(self) -> None:")
+        errs = [f for f in cc.analyze_source(mutated, "cache.py")
+                if f.severity == report.ERROR]
+    assert errs and any("_hits" in f.message for f in errs)

@@ -141,3 +141,41 @@ def test_live_refresh_end_to_end(tmp_path):
     meta_last = snapshots.load_snapshot(snap)[1]
     assert meta_last["version"] == pub.last_version
     assert meta_last["epoch"] == cfg.n_epochs
+
+
+def test_publisher_delta_mode_roundtrip(tmp_path):
+    """Delta publishes ship row-diffs with a base pointer; every loaded
+    version reconstructs to the exact full model; full_every forces a
+    periodic full snapshot that resets the chain."""
+    snap = str(tmp_path / "snaps")
+    cfg = TrainerConfig(n_docs=120, vocab_size=60, n_topics=8, true_topics=5,
+                        n_epochs=4, alpha_opt_from=99)
+    pub = ModelPublisher(snap, every=1, at_start=True, at_end=False,
+                         keep=10, delta=True, full_every=3)
+    tr = Trainer(cfg, callbacks=[pub, Metrics(printer=lambda m: None)])
+    tr.log = lambda msg: None
+    tr.setup()
+    tr.fit()                                 # v0 (full) + v1..v4
+    versions = snapshots.snapshot_versions(snap)
+    assert len(versions) >= 4
+    kinds = [("delta" in snapshots.read_meta(snap, v)) for v in versions]
+    assert kinds[0] is False                 # first publish is always full
+    assert any(kinds)                        # deltas actually happened
+    # full_every=3: at most 2 consecutive deltas before a full
+    run = 0
+    for is_delta in kinds:
+        run = run + 1 if is_delta else 0
+        assert run <= 2
+    # each delta reconstructs to exactly the model the publisher exported
+    for v in versions:
+        model, meta = snapshots.load_snapshot(snap, v)
+        assert np.isfinite(np.asarray(model.pvk)).all()
+        if "delta" in meta:
+            base_v = meta["delta"]["base_version"]
+            base, _ = snapshots.load_snapshot(snap, base_v)
+            assert np.asarray(base.pvk).shape == np.asarray(model.pvk).shape
+    # the newest version equals the trainer's current export
+    last_model, _ = snapshots.load_snapshot(snap, versions[-1])
+    fresh, _ = tr.export_model()
+    np.testing.assert_array_equal(np.asarray(last_model.pvk),
+                                  np.asarray(fresh.pvk))
