@@ -11,6 +11,7 @@
 #   scripts/tier1.sh preflight # static-analysis launch gate (-m preflight)
 #   scripts/tier1.sh concurrency # thread-contract analyzer + interleaving (-m concurrency)
 #   scripts/tier1.sh fleet    # multi-replica fleet: routing/shedding/cache (-m fleet)
+#   scripts/tier1.sh chaos    # fault-plane injection: breakers/hedges/quarantine (-m chaos)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 case "${1:-}" in
@@ -38,5 +39,8 @@ case "${1:-}" in
     fleet)
         shift
         exec python -m pytest -x -q -m fleet "$@";;
+    chaos)
+        shift
+        exec python -m pytest -x -q -m chaos "$@";;
 esac
 exec python -m pytest -x -q "$@"

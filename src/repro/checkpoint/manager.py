@@ -97,10 +97,23 @@ class CheckpointManager:
 
     # ------------------------------------------------------------ restore ---
     def restore_latest(self, like, pod: Optional[int] = None) -> Tuple[Any, dict] | None:
-        steps = self.steps(pod)
-        if not steps:
-            return None
-        return io.load(self.step_dir(steps[-1], pod), like)
+        """Restore the newest complete checkpoint — with last-good fallback
+        (DESIGN.md §14): a checkpoint whose payload fails its manifest
+        SHA-256 (torn write that survived the rename, bit rot) is
+        quarantined on disk (renamed ``step_N.corrupt`` so ``steps`` never
+        lists it again) and the next-newest is tried, because restarting a
+        pod from the previous aggregation boundary beats not restarting at
+        all. Returns ``None`` only when no readable checkpoint remains."""
+        for step in reversed(self.steps(pod)):
+            path = self.step_dir(step, pod)
+            try:
+                return io.load(path, like)
+            except io.IntegrityError:
+                try:
+                    os.rename(path, path + ".corrupt")
+                except OSError:
+                    pass           # raced another restorer; already retired
+        return None
 
     def restart_pod(self, pod: int, like) -> Tuple[Any, dict] | None:
         """Peacock §3.1.4: restore ONE failed configuration from its own latest

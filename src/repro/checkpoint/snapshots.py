@@ -36,8 +36,13 @@ import shutil
 from typing import List, Optional
 
 from repro.checkpoint import io
+from repro.reliability import faults
 
 _SNAP_RE = re.compile(r"v_(\d+)")
+# quarantined versions are renamed to "<dir>.corrupt[.N]" — a name
+# _SNAP_RE.fullmatch rejects, so they become invisible to
+# snapshot_versions/rotation while staying on disk for forensics
+_QUARANTINE_SUFFIX = ".corrupt"
 # dict payloads (not the RTLDAModel dataclass) so readers can build the
 # ``like`` tree without knowing leaf shapes up front
 _LIKE = {"pvk": 0, "alpha": 0, "r_topic": 0, "r_value": 0}
@@ -134,9 +139,21 @@ def load_snapshot(root: str, version: Optional[int] = None):
         version = latest_version(root)
         if version is None:
             raise FileNotFoundError(f"no complete snapshots under {root}")
-    meta = read_meta(root, version)
-    if "delta" not in meta:
-        tree, meta = io.load(snapshot_path(root, version), _LIKE)
+    if faults._PLANE is not None:
+        faults.hit("snapshot.load", key=str(version))
+    try:
+        meta = read_meta(root, version)
+        if "delta" not in meta:
+            tree, meta = io.load(snapshot_path(root, version), _LIKE)
+        else:
+            tree = None
+    except io.IntegrityError as exc:
+        # attribute the corruption to THIS version (unless a recursive base
+        # load already attributed it deeper in the chain)
+        if exc.version is None:
+            exc.version = int(version)
+        raise
+    if tree is not None:
         model = RTLDAModel(
             pvk=jnp.asarray(tree["pvk"]), alpha=jnp.asarray(tree["alpha"]),
             r_topic=jnp.asarray(tree["r_topic"]),
@@ -148,7 +165,12 @@ def load_snapshot(root: str, version: Optional[int] = None):
             f"delta snapshot v_{version:06d} needs base v_{base_version:06d} "
             f"which is missing under {root} (rotated without its delta?)")
     base_model, _ = load_snapshot(root, base_version)
-    tree, meta = io.load(snapshot_path(root, version), _DELTA_LIKE)
+    try:
+        tree, meta = io.load(snapshot_path(root, version), _DELTA_LIKE)
+    except io.IntegrityError as exc:
+        if exc.version is None:
+            exc.version = int(version)
+        raise
     pvk = np.array(base_model.pvk)          # writable copy of the base Φ
     pvk[tree["row_idx"]] = tree["rows"]
     model = RTLDAModel(
@@ -156,6 +178,26 @@ def load_snapshot(root: str, version: Optional[int] = None):
         r_topic=jnp.asarray(tree["r_topic"]),
         r_value=jnp.asarray(tree["r_value"]))
     return model, meta
+
+
+def quarantine_snapshot(root: str, version: int) -> Optional[str]:
+    """Retire a corrupt snapshot: rename its directory to a name
+    ``snapshot_versions`` can never match (``v_NNNNNN.corrupt``), keeping
+    the bytes on disk for forensics. Idempotent and race-safe: N watchers
+    discovering the same corrupt version all try the rename, one wins, the
+    rest see the source gone and treat it as done. Returns the quarantine
+    path, or ``None`` if the version had already vanished."""
+    src = snapshot_path(root, version)
+    dst = src + _QUARANTINE_SUFFIX
+    n = 0
+    while os.path.exists(dst):      # re-corruption of a republished version
+        n += 1
+        dst = f"{src}{_QUARANTINE_SUFFIX}.{n}"
+    try:
+        os.rename(src, dst)
+        return dst
+    except OSError:
+        return None                 # lost the race (or src already gone)
 
 
 def rotate_snapshots(root: str, keep: int) -> List[int]:

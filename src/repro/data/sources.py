@@ -44,7 +44,9 @@ from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.data.corpus import Corpus, ShardedCorpus, segment_corpus
+from repro.reliability import faults
 
 META = "meta.json"
 PLACEMENT = "placement.npz"
@@ -202,10 +204,13 @@ def save_segments(source: CorpusSource, directory: str) -> str:
         sc = source.segment(g)
         seg_dir = os.path.join(directory, f"segment_{g:05d}")
         os.makedirs(seg_dir, exist_ok=True)
+        digests = {}
         for name in SEGMENT_ARRAYS:
-            np.save(os.path.join(seg_dir, f"{name}.npy"),
-                    np.asarray(getattr(sc, name)))
-        seg_meta.append({"n_real_tokens": int(sc.n_real_tokens)})
+            fpath = os.path.join(seg_dir, f"{name}.npy")
+            np.save(fpath, np.asarray(getattr(sc, name)))
+            digests[name] = ckpt_io.sha256_file(fpath)
+        seg_meta.append({"n_real_tokens": int(sc.n_real_tokens),
+                         "sha256": digests})
     meta = {
         "version": 1,
         "n_docs": int(source.n_docs),
@@ -239,11 +244,21 @@ class DiskSource(CorpusSource):
     ``segment(g)`` returns memory-mapped stack views — the OS pages in only
     what the host→device transfer touches, so resident set ≈ one segment
     (plus the small placement arrays), independent of corpus size.
+
+    Robust reads (DESIGN.md §14): when the directory's ``meta.json``
+    carries per-file SHA-256 digests (written by :func:`save_segments`),
+    each segment's arrays are verified ONCE per process on first access
+    (``verify=False`` opts out) — a truncated or bit-flipped shard file
+    raises a typed :class:`repro.checkpoint.io.IntegrityError` naming the
+    file, instead of feeding silent garbage z-assignments into a week-long
+    train. Transient read errors are retried ``retries`` times before
+    surfacing; corruption is never retried (rot doesn't heal).
     """
 
     corpus = None
 
-    def __init__(self, directory: str):
+    def __init__(self, directory: str, *, verify: bool = True,
+                 retries: int = 2):
         meta_path = os.path.join(directory, META)
         if not os.path.isfile(meta_path):
             raise FileNotFoundError(
@@ -263,6 +278,9 @@ class DiskSource(CorpusSource):
         self.n_model_shards = int(meta.get("n_model_shards", 1))
         self.rows_coarse = int(meta.get("rows_coarse",
                                         meta["rows_per_shard"]))
+        self.verify = bool(verify)
+        self.retries = int(retries)
+        self._verified: set = set()    # segment ids verified this process
         pl = np.load(os.path.join(directory, PLACEMENT))
         self._shard_of = pl["shard_of_word"]
         self._local_of = pl["local_of_word"]
@@ -275,13 +293,45 @@ class DiskSource(CorpusSource):
     def doc_lengths(self) -> np.ndarray:
         return self._doc_lengths
 
+    def _verify_segment(self, g: int, seg_dir: str) -> None:
+        """First-touch SHA-256 check of segment ``g``'s arrays (memoized —
+        one sequential read per segment per process, then mmap as usual).
+        Pre-integrity directories (no ``sha256`` in meta) verify nothing."""
+        digests = self._meta["segments"][g].get("sha256")
+        if not digests:
+            return
+        for name, want in digests.items():
+            fpath = os.path.join(seg_dir, f"{name}.npy")
+            got = ckpt_io.sha256_file(fpath)
+            if got != want:
+                raise ckpt_io.IntegrityError(
+                    f"corpus segment file {fpath} is corrupt: sha256 "
+                    f"{got[:12]}… != meta {want[:12]}… — re-run "
+                    f"save_segments for this directory", path=fpath)
+
     def segment(self, g: int) -> ShardedCorpus:
         if not (0 <= g < self.n_segments):
             raise IndexError(f"segment {g} out of range [0, {self.n_segments})")
         seg_dir = os.path.join(self.directory, f"segment_{g:05d}")
-        arrs = {name: np.load(os.path.join(seg_dir, f"{name}.npy"),
-                              mmap_mode="r")
-                for name in SEGMENT_ARRAYS}
+        last_exc: Optional[OSError] = None
+        for _attempt in range(self.retries + 1):
+            try:
+                if faults._PLANE is not None:
+                    faults.hit("disk.segment_read", key=str(g))
+                if self.verify and g not in self._verified:
+                    self._verify_segment(g, seg_dir)
+                    self._verified.add(g)
+                arrs = {name: np.load(os.path.join(seg_dir, f"{name}.npy"),
+                                      mmap_mode="r")
+                        for name in SEGMENT_ARRAYS}
+                break
+            except ckpt_io.IntegrityError:
+                raise          # corruption is permanent; retrying re-reads rot
+            except OSError as exc:
+                last_exc = exc # transient (NFS hiccup, injected): retry
+        else:
+            assert last_exc is not None
+            raise last_exc
         return ShardedCorpus(
             word_local=arrs["word_local"], doc_local=arrs["doc_local"],
             uid=arrs["uid"], z0=arrs["z0"],

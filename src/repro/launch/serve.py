@@ -155,7 +155,8 @@ def main(argv=None):
             (f for r in report.results for f in r.findings
              if f.check == "concurrency.inventory"), None)
         missing = [cls for cls in ("TopicFleet", "ResultCache",
-                                   "TopicEngine", "SnapshotWatcher")
+                                   "TopicEngine", "SnapshotWatcher",
+                                   "CircuitBreaker", "FaultPlane")
                    if inventory is None or cls not in inventory.message]
         ok = report.ok and not missing
         print(report.to_json(indent=2) if args.preflight_json
@@ -203,6 +204,8 @@ def main(argv=None):
 
     futs = []
     swapped_at = None
+    n_backed_off = 0
+    backoff_until = 0.0
     t0 = time.monotonic()
     for i, (req, at) in enumerate(zip(traffic, arrivals)):
         lag = t0 + at - time.monotonic()
@@ -211,7 +214,21 @@ def main(argv=None):
         if args.swap_mid and swapped_at is None and i >= n // 2:
             target.swap_model(model_b, version=1)
             swapped_at = i
-        futs.append(target.submit(req, deadline_ms=args.deadline_ms))
+        if time.monotonic() < backoff_until:
+            # a well-behaved client honors ShedResponse.retry_after_ms:
+            # arrivals inside the back-off window are dropped client-side
+            # instead of re-offered into guaranteed rejects (which would
+            # make shed-rate numbers measure client rudeness, not capacity)
+            n_backed_off += 1
+            continue
+        fut = target.submit(req, deadline_ms=args.deadline_ms)
+        futs.append(fut)
+        if fut.done():
+            r = fut.result()
+            if isinstance(r, ShedResponse) and r.retry_after_ms > 0:
+                backoff_until = max(
+                    backoff_until,
+                    time.monotonic() + r.retry_after_ms / 1e3)
     results = [f.result(timeout=60) for f in futs]
     wall = time.monotonic() - t0
     target.close()
@@ -238,6 +255,7 @@ def main(argv=None):
         "n_trials": args.n_trials,
         "topics": args.topics,
         "zipf_pool": args.zipf_pool,
+        "backed_off": n_backed_off,
     }
     if fleet_mode:
         fstats = target.stats()
@@ -254,6 +272,11 @@ def main(argv=None):
                                    if responses else 0.0),
             "mean_batch_occupancy": float(np.mean(occ)) if occ else 0.0,
             "per_bucket": {},
+            "probes": fstats.probes,
+            "hedges": fstats.hedges,
+            "retries": fstats.retries,
+            "failed": fstats.failed,
+            "breakers": [b["state"] for b in fstats.breakers],
         })
         print(f"offered {args.qps:,.0f} QPS → achieved "
               f"{record['achieved_qps']:,.0f} QPS over {wall:.1f}s | "

@@ -1,0 +1,28 @@
+"""``repro.reliability`` — deterministic fault injection + self-healing.
+
+The fault plane (:mod:`repro.reliability.faults`) is the failure model the
+serving/data defenses are proven against: named injection seams wired into
+the hot paths (engine inference, watcher polls, snapshot loads, disk segment
+reads), driven by deterministic schedules (fail-Nth, counter-PRNG fail-rate,
+injected latency) so a chaos test reproduces bit-for-bit by seed. Disabled
+by default with one ``is None`` check of overhead.
+
+The defenses themselves live where the state they protect lives:
+``repro.serving.health`` (per-replica circuit breakers), ``TopicFleet``
+(hedged retries, unhealthy shedding), ``SnapshotWatcher`` (backoff +
+last-good fallback), ``checkpoint.io`` / ``checkpoint.snapshots``
+(SHA-256 payload integrity + quarantine) and ``data.sources.DiskSource``
+(verify-retry segment reads).
+"""
+from repro.reliability.faults import (FaultInjected, FaultPlane, get_plane,
+                                      hit, injected, install, uninstall)
+
+__all__ = [
+    "FaultInjected",
+    "FaultPlane",
+    "get_plane",
+    "hit",
+    "injected",
+    "install",
+    "uninstall",
+]

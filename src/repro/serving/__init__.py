@@ -5,15 +5,18 @@ The SnapshotWatcher closes the publish pipeline (DESIGN.md §4): it feeds
 ``ModelPublisher`` snapshots into ``TopicEngine.swap_model`` live.
 DESIGN.md §13: ``TopicFleet`` fronts N engine replicas with routing,
 admission control and a version-tagged hot-query ``ResultCache``.
+DESIGN.md §14: per-replica ``CircuitBreaker`` + hedged retries make the
+fleet self-healing under the ``repro.reliability`` fault plane.
 """
 from repro.serving.cache import ResultCache
 from repro.serving.engine import TopicEngine
 from repro.serving.fleet import TopicFleet
+from repro.serving.health import CircuitBreaker
 from repro.serving.protocol import (EngineStats, FleetStats, Request,
                                     Response, ShedResponse)
 from repro.serving.server import BatchingServer
 from repro.serving.watcher import SnapshotWatcher
 
-__all__ = ["TopicEngine", "TopicFleet", "ResultCache",
+__all__ = ["TopicEngine", "TopicFleet", "ResultCache", "CircuitBreaker",
            "EngineStats", "FleetStats", "Request", "Response",
            "ShedResponse", "BatchingServer", "SnapshotWatcher"]

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import features
 from repro.core.rtlda import DEFAULT_BUCKETS, RTLDAModel, select_bucket
+from repro.reliability import faults
 from repro.serving.protocol import EngineStats, Request, Response, percentiles
 
 _LAT_WINDOW = 4096   # recent completions kept for p50/p99
@@ -80,9 +81,13 @@ class TopicEngine:
                  infer_fn=None,
                  chunk_long: bool = True,
                  clock=time.monotonic,
+                 name: Optional[str] = None,
                  start: bool = True):
         if not buckets:
             raise ValueError("need at least one shape bucket")
+        # the engine's fault-seam key: chaos tests target one replica of a
+        # fleet by name ("replica0", ...) without touching the others
+        self.name = name
         self.buckets: Tuple[int, ...] = tuple(sorted(int(b) for b in buckets))
         self.max_batch = int(max_batch)
         self.max_delay_ms = float(max_delay_ms)
@@ -398,6 +403,13 @@ class TopicEngine:
             q[i, :len(toks)] = toks
         t_launch = self._clock()
         try:
+            # fault seams (DESIGN.md §14): a hit is a no-op unless a chaos
+            # test installed a plane; an injected failure takes the SAME
+            # except-path a real inference exception would
+            if faults._PLANE is not None:
+                faults.hit("replica.wedge", key=self.name)
+                faults.hit("replica.slow", key=self.name)
+                faults.hit("engine.infer", key=self.name)
             pkd, ids, w = self._infer(model, q, seed)
             pkd, ids, w = map(np.asarray, (pkd, ids, w))
         except Exception as exc:     # noqa: BLE001 — forwarded to callers

@@ -1,51 +1,64 @@
-"""``TopicFleet`` — routed, cached, load-shedding serving across N replicas.
+"""``TopicFleet`` — routed, cached, load-shedding, self-healing serving.
 
 Peacock serves hundreds of millions of users from fleets of backend
 inference servers (§3.2, Fig. 5A); one :class:`TopicEngine` behind one
 :class:`SnapshotWatcher` is a single replica of that story. The fleet front
 owns N engine replicas and exposes the *same* ``submit(tokens, deadline_ms)
--> Future`` surface as one engine, with three mechanisms between the caller
+-> Future`` surface as one engine, with four mechanisms between the caller
 and the devices:
 
 * **Routing** — occupancy- and deadline-aware replica selection, not
-  round-robin. Each engine exports a cheap :meth:`TopicEngine.route_state`
-  snapshot (per-bucket queue depth + EWMA service estimate); the router
-  scores every replica's *predicted completion* for the request's shape
-  bucket — full batches already queued ahead cost whole service quanta, a
-  forming partial batch is a discount (the request tops it off and rides a
-  flush that is coming anyway) — and picks the minimum, deterministically
-  (lowest index wins ties, which is what the fake-clock tests pin).
+  round-robin, over a **cached routing view**: per-replica (queue depth,
+  EWMA service estimate) snapshots refreshed on completions (each completion
+  re-reads its replica's :meth:`TopicEngine.route_state`), bumped
+  optimistically on every dispatch, and re-read on a staleness TTL — so a
+  submit costs O(1) lock hops, not one ``route_state`` (engine-lock hop)
+  per replica per request. The router scores every replica's *predicted
+  completion* for the request's shape bucket — full batches already queued
+  ahead cost whole service quanta, a forming partial batch is a discount —
+  and picks the minimum, deterministically (lowest index wins ties).
 * **Admission control / load shedding** — the fleet tracks a live p99
   estimate over engine-served completions. When p99 slack (deadline budget −
   p99 estimate) goes negative the fleet flips to *shedding* and resolves
   new submissions immediately with a typed :class:`ShedResponse` instead of
-  queueing them into guaranteed misses. Hysteresis prevents flap: shedding
-  exits only when p99 drops below ``budget · (1 − hysteresis)``, and every
-  ``probe_every``-th request is admitted as a probe so the estimate can
-  actually observe recovery (shed-everything would freeze the estimator at
-  its panic value forever).
+  queueing them into guaranteed misses. Hysteresis prevents flap, and every
+  ``probe_every``-th shed triggers a fleet-synthesized **probe** submission
+  (explicitly non-paying — a duplicate of the rejected tokens, counted in
+  ``FleetStats.probes``, never cached, never user-visible) so the estimate
+  can observe recovery without ever using paying traffic as the guinea pig.
+* **Self-healing** (DESIGN.md §14) — one :class:`CircuitBreaker` per
+  replica classifies completions (exceptions and deadline *blowouts* are
+  failures); a tripped replica is skipped by the router and excluded from
+  the ``live_version()`` min (a dead replica's stale version must not pin
+  the cache's notion of "live"). After a jittered exponential backoff the
+  breaker admits exactly one request as a recovery probe — and the fleet
+  hedges that request to the best healthy replica in parallel, so paying
+  traffic is never sacrificed to probe a suspect replica. A **failed
+  attempt gets one bounded retry** on a different healthy replica within
+  the remaining deadline budget; a **predicted-miss** primary gets one
+  parallel hedge. Either way at most 2 engine submissions per request,
+  stamped on ``Response.attempts``/``hedged``. All replicas open → typed
+  ``ShedResponse(reason="unhealthy")``.
 * **Hot-query result cache** — query traffic is power-law, so a
   :class:`ResultCache` (segmented LRU, byte-budgeted) serves the repeating
   head while the engines batch the long tail. Entries are keyed on
   ``(token bytes, bucket)`` and version-tagged: a hit is only legal while
-  the entry's ``model_version`` equals the *fleet-wide live version* (the
-  min over replicas' lock-free version reads), so a cached result can never
-  cross a snapshot hot-swap — mid-rollout (replicas briefly divergent) the
-  fleet conservatively serves misses rather than risk staleness. Every hit
-  still stamps ``Response.model_version`` (and ``cached=True``).
+  the entry's ``model_version`` equals the *fleet-wide live version*, so a
+  cached result can never cross a snapshot hot-swap.
 
 Snapshot fan-out: :meth:`attach_watchers` gives every replica its own
 :class:`SnapshotWatcher` on the shared snapshot directory, so a publish
-rolls across the fleet within one poll interval with zero dropped requests
-(each engine's swap atomicity does the per-replica work); the watcher's
-``on_swap`` hook eagerly drops newly-stale cache entries.
+rolls across the fleet within one poll interval with zero dropped requests;
+the watcher's ``on_swap`` hook eagerly drops newly-stale cache entries.
 
 Concurrency contract (checked by ``repro.analysis.concurrency``): all fleet
-counters and the shed state machine live under ``_lock``; the fleet never
-holds ``_lock`` while calling into an engine, a watcher or the cache (each
-has its own lock — no nesting, no fleet edge in the lock-order graph), and
-completion bookkeeping runs in the engines' callback threads through the
-same guarded paths as submitters.
+counters, the shed state machine, the routing view and the health map live
+under ``_lock``; the fleet never holds ``_lock`` while calling into an
+engine, a watcher, a breaker or the cache (each has its own lock — no
+nesting, no fleet edge in the lock-order graph), and completion bookkeeping
+runs in the engines' callback threads through the same guarded paths as
+submitters. Per-request attempt state lives in a small per-submission dict
+with its own lock (innermost, no calls out while held).
 """
 from __future__ import annotations
 
@@ -54,25 +67,29 @@ import functools
 import threading
 import time
 from concurrent.futures import Future
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import features
 from repro.core.rtlda import DEFAULT_BUCKETS, RTLDAModel, select_bucket
+from repro.serving import health
 from repro.serving.cache import ResultCache
 from repro.serving.engine import TopicEngine
+from repro.serving.health import CircuitBreaker
 from repro.serving.protocol import (FleetStats, Response, ShedResponse,
                                     percentiles)
 from repro.serving.watcher import SnapshotWatcher
 
 _LAT_WINDOW = 2048    # fleet-level latency window (p50/p99 + shed estimate)
 _P99_EVERY = 32       # recompute the shed p99 estimate every N completions
+_MAX_ATTEMPTS = 2     # per request: primary + (one hedge OR one retry)
+_MISS_PENALTY = 1e6   # score marker: predicted past the deadline
 
 
 class TopicFleet:
     """N ``TopicEngine`` replicas behind one ``submit`` — routing, admission
-    control and a hot-query cache between callers and the devices."""
+    control, circuit breakers, hedged retries and a hot-query cache."""
 
     # concurrency contract: every mutable fleet field is written from both
     # submitter threads and the engines' completion-callback threads
@@ -80,10 +97,13 @@ class TopicFleet:
         "_n_submitted": "_lock", "_n_completed": "_lock",
         "_n_failed": "_lock", "_n_shed": "_lock",
         "_n_cache_hits": "_lock", "_n_cache_misses": "_lock",
+        "_n_hedges": "_lock", "_n_retries": "_lock", "_n_probes": "_lock",
+        "_n_unhealthy_shed": "_lock",
         "_lat_ms": "_lock", "_p99_est_ms": "_lock", "_shedding": "_lock",
         "_since_probe": "_lock", "_since_p99": "_lock",
         "_routed": "_lock", "_next_id": "_lock", "_t0": "_lock",
         "_closed": "_lock",
+        "_view": "_lock", "_view_at": "_lock", "_unhealthy": "_lock",
     }
 
     def __init__(self, model: Optional[RTLDAModel] = None,
@@ -100,6 +120,14 @@ class TopicFleet:
                  deadline_budget_ms: float = 50.0,
                  shed_hysteresis: float = 0.25,
                  probe_every: int = 8,
+                 hedge: bool = True,
+                 view_ttl_ms: float = 250.0,
+                 breaker_threshold: int = 3,
+                 breaker_backoff_ms: float = 200.0,
+                 breaker_max_backoff_ms: float = 5000.0,
+                 blowout_factor: float = 3.0,
+                 probe_timeout_ms: float = 2000.0,
+                 seed: int = 0,
                  clock=time.monotonic,
                  start: bool = True):
         if engines is not None:
@@ -119,11 +147,14 @@ class TopicFleet:
                 TopicEngine(model, buckets=buckets, max_batch=max_batch,
                             max_delay_ms=max_delay_ms,
                             service_estimate_ms=service_estimate_ms,
-                            infer_fn=infer_fn, clock=clock, start=start)
-                for _ in range(n_replicas))
+                            infer_fn=infer_fn, clock=clock,
+                            name=f"replica{i}", start=start)
+                for i in range(n_replicas))
         self.buckets = self.engines[0].buckets
         self.max_batch = self.engines[0].max_batch
         self.shed = bool(shed)
+        self.hedge = bool(hedge)
+        self.view_ttl_ms = float(view_ttl_ms)
         self.deadline_budget_ms = float(deadline_budget_ms)
         if not 0.0 < shed_hysteresis < 1.0:
             raise ValueError("shed_hysteresis must be in (0, 1)")
@@ -136,6 +167,16 @@ class TopicFleet:
                 if cache_mb > 0 else None
         self._clock = clock
         self._watchers: List[SnapshotWatcher] = []
+        # one breaker per replica; decorrelated jitter seeds so replicas
+        # tripped by one cause don't re-probe in lockstep
+        self.breakers: Tuple[CircuitBreaker, ...] = tuple(
+            CircuitBreaker(failure_threshold=breaker_threshold,
+                           backoff_ms=breaker_backoff_ms,
+                           max_backoff_ms=breaker_max_backoff_ms,
+                           blowout_factor=blowout_factor,
+                           probe_timeout_ms=probe_timeout_ms,
+                           clock=clock, seed=seed * 1009 + i)
+            for i in range(len(self.engines)))
 
         self._lock = threading.Lock()
         self._t0 = clock()
@@ -146,6 +187,10 @@ class TopicFleet:
         self._n_shed = 0
         self._n_cache_hits = 0
         self._n_cache_misses = 0
+        self._n_hedges = 0
+        self._n_retries = 0
+        self._n_probes = 0
+        self._n_unhealthy_shed = 0
         self._lat_ms = collections.deque(maxlen=_LAT_WINDOW)
         self._p99_est_ms = 0.0
         self._since_p99 = 0
@@ -153,13 +198,24 @@ class TopicFleet:
         self._since_probe = 0
         self._routed = [0] * len(self.engines)
         self._closed = False
+        # cached routing view: per-replica {bucket: (qlen, est_ms)} + the
+        # clock time it was read; refreshed on completions / TTL, bumped
+        # optimistically on dispatch (submit never takes an engine lock
+        # just to score replicas)
+        self._view: List[Dict[int, Tuple[int, float]]] = [
+            dict(eng.route_state()) for eng in self.engines]
+        self._view_at: List[float] = [clock()] * len(self.engines)
+        # replica -> breaker reopen time (clock s); presence = skip in
+        # routing and exclude from the live_version() min
+        self._unhealthy: Dict[int, float] = {}
 
     # ----------------------------------------------------------------- API
 
     def submit(self, tokens, deadline_ms: Optional[float] = None) -> Future:
         """Same contract as ``TopicEngine.submit``: resolves to a
-        :class:`Response` — or, when admission control is shedding, to a
-        :class:`ShedResponse` immediately (reject-fast, never queue-to-miss).
+        :class:`Response` — or, when admission control is shedding (or every
+        healthy replica's breaker is open), to a :class:`ShedResponse`
+        immediately (reject-fast, never queue-to-miss).
         """
         toks = np.asarray(tokens, np.int32).reshape(-1)
         now = self._clock()
@@ -201,16 +257,20 @@ class TopicFleet:
                 self._n_cache_misses += 1
             rid = self._next_id
             self._next_id += 1
-            shed_now = False
+            shed_now = spawn_probe = False
             if self.shed and self._shedding:
+                # shed EVERY paying request while shedding; recovery is
+                # observed through synthesized probes (every probe_every-th
+                # shed), never by sacrificing a paying request
+                shed_now = True
                 self._since_probe += 1
-                # every probe_every-th request rides through so the p99
-                # estimate can observe recovery; the rest reject fast
-                shed_now = self._since_probe % self.probe_every != 0
+                spawn_probe = self._since_probe % self.probe_every == 0
             if shed_now:
                 self._n_shed += 1
                 p99 = self._p99_est_ms
         if shed_now:
+            if spawn_probe:
+                self._spawn_probe(toks, bucket)
             fut = Future()
             fut.set_result(ShedResponse(
                 request_id=rid, reason="p99-slack", p99_est_ms=p99,
@@ -218,20 +278,53 @@ class TopicFleet:
                 retry_after_ms=max(0.0, p99 - budget)))
             return fut
 
-        idx = self._route(bucket, deadline_ms)
-        with self._lock:
-            self._routed[idx] += 1
-        efut = self.engines[idx].submit(toks, deadline_ms)
-        efut.add_done_callback(
-            functools.partial(self._on_engine_done, key))
-        return efut
+        routed = self._route(bucket, deadline_ms, now)
+        if routed is None:
+            # every replica's breaker is open: reject-fast with the time
+            # until the soonest breaker re-probes as the back-off hint
+            with self._lock:
+                self._n_shed += 1
+                self._n_unhealthy_shed += 1
+                p99 = self._p99_est_ms
+                reopen = min(self._unhealthy.values(), default=now)
+            fut = Future()
+            fut.set_result(ShedResponse(
+                request_id=rid, reason="unhealthy", p99_est_ms=p99,
+                deadline_ms=deadline_ms,
+                retry_after_ms=max(0.0, (reopen - now) * 1e3)))
+            return fut
+
+        primary, hedge_idx = routed
+        outer: Future = Future()
+        ctx = {
+            "lock": threading.Lock(), "outer": outer, "key": key,
+            "toks": toks, "bucket": bucket, "deadline_ms": deadline_ms,
+            "arrival": now, "tried": [primary], "attempts": 1,
+            "pending": 1, "resolved": False, "hedged": False,
+        }
+        if hedge_idx is not None:
+            with ctx["lock"]:
+                ctx["attempts"] = 2
+                ctx["pending"] = 2
+                ctx["tried"].append(hedge_idx)
+                ctx["hedged"] = True
+            with self._lock:
+                self._n_hedges += 1
+        self._dispatch(ctx, primary)
+        if hedge_idx is not None:
+            self._dispatch(ctx, hedge_idx)
+        return outer
 
     def infer(self, requests: Sequence,
               deadline_ms: Optional[float] = None) -> List[Response]:
         """Sync convenience: submit all, drain every replica, return in
-        order (mirrors ``TopicEngine.infer``)."""
+        order (mirrors ``TopicEngine.infer``). Flushes once per possible
+        attempt: a failed attempt's retry lands after the first drain."""
         futs = [self.submit(r, deadline_ms) for r in requests]
-        self.flush_all()
+        for _ in range(_MAX_ATTEMPTS + 1):
+            self.flush_all()
+            if all(f.done() for f in futs):
+                break
         return [f.result() for f in futs]
 
     def swap_model(self, model: RTLDAModel, version=None) -> None:
@@ -267,6 +360,7 @@ class TopicFleet:
     def stats(self) -> FleetStats:
         per = tuple(eng.stats() for eng in self.engines)   # outside _lock
         cache_stats = self.cache.stats() if self.cache is not None else None
+        breakers = tuple(b.snapshot() for b in self.breakers)
         live = self.live_version()
         with self._lock:
             now = self._clock()
@@ -290,29 +384,56 @@ class TopicFleet:
                 model_version=live,
                 routed=tuple(self._routed),
                 per_replica=per,
-                cache=cache_stats)
+                cache=cache_stats,
+                failed=self._n_failed,
+                probes=self._n_probes,
+                hedges=self._n_hedges,
+                retries=self._n_retries,
+                unhealthy_shed=self._n_unhealthy_shed,
+                breakers=breakers)
 
     def reset_stats(self) -> None:
-        """Zero fleet counters/windows (after warmup); the shed state machine
-        and the cache contents are kept — they are operating state."""
+        """Zero fleet counters/windows (after warmup); the shed state
+        machine, breaker states and the cache contents are kept — they are
+        operating state."""
         for eng in self.engines:
             eng.reset_stats()
         with self._lock:
             self._t0 = self._clock()
             self._n_submitted = self._n_completed = self._n_failed = 0
             self._n_shed = self._n_cache_hits = self._n_cache_misses = 0
+            self._n_hedges = self._n_retries = self._n_probes = 0
+            self._n_unhealthy_shed = 0
             self._lat_ms.clear()
             self._routed = [0] * len(self.engines)
 
     def live_version(self) -> Optional[int]:
-        """Fleet-wide live model version: the min over replicas' lock-free
-        version reads. None when any replica's label is non-integral —
-        mid-rollout the min is the *oldest still-serving* version, which is
-        exactly the only version a cache hit is safe against."""
-        versions = [eng.model_version for eng in self.engines]
-        if any(not isinstance(v, int) for v in versions):
+        """Fleet-wide live model version: the min over *healthy* replicas'
+        lock-free version reads. None when any healthy replica's label is
+        non-integral (or no replica is healthy) — mid-rollout the min is
+        the *oldest still-serving* version, which is exactly the only
+        version a cache hit is safe against. A tripped replica is excluded:
+        its stale version must not pin the fleet's notion of "live" while
+        nothing is routed to it anyway."""
+        with self._lock:
+            skip = set(self._unhealthy)
+        versions = [eng.model_version
+                    for i, eng in enumerate(self.engines) if i not in skip]
+        if not versions or any(not isinstance(v, int) for v in versions):
             return None
         return min(versions)
+
+    def refresh_routing(self, replica: Optional[int] = None) -> None:
+        """Re-read ``route_state`` truth into the cached routing view for
+        one replica (or all). Called from completion callbacks and the TTL
+        path; public so tests/operators can force a coherent view."""
+        idxs = range(len(self.engines)) if replica is None else (replica,)
+        states = [(i, dict(self.engines[i].route_state())) for i in idxs]
+        now = self._clock()
+        with self._lock:
+            for i, st in states:
+                self._view[i] = st
+                self._view_at[i] = now
 
     def pump(self, force: bool = False) -> int:
         """Manual drive (fake-clock tests): pump every replica."""
@@ -340,43 +461,168 @@ class TopicFleet:
 
     # ------------------------------------------------------------- routing
 
-    def _route(self, bucket: int, deadline_ms: Optional[float]) -> int:
-        """Pick the replica with the best predicted completion for this
-        bucket. Score (ms) = est · (1 + full batches queued ahead), minus a
+    def _score(self, i: int, bucket: int,  # requires: _lock
+               deadline_ms: Optional[float]) -> float:
+        """Predicted-completion score for replica ``i`` from the cached
+        view. Score (ms) = est · (1 + full batches queued ahead), minus a
         top-off discount when a partial batch is forming (the request rides
-        a flush that is already coming), plus a small whole-replica pressure
-        term so ties break toward the least busy replica — then lowest
-        index. Replicas predicted past the deadline are heavily penalized
-        (still selectable: someone must serve the request or admission
-        control sheds it)."""
-        best_idx, best_score = 0, None
-        for i, eng in enumerate(self.engines):
-            state = eng.route_state()
-            qlen, est = state[bucket]
-            total_queued = sum(q for q, _ in state.values())
-            batches_ahead = qlen // eng.max_batch
-            score = est * (1.0 + batches_ahead)
-            if 0 < qlen % eng.max_batch:
-                score -= 0.25 * est          # top off the forming batch
-            score += 1e-3 * est * total_queued
-            if deadline_ms is not None and score > deadline_ms:
-                score += 1e6                 # predicted miss: last resort
-            if best_score is None or score < best_score:
-                best_idx, best_score = i, score
-        return best_idx
+        a flush that is already coming), plus a small whole-replica
+        pressure term so ties break toward the least busy replica. A score
+        past the deadline carries ``_MISS_PENALTY`` (still selectable:
+        someone must serve the request or admission control sheds it)."""
+        qlen, est = self._view[i][bucket]
+        total_queued = sum(q for q, _ in self._view[i].values())
+        batches_ahead = qlen // self.max_batch
+        score = est * (1.0 + batches_ahead)
+        if 0 < qlen % self.max_batch:
+            score -= 0.25 * est              # top off the forming batch
+        score += 1e-3 * est * total_queued
+        if deadline_ms is not None and score > deadline_ms:
+            score += _MISS_PENALTY           # predicted miss: last resort
+        return score
+
+    def _route(self, bucket: int, deadline_ms: Optional[float],
+               now: float) -> Optional[Tuple[int, Optional[int]]]:
+        """Pick ``(primary, hedge)`` replicas for one request.
+
+        * Views staler than ``view_ttl_ms`` are re-read first (the fallback
+          when completions are rare; steady-state traffic refreshes views
+          via completion callbacks at zero cost here).
+        * A tripped replica whose backoff has expired claims this request
+          as its breaker's recovery probe (at most one in flight — the
+          breaker's ``allow`` gate) — and the request is simultaneously
+          hedged to the best healthy replica, so the caller never pays for
+          probing a suspect replica.
+        * Otherwise: best healthy score wins (lowest index on ties); when
+          the best is predicted past the deadline, the second-best healthy
+          replica rides along as a parallel hedge.
+        * No healthy replica and no probe-eligible one → ``None`` (the
+          caller sheds with ``reason="unhealthy"``).
+        """
+        n = len(self.engines)
+        with self._lock:
+            unhealthy = dict(self._unhealthy)
+            stale = [i for i in range(n)
+                     if (now - self._view_at[i]) * 1e3 > self.view_ttl_ms]
+        for i in stale:
+            self.refresh_routing(i)
+        # breaker recovery probe: first expired-backoff replica (index
+        # order — deterministic) whose breaker admits a probe
+        probe_idx = None
+        for i in sorted(unhealthy):
+            if now >= unhealthy[i] and self.breakers[i].allow():
+                probe_idx = i
+                break
+        with self._lock:
+            best = second = None
+            best_score = second_score = 0.0
+            for i in range(n):
+                if i in unhealthy:
+                    continue
+                score = self._score(i, bucket, deadline_ms)
+                if best is None or score < best_score:
+                    second, second_score = best, best_score
+                    best, best_score = i, score
+                elif second is None or score < second_score:
+                    second, second_score = i, score
+            if probe_idx is not None:
+                primary, hedge = probe_idx, best if self.hedge else None
+            elif best is None:
+                return None
+            else:
+                primary = best
+                hedge = None
+                if self.hedge and second is not None \
+                        and deadline_ms is not None \
+                        and best_score >= _MISS_PENALTY:
+                    hedge = second
+            # optimistic view bump: the dispatches below land in these
+            # queues; the next submit must see them without an engine read
+            for i in (primary, hedge):
+                if i is not None:
+                    qlen, est = self._view[i][bucket]
+                    self._view[i][bucket] = (qlen + 1, est)
+            return primary, hedge
+
+    def _pick_retry(self, ctx: dict) -> Optional[int]:
+        """Best healthy replica not yet tried for this request (retry
+        placement); None when every healthy replica was already tried."""
+        with ctx["lock"]:
+            tried = set(ctx["tried"])
+        with self._lock:
+            unhealthy = set(self._unhealthy)
+            best, best_score = None, 0.0
+            for i in range(len(self.engines)):
+                if i in unhealthy or i in tried:
+                    continue
+                score = self._score(i, ctx["bucket"], ctx["deadline_ms"])
+                if best is None or score < best_score:
+                    best, best_score = i, score
+            if best is not None:
+                qlen, est = self._view[best][ctx["bucket"]]
+                self._view[best][ctx["bucket"]] = (qlen + 1, est)
+        return best
+
+    # ---------------------------------------------------------- dispatching
+
+    def _dispatch(self, ctx: dict, idx: int) -> None:
+        """Submit one attempt to replica ``idx``. A retry's deadline is the
+        *remaining* budget — the engine schedules it against time the
+        request has left, not a fresh allowance."""
+        deadline_ms = ctx["deadline_ms"]
+        if deadline_ms is not None:
+            elapsed_ms = (self._clock() - ctx["arrival"]) * 1e3
+            deadline_ms = max(1e-3, deadline_ms - elapsed_ms)
+        with self._lock:
+            self._routed[idx] += 1
+        try:
+            efut = self.engines[idx].submit(ctx["toks"], deadline_ms)
+        except RuntimeError as exc:      # replica closed underneath us
+            self._attempt_failed(ctx, idx, exc, breaker=False)
+            return
+        efut.add_done_callback(
+            functools.partial(self._on_attempt_done, ctx, idx))
+
+    def _spawn_probe(self, toks: np.ndarray, bucket: int) -> None:
+        """Fleet-synthesized shed probe: a NON-paying duplicate of a shed
+        request, submitted to the best healthy replica so the p99 estimate
+        can observe recovery. Never cached, never user-visible; counted in
+        ``FleetStats.probes``."""
+        now = self._clock()
+        routed = self._route(bucket, None, now)
+        if routed is None:
+            return
+        idx = routed[0]
+        with self._lock:
+            self._n_probes += 1
+            self._routed[idx] += 1
+        try:
+            efut = self.engines[idx].submit(np.array(toks, copy=True), None)
+        except RuntimeError:
+            return
+        efut.add_done_callback(
+            functools.partial(self._on_probe_done, idx))
 
     # ----------------------------------------------------------- completion
 
-    def _on_engine_done(self, key, fut: Future) -> None:
-        """Runs in the completing engine's thread: latency bookkeeping, the
-        shed state machine, and cache admission. Never raises."""
+    def _on_attempt_done(self, ctx: dict, idx: int, fut: Future) -> None:
+        """Runs in the completing engine's thread: breaker + latency
+        bookkeeping, the shed state machine, hedge/retry resolution and
+        cache admission. Never raises."""
+        self.refresh_routing(idx)
         if fut.cancelled():
+            self._attempt_failed(ctx, idx,
+                                 RuntimeError("attempt cancelled"),
+                                 breaker=False)
             return
-        if fut.exception() is not None:
-            with self._lock:
-                self._n_failed += 1
+        exc = fut.exception()
+        if exc is not None:
+            self._attempt_failed(ctx, idx, exc, breaker=True)
             return
         resp = fut.result()
+        self.breakers[idx].record_response(resp.latency_ms,
+                                           ctx["deadline_ms"])
+        self._sync_health(idx)
         with self._lock:
             self._n_completed += 1
             self._lat_ms.append(resp.latency_ms)
@@ -387,14 +633,109 @@ class TopicFleet:
                 self._p99_est_ms = p99
                 if self.shed:
                     self._update_shed_state(p99)
+        with ctx["lock"]:
+            ctx["pending"] -= 1
+            won = not ctx["resolved"]
+            if won:
+                ctx["resolved"] = True
+            attempts = ctx["attempts"]
+            hedged = ctx["hedged"]
+        if not won:
+            return      # hedge loser: bookkeeping above was the point
+        resp.attempts = attempts
+        resp.hedged = hedged
+        if attempts > 1:
+            # user-perceived latency spans ALL attempts, measured from the
+            # original fleet arrival (a retry's engine-side latency alone
+            # would understate it)
+            resp.latency_ms = (self._clock() - ctx["arrival"]) * 1e3
+            if ctx["deadline_ms"] is not None:
+                resp.deadline_missed = \
+                    resp.latency_ms > ctx["deadline_ms"]
+        key = ctx["key"]
         if key is not None and resp.model_version is not None \
                 and resp.model_version == self.live_version():
-            # admit only results still current fleet-wide: an entry computed
-            # on a replica that already swapped ahead (or behind) must not
-            # be served to callers while the fleet's live version differs
+            # admit only results still current fleet-wide: an entry
+            # computed on a replica that already swapped ahead (or behind)
+            # must not be served while the fleet's live version differs
             self.cache.put(key, resp.model_version, resp.pkd,
                            resp.feature_ids, resp.feature_weights,
                            resp.bucket)
+        ctx["outer"].set_result(resp)
+
+    def _attempt_failed(self, ctx: dict, idx: int, exc: BaseException,
+                        breaker: bool) -> None:
+        """One attempt failed: record it, then either retry on a different
+        healthy replica (once, within remaining budget), wait for a still-
+        pending hedge partner, or resolve the caller's future with the
+        exception."""
+        if breaker:
+            self.breakers[idx].record_failure()
+            self._sync_health(idx)
+        want_retry = False
+        with ctx["lock"]:
+            ctx["pending"] -= 1
+            if ctx["resolved"] or ctx["pending"] > 0:
+                return      # hedge partner won already / may still win
+            if ctx["attempts"] < _MAX_ATTEMPTS:
+                remaining = True
+                if ctx["deadline_ms"] is not None:
+                    elapsed_ms = (self._clock() - ctx["arrival"]) * 1e3
+                    remaining = elapsed_ms < ctx["deadline_ms"]
+                want_retry = bool(remaining)
+        if want_retry:
+            retry_idx = self._pick_retry(ctx)
+            if retry_idx is not None:
+                with ctx["lock"]:
+                    ctx["attempts"] += 1
+                    ctx["pending"] += 1
+                    ctx["tried"].append(retry_idx)
+                with self._lock:
+                    self._n_retries += 1
+                self._dispatch(ctx, retry_idx)
+                return
+        with ctx["lock"]:
+            if ctx["resolved"]:
+                return
+            ctx["resolved"] = True
+        with self._lock:
+            self._n_failed += 1
+        ctx["outer"].set_exception(exc)
+
+    def _on_probe_done(self, idx: int, fut: Future) -> None:
+        """Shed-probe completion: feed the breaker and the p99 estimator —
+        the whole point of the probe is observing recovery."""
+        self.refresh_routing(idx)
+        if fut.cancelled():
+            return
+        exc = fut.exception()
+        if exc is not None:
+            self.breakers[idx].record_failure()
+            self._sync_health(idx)
+            return
+        resp = fut.result()
+        self.breakers[idx].record_response(resp.latency_ms, None)
+        self._sync_health(idx)
+        with self._lock:
+            self._lat_ms.append(resp.latency_ms)
+            self._since_p99 += 1
+            if self._since_p99 >= _P99_EVERY or self._shedding:
+                self._since_p99 = 0
+                _, p99 = percentiles(self._lat_ms)
+                self._p99_est_ms = p99
+                if self.shed:
+                    self._update_shed_state(p99)
+
+    def _sync_health(self, idx: int) -> None:
+        """Mirror replica ``idx``'s breaker state into the ``_unhealthy``
+        map the router and ``live_version`` read — one breaker-lock hop
+        here (a completion) buys lock-free health checks on every submit."""
+        snap = self.breakers[idx].snapshot()
+        with self._lock:
+            if snap["state"] == health.CLOSED:
+                self._unhealthy.pop(idx, None)
+            else:
+                self._unhealthy[idx] = snap["reopen_at"]
 
     def _update_shed_state(self, p99: float) -> None:  # requires: _lock
         """Hysteresis band: enter shedding when p99 exceeds the budget

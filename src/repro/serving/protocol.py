@@ -69,6 +69,11 @@ class Response:
     cached: bool = False        # served from the fleet's result cache (the
     # model_version is the version the cached entry was computed under — a
     # hit is only legal while that version is still live fleet-wide)
+    attempts: int = 1           # engine submissions this response consumed:
+    # 1 normally, 2 when the fleet hedged (predicted-miss or breaker probe)
+    # or retried a failed attempt on a different replica
+    hedged: bool = False        # a second attempt ran in parallel (hedge),
+    # as opposed to sequentially after a failure (retry)
 
     def as_dict(self) -> dict:
         """Legacy ``BatchingServer.infer`` result-dict view."""
@@ -146,11 +151,21 @@ class FleetStats:
     routed: Tuple[int, ...]     # engine-served requests per replica
     per_replica: Tuple[EngineStats, ...]
     cache: Optional[dict] = None  # ResultCache.stats() when a cache is on
+    failed: int = 0             # requests resolved with an exception (after
+    # the bounded retry was exhausted or impossible)
+    probes: int = 0             # fleet-synthesized shed probes (non-paying;
+    # breaker recovery probes are paying requests hedged for safety and
+    # are counted per-breaker in ``breakers[i]["probes"]``)
+    hedges: int = 0             # requests that ran a parallel second attempt
+    retries: int = 0            # failed attempts re-dispatched sequentially
+    unhealthy_shed: int = 0     # sheds with every replica's breaker open
+    breakers: Tuple[dict, ...] = ()  # CircuitBreaker.snapshot() per replica
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["routed"] = list(self.routed)
         d["per_replica"] = [s.as_dict() for s in self.per_replica]
+        d["breakers"] = [dict(b) for b in self.breakers]
         return d
 
 

@@ -28,7 +28,8 @@ import threading
 import time
 from typing import Callable, Optional
 
-from repro.checkpoint import snapshots
+from repro.checkpoint import io, snapshots
+from repro.reliability import faults
 
 
 class SnapshotWatcher:
@@ -36,20 +37,23 @@ class SnapshotWatcher:
     # wait_for_version) while the poller thread writes it
     _GUARDED_BY = {
         "version": "_lock", "swaps": "_lock", "poll_failures": "_lock",
-        "last_error": "_lock", "_thread": "_lock",
+        "last_error": "_lock", "quarantined": "_lock", "_thread": "_lock",
     }
 
     def __init__(self, snapshot_dir: str, engine, poll_s: float = 0.5,
-                 on_swap: Optional[Callable[[int, dict], None]] = None):
+                 on_swap: Optional[Callable[[int, dict], None]] = None,
+                 max_backoff_s: float = 30.0):
         self.snapshot_dir = snapshot_dir
         self.engine = engine
         self.poll_s = float(poll_s)
+        self.max_backoff_s = float(max_backoff_s)
         self.on_swap = on_swap
         self._lock = threading.Lock()
         self.version: Optional[int] = None     # last version swapped in
         self.swaps = 0
         self.poll_failures = 0                 # consecutive failed reads
         self.last_error: Optional[BaseException] = None
+        self.quarantined = 0                   # corrupt versions retired
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -60,6 +64,17 @@ class SnapshotWatcher:
         Returns the swapped version, or None. A version rotated away between
         listing and reading is skipped; the next tick re-resolves latest.
 
+        Last-good fallback (DESIGN.md §14): candidates newer than the live
+        version are tried NEWEST FIRST; one whose payload fails the SHA-256
+        check (:class:`io.IntegrityError` — torn write, bit rot) is
+        quarantined on disk and the walk falls back to the next-newest,
+        so one bad publish costs nothing but staleness until the publisher
+        ships a good version. A *transient* read failure (rotation race,
+        dead mount) aborts the tick instead — the streak is visible as
+        ``poll_failures``/``last_error`` and drives the background thread's
+        exponential backoff, so a broken publish dir is not hammered at
+        full poll cadence.
+
         IO and the engine swap run without ``_lock`` held — only the
         snapshot of ``version`` before and the counter updates after take
         it. Concurrent polls (manual tick racing the background thread) are
@@ -68,33 +83,53 @@ class SnapshotWatcher:
         """
         with self._lock:
             known = self.version
-        latest = snapshots.latest_version(self.snapshot_dir)
-        if latest is None or (known is not None and latest <= known):
-            return None
         try:
-            model, meta = snapshots.load_snapshot(self.snapshot_dir, latest)
+            if faults._PLANE is not None:
+                faults.hit("watcher.poll")
+            versions = snapshots.snapshot_versions(self.snapshot_dir)
         except OSError as exc:
-            # rotated/incomplete mid-read: retry next tick. A PERSISTENT
-            # failure (permissions, dead mount) is visible to operators as
-            # a growing ``poll_failures`` streak + ``last_error`` — the
-            # model going stale must not be silent.
             with self._lock:
                 self.poll_failures += 1
                 self.last_error = exc
             return None
-        # swap outside _lock: swap_model takes the engine's condition, and
-        # nesting watcher._lock -> engine._cv would put this lock above the
-        # engine's in the global order for no benefit
-        self.engine.swap_model(model, version=latest)
-        with self._lock:
-            self.poll_failures = 0
-            self.last_error = None
-            if self.version is None or latest > self.version:
-                self.version = latest
-                self.swaps += 1
-        if self.on_swap is not None:
-            self.on_swap(latest, meta)
-        return latest
+        candidates = [v for v in versions if known is None or v > known]
+        for latest in reversed(candidates):     # newest first
+            try:
+                model, meta = snapshots.load_snapshot(
+                    self.snapshot_dir, latest)
+            except io.IntegrityError as exc:
+                # corrupt — never servable: retire it (the rename makes it
+                # invisible to every future listing, fleet-wide) and fall
+                # back to the next-newest candidate
+                bad = exc.version if exc.version is not None else latest
+                snapshots.quarantine_snapshot(self.snapshot_dir, bad)
+                with self._lock:
+                    self.quarantined += 1
+                    self.last_error = exc
+                continue
+            except OSError as exc:
+                # rotated/incomplete mid-read: retry next tick. A PERSISTENT
+                # failure (permissions, dead mount) is visible to operators
+                # as a growing ``poll_failures`` streak + ``last_error`` —
+                # the model going stale must not be silent.
+                with self._lock:
+                    self.poll_failures += 1
+                    self.last_error = exc
+                return None
+            # swap outside _lock: swap_model takes the engine's condition,
+            # and nesting watcher._lock -> engine._cv would put this lock
+            # above the engine's in the global order for no benefit
+            self.engine.swap_model(model, version=latest)
+            with self._lock:
+                self.poll_failures = 0
+                self.last_error = None
+                if self.version is None or latest > self.version:
+                    self.version = latest
+                    self.swaps += 1
+            if self.on_swap is not None:
+                self.on_swap(latest, meta)
+            return latest
+        return None
 
     # --------------------------------------------------------- background --
 
@@ -129,10 +164,18 @@ class SnapshotWatcher:
                 if not t.is_alive() and self._thread is t:
                     self._thread = None
 
+    def backoff_s(self) -> float:
+        """Next poll interval: ``poll_s`` while healthy, doubling per
+        consecutive transient failure up to ``max_backoff_s`` — a dead
+        publish dir is probed at a decaying cadence, not hammered."""
+        with self._lock:
+            streak = self.poll_failures
+        return min(self.poll_s * (2.0 ** min(streak, 20)), self.max_backoff_s)
+
     def _run(self) -> None:
         while not self._stop.is_set():
             self.poll()
-            self._stop.wait(self.poll_s)
+            self._stop.wait(self.backoff_s())
 
     def wait_for_version(self, version: int, timeout_s: float = 30.0) -> bool:
         """Block until ``version`` (or newer) is live on the engine. Polls

@@ -1,0 +1,383 @@
+"""Chaos lane: the self-healing fleet under deterministic injected faults.
+
+Composes the §14 mechanisms proven in ``test_reliability.py`` into fleet
+scenarios: breakers tripping and the router skipping, bounded hedged
+retries, unhealthy-shed, recovery probes after backoff, the O(1)-lock-hop
+routing view, the open→half-open transition racing a hot swap — and the
+acceptance scenario: a fleet of 4 under Zipf load with one replica dying
+mid-run AND a torn-write snapshot published mid-rollout, which must keep
+serving, quarantine the bad version, and converge on the next good publish,
+bit-for-bit reproducibly by seed.
+
+Determinism idiom matches test_fleet.py: fake clock, ``start=False``
+engines, manual ``flush_all`` — every routing/breaker/retry decision runs
+inline in the test thread, so two runs with one seed take identical paths.
+"""
+import os
+import tempfile
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io, snapshots
+from repro.core import rtlda
+from repro.reliability import faults
+from repro.reliability.faults import FaultInjected, FaultPlane
+from repro.serving import Response, ShedResponse, TopicEngine, TopicFleet
+from repro.serving.health import CLOSED, OPEN
+
+pytestmark = pytest.mark.chaos
+
+K, V = 6, 40
+
+
+def _model(seed=0):
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(rng.integers(0, 20, (V, K)).astype(np.int32))
+    return rtlda.build_model(phi, jnp.float32(0.01),
+                             jnp.full((K,), 0.5, jnp.float32))
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _fleet(clock=None, n=2, model=None, **kw):
+    """Named fake-clock replicas (seam keys = engine names)."""
+    clock = clock or FakeClock()
+    model = model if model is not None else _model()
+    engines = [TopicEngine(model, buckets=(4, 8, 16), max_batch=4,
+                           n_iters=2, n_trials=1, top_n=3,
+                           clock=clock, start=False, name=f"replica{i}")
+               for i in range(n)]
+    kw.setdefault("cache_mb", 0.0)
+    kw.setdefault("shed", False)
+    kw.setdefault("breaker_backoff_ms", 200.0)
+    return TopicFleet(engines=engines, clock=clock, **kw)
+
+
+def _q(rng, n=3):
+    return rng.integers(0, V, size=n).astype(np.int32)
+
+
+def _drain(fleet, futs, rounds=4):
+    """Bounded flush loop: primaries, then any retries they spawned."""
+    for _ in range(rounds):
+        fleet.flush_all()
+        if all(f.done() for f in futs):
+            return
+    raise AssertionError("futures still pending after bounded drain")
+
+
+def _corrupt(path):
+    with open(path, "r+b") as f:
+        f.seek(os.path.getsize(path) // 2)
+        block = f.read(8)
+        f.seek(-len(block), os.SEEK_CUR)
+        f.write(bytes(b ^ 0xFF for b in block))
+
+
+# --------------------------------------------------------- hedged retries --
+
+
+def test_failed_attempt_gets_one_retry_on_a_different_replica():
+    clock = FakeClock()
+    fleet = _fleet(clock, breaker_threshold=3)
+    rng = np.random.default_rng(0)
+    plane = FaultPlane().fail("engine.infer", key="replica0", nth=1)
+    with faults.injected(plane):
+        fut = fleet.submit(_q(rng))          # ties route to replica0
+        _drain(fleet, [fut])
+    r = fut.result()
+    assert isinstance(r, Response)
+    assert r.attempts == 2 and not r.hedged  # retried, not raced
+    st = fleet.stats()
+    assert st.retries == 1 and st.failed == 0 and st.completed == 1
+    assert st.routed == (1, 1)               # one attempt on each replica
+    fleet.close()
+
+
+def test_breaker_trips_and_router_skips_the_sick_replica():
+    clock = FakeClock()
+    fleet = _fleet(clock, breaker_threshold=1)
+    rng = np.random.default_rng(1)
+    plane = FaultPlane().fail("engine.infer", key="replica0")
+    with faults.injected(plane):
+        fut = fleet.submit(_q(rng))
+        _drain(fleet, [fut])
+        assert fut.result().attempts == 2
+        assert fleet.stats().breakers[0]["state"] == OPEN
+        # every subsequent request routes around the open breaker
+        futs = [fleet.submit(_q(rng)) for _ in range(6)]
+        _drain(fleet, futs)
+    assert all(f.result().attempts == 1 for f in futs)
+    assert fleet.stats().routed == (1, 7)
+    fleet.close()
+
+
+def test_all_replicas_open_sheds_typed_then_probes_recover():
+    clock = FakeClock()
+    fleet = _fleet(clock, breaker_threshold=1)
+    rng = np.random.default_rng(2)
+    plane = FaultPlane().fail("engine.infer")    # every replica
+    with faults.injected(plane):
+        fut = fleet.submit(_q(rng))              # primary + retry both die
+        _drain(fleet, [fut])
+        with pytest.raises(FaultInjected):
+            fut.result()
+        st = fleet.stats()
+        assert st.failed == 1
+        assert all(b["state"] == OPEN for b in st.breakers)
+        # reject-fast while every breaker is open: typed, with a back-off
+        # hint pointing at the soonest re-probe
+        shed = fleet.submit(_q(rng)).result()
+        assert isinstance(shed, ShedResponse)
+        assert shed.reason == "unhealthy" and shed.retry_after_ms > 0
+        assert fleet.stats().unhealthy_shed == 1
+        # backoff expires, the fault clears: the next submission rides as
+        # the breaker's recovery probe and closes it
+        plane.clear()
+        clock.advance_ms(300.0)
+        fut2 = fleet.submit(_q(rng))
+        _drain(fleet, [fut2])
+        assert isinstance(fut2.result(), Response)
+    assert fleet.stats().breakers[0]["state"] == CLOSED
+    fleet.close()
+
+
+def test_recovery_probe_is_hedged_to_a_healthy_replica():
+    clock = FakeClock()
+    fleet = _fleet(clock, breaker_threshold=1)
+    rng = np.random.default_rng(3)
+    plane = FaultPlane().fail("engine.infer", key="replica0")
+    with faults.injected(plane):
+        fut = fleet.submit(_q(rng))
+        _drain(fleet, [fut])
+        plane.clear()
+        clock.advance_ms(300.0)              # past the first-rung backoff
+        # replica0's breaker claims this request as its recovery probe;
+        # the fleet hedges it to replica1 so the caller never depends on
+        # the suspect replica alone
+        fut2 = fleet.submit(_q(rng))
+        _drain(fleet, [fut2])
+    r = fut2.result()
+    assert r.attempts == 2 and r.hedged
+    st = fleet.stats()
+    assert st.hedges == 1
+    assert st.breakers[0]["state"] == CLOSED     # probe succeeded
+    # replica0 is back in rotation: the next ties route to it again
+    fut3 = fleet.submit(_q(rng))
+    _drain(fleet, [fut3])
+    assert fleet.stats().routed[0] >= 2
+    fleet.close()
+
+
+def test_live_version_excludes_tripped_replica():
+    clock = FakeClock()
+    fleet = _fleet(clock, breaker_threshold=1, cache_mb=1.0)
+    rng = np.random.default_rng(4)
+    plane = FaultPlane().fail("engine.infer", key="replica0")
+    with faults.injected(plane):
+        fut = fleet.submit(_q(rng))
+        _drain(fleet, [fut])
+        assert 0 in fleet._unhealthy
+        # roll only the healthy replica forward: the dead one's stale v0
+        # must not pin the fleet-wide min the cache keys on
+        fleet.engines[1].swap_model(_model(seed=9), version=1)
+        assert fleet.live_version() == 1
+        # recovery brings the stale replica back — and the min becomes
+        # honest again (conservative: v0 is serving once more)
+        plane.clear()
+        clock.advance_ms(300.0)
+        fut2 = fleet.submit(_q(rng))
+        _drain(fleet, [fut2])
+    assert 0 not in fleet._unhealthy
+    assert fleet.live_version() == 0
+    fleet.close()
+
+
+# ------------------------------------------------------- routing hot path --
+
+
+def test_submit_costs_zero_route_state_hops_with_fresh_views():
+    """The cached-view regression at N=16: submits must not take one
+    engine-lock hop per replica per request (the pre-§14 router did)."""
+    clock = FakeClock()
+    fleet = _fleet(clock, n=16)
+    calls = {"n": 0}
+    for eng in fleet.engines:
+        orig = eng.route_state
+
+        def counted(orig=orig):
+            calls["n"] += 1
+            return orig()
+
+        eng.route_state = counted
+    rng = np.random.default_rng(5)
+    futs = [fleet.submit(_q(rng)) for _ in range(32)]
+    # O(1) lock acquisitions per submit: the fleet's own lock only — zero
+    # route_state (engine-lock) hops while the views are fresh
+    assert calls["n"] == 0
+    assert sum(fleet.stats().routed) == 32
+    _drain(fleet, futs)
+    # completions refreshed their replica's view (that's the design: truth
+    # re-enters through callbacks, not through the submit path)
+    assert calls["n"] > 0
+    fleet.close()
+
+
+def test_hot_swap_racing_open_to_half_open_transition():
+    """Interleaving regression: a snapshot hot-swap broadcast while a
+    breaker crosses open→half-open→closed must leave a coherent health map
+    and live version (scripted edge first, then a true-thread race)."""
+    clock = FakeClock()
+    fleet = _fleet(clock, breaker_threshold=1, cache_mb=1.0)
+    b0 = fleet.breakers[0]
+    b0.record_failure()
+    fleet._sync_health(0)
+    assert 0 in fleet._unhealthy
+    clock.advance_ms(300.0)                  # open→half-open edge pending
+    fleet.swap_model(_model(seed=9), version=1)
+    assert fleet.live_version() == 1         # probe not taken: still skipped
+    assert b0.allow()                        # the half-open probe
+    fleet._sync_health(0)
+    assert fleet.live_version() == 1         # half-open is still unhealthy
+    b0.record_success()
+    fleet._sync_health(0)
+    assert 0 not in fleet._unhealthy
+    assert fleet.live_version() == 1         # both replicas swapped: honest
+
+    # true-thread race, 20 rounds: swap broadcast vs probe+close
+    for round_no in range(2, 22):
+        b0.record_failure()
+        fleet._sync_health(0)
+        clock.advance_ms(500.0)
+        barrier = threading.Barrier(2)
+
+        def _swap(v=round_no):
+            barrier.wait()
+            fleet.swap_model(_model(seed=9), version=v)
+
+        def _recover():
+            barrier.wait()
+            b0.allow()
+            b0.record_success()
+            fleet._sync_health(0)
+
+        ts = [threading.Thread(target=_swap),
+              threading.Thread(target=_recover)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=10)
+        assert b0.snapshot()["state"] == CLOSED
+        assert 0 not in fleet._unhealthy
+        assert fleet.live_version() == round_no
+    fleet.close()
+
+
+# --------------------------------------------------- the acceptance storm --
+
+
+def _storm(seed):
+    """Fleet-of-4, Zipf load, replica1 dies mid-run, a torn-write snapshot
+    lands mid-rollout. Returns a summary tuple for determinism comparison."""
+    clock = FakeClock()
+    model0 = _model(seed=0)
+    rng = np.random.default_rng(seed)
+    # Zipf(1.0)-weighted pool: the head repeats (cache traffic), the tail
+    # is wide enough that the engines stay busy across replicas
+    pool = [_q(rng, int(n)) for n in rng.integers(2, 11, size=160)]
+    weights = 1.0 / np.arange(1, len(pool) + 1)
+    weights /= weights.sum()
+
+    with tempfile.TemporaryDirectory() as snap_dir:
+        snapshots.save_snapshot(snap_dir, 0, model0, {"epoch": 1})
+        engines = [TopicEngine(model0, buckets=(4, 8, 16), max_batch=4,
+                               n_iters=2, n_trials=1, top_n=3,
+                               clock=clock, start=False,
+                               name=f"replica{i}") for i in range(4)]
+        fleet = TopicFleet(engines=engines, clock=clock, cache_mb=1.0,
+                           shed=True, deadline_budget_ms=200.0,
+                           breaker_threshold=3, seed=seed)
+        ws = fleet.attach_watchers(snap_dir, start=False)
+        for w in ws:
+            assert w.poll() == 0
+        assert fleet.live_version() == 0
+
+        plane = FaultPlane(seed=seed)
+        # replica1's third inference batch onward fails — a replica dying
+        # mid-run and staying dead (until its breaker's backoff, which the
+        # frozen clock never reaches)
+        plane.fail("engine.infer", key="replica1", after=3)
+        responses, rejects, errors = [], [], []
+        with faults.injected(plane):
+            for group in range(10):
+                # 12-wide waves: queues build past one full batch and spill
+                # across replicas, so the sick one sees real traffic
+                futs = [fleet.submit(pool[rng.choice(len(pool), p=weights)],
+                                     deadline_ms=200.0) for _ in range(12)]
+                _drain(fleet, futs)
+                for f in futs:
+                    try:
+                        r = f.result()
+                    except OSError as exc:
+                        errors.append(exc)
+                        continue
+                    (rejects if isinstance(r, ShedResponse)
+                     else responses).append(r)
+                if group == 5:
+                    # torn-write publish: v1's payload is corrupt
+                    p = snapshots.save_snapshot(snap_dir, 1,
+                                                _model(seed=5), {"epoch": 2})
+                    _corrupt(os.path.join(p, io.PAYLOAD))
+                    for w in ws:
+                        w.poll()
+                    # quarantined exactly once, fleet stays on last-good v0
+                    assert fleet.live_version() == 0
+                if group == 7:
+                    snapshots.save_snapshot(snap_dir, 2, _model(seed=6),
+                                            {"epoch": 3})
+                    for w in ws:
+                        w.poll()
+
+        st = fleet.stats()
+        total = len(responses) + len(rejects) + len(errors)
+        assert total == 120, "zero hangs: every submission resolved"
+        # >= 75% of healthy-fleet throughput (hedged retries rescue the
+        # requests that landed on the dying replica)
+        assert len(responses) >= 0.75 * 120
+        assert errors == [], "no request may surface a raw failure"
+        # every completed response carries a live version — and never the
+        # corrupt v1, which was quarantined before it could serve
+        assert all(r.model_version in (0, 2) for r in responses)
+        assert all(isinstance(r, ShedResponse) for r in rejects)
+        assert any(r.attempts == 2 for r in responses), "retries happened"
+        # the sick replica tripped and was routed around
+        assert st.breakers[1]["trips"] >= 1
+        # the corrupt publish was retired on disk, once, fleet-wide
+        assert sum(w.quarantined for w in ws) == 1
+        assert snapshots.snapshot_versions(snap_dir) == [0, 2]
+        assert os.path.isdir(
+            snapshots.snapshot_path(snap_dir, 1) + ".corrupt")
+        # ...and the fleet converged on the next good publish
+        assert all(eng.model_version == 2 for eng in fleet.engines)
+        assert fleet.live_version() == 2
+        summary = (len(responses), len(rejects), st.retries, st.hedges,
+                   st.failed, tuple(st.routed), st.breakers[1]["trips"],
+                   tuple(sorted({r.model_version for r in responses})))
+        fleet.close()
+        return summary
+
+
+def test_chaos_storm_sustains_service_and_is_deterministic():
+    assert _storm(7) == _storm(7), "same seed must take the identical path"

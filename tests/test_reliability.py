@@ -1,0 +1,502 @@
+"""Fault plane + integrity + breaker unit tests (DESIGN.md §14).
+
+The chaos *lane* (-m chaos) splits into two files: this one proves each
+reliability mechanism in isolation — the deterministic fault plane, the
+circuit-breaker state machine, SHA-256 snapshot/segment/checkpoint
+integrity with quarantine-and-fall-back — while ``test_chaos.py`` composes
+them into the fleet-under-fire acceptance scenario. Everything runs on
+injectable clocks/sleeps so no test spends real wall time on a schedule.
+"""
+import os
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import concurrency as cc
+from repro.analysis import report
+from repro.checkpoint import io, snapshots
+from repro.checkpoint.manager import CheckpointManager
+from repro.reliability import faults
+from repro.reliability.faults import FaultInjected, FaultPlane
+from repro.serving.health import (CLOSED, HALF_OPEN, OPEN, CircuitBreaker)
+from repro.serving.watcher import SnapshotWatcher
+
+pytestmark = pytest.mark.chaos
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+class _EngineStub:
+    """Just enough engine for a SnapshotWatcher: records swaps."""
+
+    def __init__(self):
+        self.model_version = None
+        self.swaps = []
+
+    def swap_model(self, model, version=None):
+        self.model_version = version
+        self.swaps.append(version)
+
+
+def _model(seed=0, K=6, V=40):
+    import jax.numpy as jnp
+
+    from repro.core import rtlda
+
+    rng = np.random.default_rng(seed)
+    phi = jnp.asarray(rng.integers(0, 20, (V, K)).astype(np.int32))
+    return rtlda.build_model(phi, jnp.float32(0.01),
+                             jnp.full((K,), 0.5, jnp.float32))
+
+
+def _corrupt(path):
+    """Flip a few payload bytes in place (torn write / bit rot)."""
+    with open(path, "r+b") as f:
+        f.seek(os.path.getsize(path) // 2)
+        block = f.read(8)
+        f.seek(-len(block), os.SEEK_CUR)
+        f.write(bytes(b ^ 0xFF for b in block))
+
+
+# ------------------------------------------------------------- fault plane --
+
+
+def test_fault_plane_fail_nth_and_after():
+    plane = FaultPlane(seed=0)
+    plane.fail("engine.infer", nth=3)
+    outcomes = []
+    for _ in range(5):
+        try:
+            plane.hit("engine.infer")
+            outcomes.append(True)
+        except FaultInjected as exc:
+            outcomes.append(False)
+            assert exc.seam == "engine.infer" and exc.hit_index == 3
+    assert outcomes == [True, True, False, True, True]
+    assert plane.hits("engine.infer") == 5
+    assert plane.injected("engine.infer") == 1
+
+    plane2 = FaultPlane()
+    plane2.fail("disk.segment_read", key="2", after=3)
+    for i in range(1, 7):
+        try:
+            plane2.hit("disk.segment_read", key="2")
+            assert i < 3
+        except FaultInjected:
+            assert i >= 3
+    # a different key never matches the keyed rule
+    plane2.hit("disk.segment_read", key="0")
+    assert plane2.injected("disk.segment_read", key="0") == 0
+
+
+def test_fault_plane_unconditional_arm_fires_every_hit():
+    plane = FaultPlane().fail("watcher.poll")
+    for _ in range(3):
+        with pytest.raises(FaultInjected):
+            plane.hit("watcher.poll")
+    assert plane.injected("watcher.poll") == 3
+
+
+def test_fault_plane_unknown_seam_is_a_programming_error():
+    plane = FaultPlane()
+    with pytest.raises(ValueError):
+        plane.fail("engine.inferr")
+    with pytest.raises(ValueError):
+        plane.hit("no.such.seam")
+
+
+def test_fault_plane_rate_is_deterministic_by_seed():
+    def pattern(seed):
+        plane = FaultPlane(seed=seed)
+        plane.fail("snapshot.load", rate=0.3)
+        out = []
+        for _ in range(200):
+            try:
+                plane.hit("snapshot.load", key="7")
+                out.append(0)
+            except FaultInjected:
+                out.append(1)
+        return out
+
+    a, b = pattern(11), pattern(11)
+    assert a == b, "same seed must make identical per-hit decisions"
+    assert pattern(12) != a, "different seed must decorrelate"
+    assert 30 <= sum(a) <= 90        # loose band around rate·N = 60
+
+
+def test_fault_plane_slow_uses_injectable_sleep():
+    sleeps = []
+    plane = FaultPlane(sleep=sleeps.append)
+    plane.slow("replica.slow", 250.0, nth=2)
+    plane.hit("replica.slow")
+    plane.hit("replica.slow")        # nth=2: sleeps, does not raise
+    plane.hit("replica.slow")
+    assert sleeps == [0.25]
+    assert plane.injected("replica.slow") == 1
+
+
+def test_fault_plane_wedge_is_deadline_bounded():
+    clock = FakeClock()
+    plane = FaultPlane(clock=clock,
+                       sleep=lambda s: clock.advance_ms(s * 1e3))
+    plane.wedge("replica.wedge", timeout_s=2.0)
+    t0 = clock()
+    with pytest.raises(FaultInjected):
+        plane.hit("replica.wedge")
+    assert clock() - t0 >= 2.0       # blocked the full (fake) deadline
+
+
+def test_fault_plane_wedge_release_unblocks():
+    plane = FaultPlane()
+    plane.wedge("replica.wedge", timeout_s=30.0)
+    raised = threading.Event()
+
+    def _worker():
+        try:
+            plane.hit("replica.wedge")
+        except FaultInjected:
+            raised.set()
+
+    t = threading.Thread(target=_worker, daemon=True)
+    t.start()
+    plane.release()
+    t.join(timeout=5)
+    assert raised.is_set(), "released wedge must raise, not hang"
+
+
+def test_injected_context_manager_installs_and_always_uninstalls():
+    assert faults.get_plane() is None
+    faults.hit("engine.infer")       # disabled: a no-op, never raises
+    plane = FaultPlane().fail("engine.infer")
+    with pytest.raises(FaultInjected):
+        with faults.injected(plane):
+            assert faults.get_plane() is plane
+            faults.hit("engine.infer")
+    assert faults.get_plane() is None, "uninstalled even on raise"
+    faults.hit("engine.infer")       # back to a no-op
+
+
+# -------------------------------------------------------- circuit breaker --
+
+
+def _breaker(clock, **kw):
+    kw.setdefault("failure_threshold", 3)
+    kw.setdefault("backoff_ms", 200.0)
+    kw.setdefault("probe_timeout_ms", 1000.0)
+    return CircuitBreaker(clock=clock, **kw)
+
+
+def test_breaker_trips_on_consecutive_failures_only():
+    clock = FakeClock()
+    b = _breaker(clock)
+    b.record_failure()
+    b.record_failure()
+    b.record_success()               # resets the consecutive counter
+    b.record_failure()
+    b.record_failure()
+    assert b.state() == CLOSED and b.allow()
+    b.record_failure()               # third consecutive: trip
+    assert b.state() == OPEN and not b.allow()
+    assert b.snapshot()["trips"] == 1
+
+
+def test_breaker_backoff_is_deterministic_and_jittered_by_seed():
+    def reopen(seed):
+        clock = FakeClock()
+        b = _breaker(clock, seed=seed)
+        for _ in range(3):
+            b.record_failure()
+        return b.snapshot()["reopen_at"]
+
+    assert reopen(5) == reopen(5)
+    assert reopen(5) != reopen(6), "jitter must decorrelate by seed"
+    # jitter in [0, 20%) on top of the 200 ms base rung
+    assert 0.200 <= reopen(5) < 0.240
+
+
+def test_breaker_half_open_admits_exactly_one_probe():
+    clock = FakeClock()
+    b = _breaker(clock)
+    for _ in range(3):
+        b.record_failure()
+    assert not b.allow()
+    clock.advance_ms(300.0)          # past the first-rung backoff (≤240 ms)
+    assert b.state() == HALF_OPEN
+    assert b.allow()                 # the one probe
+    assert not b.allow()             # second concurrent request: blocked
+    clock.advance_ms(1000.0)         # probe outcome never arrived: timeout
+    assert b.allow(), "timed-out probe must re-admit another"
+    assert b.snapshot()["probes"] == 2
+
+
+def test_breaker_probe_outcome_walks_the_ladder():
+    clock = FakeClock()
+    b = _breaker(clock, jitter=0.0)
+    for _ in range(3):
+        b.record_failure()
+    d1 = b.snapshot()["reopen_at"] - clock()
+    clock.advance_ms(d1 * 1e3 + 1.0)
+    assert b.allow()
+    b.record_failure()               # probe failed: next rung
+    d2 = b.snapshot()["reopen_at"] - clock()
+    assert d2 == pytest.approx(2 * d1), "backoff must double per trip"
+    clock.advance_ms(d2 * 1e3 + 1.0)
+    assert b.allow()
+    b.record_success()               # probe succeeded: close + reset ladder
+    snap = b.snapshot()
+    assert snap["state"] == CLOSED and snap["trips"] == 0
+    for _ in range(3):
+        b.record_failure()
+    d3 = b.snapshot()["reopen_at"] - clock()
+    assert d3 == pytest.approx(d1), "a recovery must reset the rung"
+
+
+def test_breaker_classifies_blowouts_not_ordinary_misses():
+    clock = FakeClock()
+    b = _breaker(clock, failure_threshold=1, blowout_factor=3.0)
+    b.record_response(120.0, 50.0)   # a miss, but under 3×: congestion
+    assert b.state() == CLOSED
+    b.record_response(400.0, None)   # no deadline: never a blowout
+    assert b.state() == CLOSED
+    b.record_response(151.0, 50.0)   # > 3×50: the replica is sick
+    assert b.state() == OPEN
+
+
+# ------------------------------------------------- snapshot/ckpt integrity --
+
+
+def test_io_records_and_verifies_payload_sha256(tmp_path):
+    path = str(tmp_path / "ckpt")
+    tree = {"a": np.arange(12, dtype=np.int32)}
+    io.save(path, tree, {"step": 1})
+    import json
+    with open(os.path.join(path, io.MANIFEST)) as f:
+        manifest = json.load(f)
+    assert io.PAYLOAD in manifest["sha256"]
+    io.verify(path)                  # clean: no raise
+    loaded, meta = io.load(path, {"a": 0})
+    np.testing.assert_array_equal(loaded["a"], tree["a"])
+    _corrupt(os.path.join(path, io.PAYLOAD))
+    with pytest.raises(io.IntegrityError) as ei:
+        io.load(path, {"a": 0})
+    assert ei.value.path.endswith(io.PAYLOAD)
+
+
+def test_corrupt_snapshot_raises_typed_and_quarantine_hides_it(tmp_path):
+    d = str(tmp_path)
+    snapshots.save_snapshot(d, 3, _model(), {"epoch": 1})
+    _corrupt(os.path.join(snapshots.snapshot_path(d, 3), io.PAYLOAD))
+    with pytest.raises(io.IntegrityError) as ei:
+        snapshots.load_snapshot(d, 3)
+    assert ei.value.version == 3     # attributed to the snapshot version
+    dst = snapshots.quarantine_snapshot(d, 3)
+    assert dst is not None and dst.endswith(".corrupt")
+    assert os.path.isdir(dst), "bytes stay on disk for forensics"
+    assert snapshots.snapshot_versions(d) == []   # invisible to readers
+    assert snapshots.quarantine_snapshot(d, 3) is None  # idempotent / raced
+
+
+def test_delta_chain_attributes_corruption_to_the_bad_link(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.core import rtlda
+
+    d = str(tmp_path)
+    m0 = _model(seed=0)
+    snapshots.save_snapshot(d, 0, m0)
+    pvk1 = np.array(m0.pvk)
+    pvk1[[1, 4]] += 1
+    m1 = rtlda.RTLDAModel(pvk=jnp.asarray(pvk1), alpha=m0.alpha,
+                          r_topic=m0.r_topic, r_value=m0.r_value)
+    snapshots.save_delta_snapshot(d, 1, m1, 0, m0.pvk)
+    # corrupt the BASE: loading the delta must blame v0, not v1 — the
+    # watcher then quarantines the truly-bad version, not the delta on top
+    _corrupt(os.path.join(snapshots.snapshot_path(d, 0), io.PAYLOAD))
+    with pytest.raises(io.IntegrityError) as ei:
+        snapshots.load_snapshot(d, 1)
+    assert ei.value.version == 0
+
+
+def test_watcher_quarantines_corrupt_publish_and_falls_back(tmp_path):
+    d = str(tmp_path)
+    snapshots.save_snapshot(d, 0, _model(seed=0))
+    snapshots.save_snapshot(d, 1, _model(seed=1))
+    _corrupt(os.path.join(snapshots.snapshot_path(d, 1), io.PAYLOAD))
+    eng = _EngineStub()
+    w = SnapshotWatcher(d, eng, poll_s=0.01)
+    # newest-first: v1 is corrupt → quarantined; the walk falls back to v0
+    # IN THE SAME TICK — one bad publish costs staleness, not availability
+    assert w.poll() == 0
+    assert eng.model_version == 0
+    assert w.quarantined == 1
+    assert snapshots.snapshot_versions(d) == [0]
+    assert os.path.isdir(snapshots.snapshot_path(d, 1) + ".corrupt")
+    # the next good publish converges normally
+    snapshots.save_snapshot(d, 2, _model(seed=2))
+    assert w.poll() == 2 and eng.model_version == 2
+    assert w.poll_failures == 0 and w.quarantined == 1
+
+
+def test_watcher_transient_failures_drive_exponential_backoff(tmp_path):
+    d = str(tmp_path)
+    snapshots.save_snapshot(d, 0, _model())
+    eng = _EngineStub()
+    w = SnapshotWatcher(d, eng, poll_s=0.5, max_backoff_s=4.0)
+    assert w.backoff_s() == 0.5
+    plane = FaultPlane().fail("watcher.poll")
+    with faults.injected(plane):
+        for expect in (1.0, 2.0, 4.0, 4.0):    # doubles, then caps
+            assert w.poll() is None
+            assert w.backoff_s() == expect
+        assert w.poll_failures == 4
+        assert isinstance(w.last_error, FaultInjected)
+    # the dir heals: one good poll resets the streak and the cadence
+    assert w.poll() == 0
+    assert w.poll_failures == 0 and w.backoff_s() == 0.5
+
+
+# ----------------------------------------------------- disk segment reads --
+
+
+def _segment_dir(tmp_path):
+    from repro.data import InMemorySource, save_segments
+    from repro.data import synthetic
+
+    c, _ = synthetic.lda_corpus(seed=1, n_docs=60, n_topics=4,
+                                vocab_size=50, doc_len_mean=7)
+    src = InMemorySource(c, 2, 2, 2, 4, seed=3)
+    d = str(tmp_path / "segs")
+    save_segments(src, d)
+    return d
+
+
+def test_disk_source_verifies_segments_once_and_catches_rot(tmp_path):
+    from repro.data import DiskSource
+
+    d = _segment_dir(tmp_path)
+    src = DiskSource(d)
+    src.segment(0)                   # verifies on first touch
+    src.segment(0)                   # memoized: no re-hash
+    assert 0 in src._verified
+    _corrupt(os.path.join(d, "segment_00001", "word_local.npy"))
+    with pytest.raises(io.IntegrityError) as ei:
+        src.segment(1)
+    assert "word_local" in ei.value.path
+    # corruption is permanent — never burned retries re-reading rot
+    plane = FaultPlane()
+    with faults.injected(plane):
+        with pytest.raises(io.IntegrityError):
+            src.segment(1)
+        assert plane.hits("disk.segment_read", key="1") == 1
+    # opting out reads the (corrupt) bytes without the check
+    raw = DiskSource(d, verify=False)
+    raw.segment(1)
+
+
+def test_disk_source_retries_transient_errors_then_surfaces(tmp_path):
+    from repro.data import DiskSource
+
+    d = _segment_dir(tmp_path)
+    src = DiskSource(d, retries=2)
+    plane = FaultPlane().fail("disk.segment_read", key="0", nth=1)
+    with faults.injected(plane):
+        sc = src.segment(0)          # first read fails, retry succeeds
+        assert sc.n_real_tokens > 0
+        assert plane.hits("disk.segment_read", key="0") == 2
+    plane2 = FaultPlane().fail("disk.segment_read", key="1")
+    with faults.injected(plane2):
+        with pytest.raises(FaultInjected):
+            src.segment(1)           # persistent: surfaces after retries
+        assert plane2.hits("disk.segment_read", key="1") == 3
+
+
+def test_checkpoint_manager_falls_back_to_last_good(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ckpts"), keep=5)
+    like = {"w": 0}
+    mgr.save(1, {"w": np.full(4, 1.0)})
+    mgr.save(2, {"w": np.full(4, 2.0)})
+    _corrupt(os.path.join(mgr.step_dir(2), io.PAYLOAD))
+    tree, meta = mgr.restore_latest(like)
+    assert meta["step"] == 1, "corrupt newest must fall back, not fail"
+    np.testing.assert_array_equal(tree["w"], np.full(4, 1.0))
+    assert mgr.steps() == [1]        # step 2 quarantined out of the listing
+    assert os.path.isdir(mgr.step_dir(2) + ".corrupt")
+
+
+# ------------------------------------- §12 contract over the new modules --
+
+
+HEALTH_PY = os.path.join(REPO, "src", "repro", "serving", "health.py")
+FAULTS_PY = os.path.join(REPO, "src", "repro", "reliability", "faults.py")
+
+
+@pytest.mark.concurrency
+def test_analyzer_accepts_then_catches_mutated_health():
+    with open(HEALTH_PY) as f:
+        src = f.read()
+    clean = [f for f in cc.analyze_source(src, "health.py")
+             if f.severity == report.ERROR]
+    assert clean == [], [f.message for f in clean]
+    mutated = src.replace(
+        "    def state(self) -> str:",
+        "    def _racy(self) -> None:\n"
+        "        self._failures += 1\n\n"
+        "    def state(self) -> str:")
+    errs = [f for f in cc.analyze_source(mutated, "health.py")
+            if f.severity == report.ERROR]
+    assert errs and any("_failures" in f.message for f in errs)
+
+
+@pytest.mark.concurrency
+def test_analyzer_accepts_then_catches_mutated_faults():
+    with open(FAULTS_PY) as f:
+        src = f.read()
+    clean = [f for f in cc.analyze_source(src, "faults.py")
+             if f.severity == report.ERROR]
+    assert clean == [], [f.message for f in clean]
+    mutated = src.replace(
+        "    def release(self) -> None:",
+        "    def _racy(self) -> None:\n"
+        "        self._released = True\n\n"
+        "    def release(self) -> None:")
+    errs = [f for f in cc.analyze_source(mutated, "faults.py")
+            if f.severity == report.ERROR]
+    assert errs and any("_released" in f.message for f in errs)
+
+
+@pytest.mark.concurrency
+def test_repolint_thread_contract_catches_stripped_guarded_by(tmp_path):
+    from repro.analysis import repolint
+
+    srcdir = tmp_path / "src"
+    srcdir.mkdir()
+    bare = textwrap.dedent("""
+        import threading
+
+        class Watcher:
+            def start(self):
+                self._thread = threading.Thread(target=self._run)
+    """)
+    (srcdir / "w.py").write_text(bare)
+    errs = [f for f in repolint.check_thread_conventions(str(tmp_path))
+            if f.severity == "error"]
+    assert errs, "a thread-creating class without _GUARDED_BY must fail"
+    (srcdir / "w.py").write_text(bare.replace(
+        "class Watcher:",
+        "class Watcher:\n    _GUARDED_BY = {\"_thread\": \"_lock\"}"))
+    errs = [f for f in repolint.check_thread_conventions(str(tmp_path))
+            if f.severity == "error"]
+    assert errs == [], [f.message for f in errs]
